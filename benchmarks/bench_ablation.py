@@ -1,0 +1,27 @@
+"""Fig 14: ablation ladder — baseline -> +bundle -> +cache -> +pipeline
+-> +xpu (hybrid). Paper: 0.4 -> 1.1 -> 4.18 -> 9.60 -> 11.07 tok/s."""
+from benchmarks.common import emit, engine_setup, paper_timing
+from repro.core.baselines import ABLATION_LADDER
+from repro.serving.engine import ServeEngine
+
+
+def main():
+    cfg, model, params, plan, prompt = engine_setup(
+        "smollm-135m", activation="relu2", mode="relu")
+    rows = []
+    prev = None
+    for spec in ABLATION_LADDER:
+        eng = ServeEngine(cfg, params, plan, spec=spec, offload_ratio=0.5,
+                          timing=paper_timing())
+        res = eng.generate(prompt[:1], max_new=16, temperature=0.8)
+        gain = "" if prev is None else f"{res.tokens_per_s/prev:.2f}x step"
+        rows.append((f"fig14_{spec.name.replace('+','plus_')}",
+                     round(res.tokens_per_s, 2),
+                     f"modeled tok/s {gain}"))
+        prev = res.tokens_per_s
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Table 5 / Fig 11: token-latency distribution (mean/P50/P90/P99).
+
+Cache-miss variance between consecutive tokens drives the tail (the
+paper: P99 40.9% above mean, P99 miss rate 18.9% vs 3.5% average)."""
+import numpy as np
+
+from benchmarks.common import emit, engine_setup, paper_timing
+from repro.core.baselines import POWERINFER2
+from repro.serving.engine import ServeEngine
+
+
+def main():
+    cfg, model, params, plan, prompt = engine_setup(
+        "smollm-135m", activation="relu2", mode="relu")
+    eng = ServeEngine(cfg, params, plan, spec=POWERINFER2,
+                      offload_ratio=0.5, timing=paper_timing())
+    res = eng.generate(prompt[:1], max_new=64, temperature=0.8)
+    # steady state: drop cold-start warmup tokens (the paper measures
+    # 1,024-token generations)
+    import dataclasses as _dc
+    steady = _dc.replace(res, stats=res.stats[8:])
+    pct = steady.latency_percentiles()
+    hits = [s.cache_hit_rate for s in steady.stats]
+    rows = [
+        ("table5_mean_ms", round(pct["mean"] * 1e3, 3), "modeled"),
+        ("table5_p50_ms", round(pct["p50"] * 1e3, 3), "modeled"),
+        ("table5_p90_ms", round(pct["p90"] * 1e3, 3), "modeled"),
+        ("table5_p99_ms", round(pct["p99"] * 1e3, 3),
+         f"paper: p99 40.9% over mean; here "
+         f"{(pct['p99']/max(pct['mean'],1e-12)-1)*100:.0f}%"),
+        ("table5_avg_hit_rate", round(float(np.mean(hits)), 3),
+         "paper: 96.5% avg (3.5% miss)"),
+        ("table5_p99_miss_rate",
+         round(float(np.percentile([1 - h for h in hits], 99)), 3),
+         "paper: 18.9% P99 miss"),
+    ]
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

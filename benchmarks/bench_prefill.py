@@ -1,0 +1,54 @@
+"""Fig 8: prefill speed — NPU-centric with sequential-I/O prefetch
+(PowerInfer-2) vs QNN-analogue (NPU, no I/O overlap) vs llama.cpp
+(CPU engine).
+
+Analytic over the paper's own Bamboo-7B-size config: per-layer compute
+time from FLOPs/engine rate; per-layer weight-streaming time from the
+StorageModel at sequential bandwidth; PowerInfer-2 overlaps the next
+layer's load with the current layer's compute (Fig 9)."""
+from benchmarks.common import emit
+from repro.configs.paper_models import BAMBOO_7B
+from repro.core.io_model import UFS40
+from repro.core.planner import HardwareProfile
+
+
+def prefill_tok_s(cfg, prompt_len, engine_flops, overlap, offload=0.5,
+                  storage=UFS40):
+    L = cfg.num_layers
+    R = 3
+    ffn_flops = 2 * R * cfg.d_model * cfg.d_ff
+    attn_flops = 4 * cfg.d_model * (cfg.num_heads + 2 * cfg.num_kv_heads) \
+        * cfg.d_head + 4 * cfg.num_heads * cfg.d_head * prompt_len
+    t_comp_layer = prompt_len * (ffn_flops + attn_flops) / engine_flops
+    layer_bytes = (ffn_flops / 2) * offload * 0.5   # int4: 0.5 B/param
+    t_io_layer = storage.read_time(int(layer_bytes), 524288, random=False)
+    if overlap:
+        t_layer = max(t_comp_layer, t_io_layer)     # Fig 9: fully hidden
+    else:
+        t_layer = t_comp_layer + t_io_layer
+    return prompt_len / (L * t_layer)
+
+
+def main():
+    hw = HardwareProfile()
+    rows = []
+    for P in (128, 512):
+        pi2 = prefill_tok_s(BAMBOO_7B, P, hw.dense_engine_flops, True)
+        qnn = prefill_tok_s(BAMBOO_7B, P, hw.dense_engine_flops, False)
+        lcpp = prefill_tok_s(BAMBOO_7B, P, hw.sparse_engine_flops, False)
+        rows.append((f"fig8_prefill{P}_powerinfer2", round(pi2, 1),
+                     "tok/s, NPU+overlapped seq I/O"))
+        rows.append((f"fig8_prefill{P}_qnn", round(qnn, 1),
+                     "tok/s, NPU, no overlap"))
+        rows.append((f"fig8_prefill{P}_llamacpp", round(lcpp, 1),
+                     "tok/s, CPU engine"))
+        rows.append((f"fig8_prefill{P}_speedup_vs_qnn",
+                     round(pi2 / qnn, 2), "paper: 1.99x at 512"))
+        rows.append((f"fig8_prefill{P}_speedup_vs_llamacpp",
+                     round(pi2 / lcpp, 2), "paper: ~44x at 512"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

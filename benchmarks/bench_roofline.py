@@ -1,0 +1,36 @@
+"""Deliverable (g) surface: roofline terms per (arch × shape) from the
+dry-run artifacts, plus the Table 8 energy proxy (J/token from the
+bound time × chip power)."""
+import os
+
+from benchmarks.common import emit
+from repro.launch.roofline import load_table
+
+CHIP_W = 170.0   # v5e ~ per-chip board power (proxy for Table 8)
+
+
+def main():
+    art = os.environ.get("DRYRUN_ARTIFACTS", "artifacts/dryrun")
+    rows_out = []
+    rows = load_table(art, "16x16")
+    if not rows:
+        rows_out.append(("roofline_rows", 0,
+                         "run launch/dryrun first (artifacts missing)"))
+        emit(rows_out)
+        return rows_out
+    for r in rows:
+        rows_out.append((f"roofline_{r['arch']}_{r['shape']}",
+                         r["bound_time_s"],
+                         f"bound={r['dominant']} useful={r['useful_ratio']}"))
+    decode = [r for r in rows if r["shape"] == "decode_32k"]
+    for r in decode:
+        tokens = 128.0
+        j_tok = r["bound_time_s"] * 256 * CHIP_W / tokens
+        rows_out.append((f"table8_energy_proxy_{r['arch']}",
+                         round(j_tok, 4), "J/token (roofline x 170W/chip)"))
+    emit(rows_out)
+    return rows_out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""Shared benchmark helpers.
+
+Engine benches run the REAL reduced model (jit) with the storage plane
+driven by true activation traces; analytic benches use the full-size
+configs with the HardwareProfile/StorageModel cost model only (no
+allocation). Both are deterministic.
+"""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.planner import build_plan, permute_ffn_params
+from repro.models.dense import make_model
+
+
+@functools.lru_cache(maxsize=4)
+def engine_setup(arch: str = "smollm-135m", activation: str = None,
+                 mode: str = None, seed: int = 0, train_steps: int = 40):
+    """Reduced model, briefly trained (real activation skew), profiled,
+    planned for the PHONE hardware profile, hot-first permuted. Cached."""
+    import dataclasses
+    from repro.core.planner import PHONE, profile_activations
+    cfg = get_config(arch).reduced()
+    if activation:
+        cfg = cfg.replace(activation=activation)
+    if mode:
+        cfg = cfg.replace(sparse_ffn=dataclasses.replace(cfg.sparse_ffn,
+                                                         mode=mode))
+    model = make_model(cfg)
+    params = model.init(jax.random.key(seed))
+    if train_steps:
+        params, _ = _train_with_cfg(cfg, params, train_steps, seed)
+    batches = [jax.random.randint(jax.random.key(seed * 13 + i), (4, 64), 0,
+                                  cfg.vocab_size) for i in range(4)]
+    from repro.core.planner import calibrate_predictor
+    params = calibrate_predictor(params, cfg, batches)
+    counts, n_tok = profile_activations(params, cfg, batches)
+    plan = build_plan(cfg, (counts / n_tok).astype(np.float32), hw=PHONE)
+    # Operating-point calibration: a briefly-trained reduced model is
+    # far denser (~70% active) than the paper's trained 7Bs (~15%).
+    # The plan budgets are the offline planner's choice — pin them to
+    # the paper's regime; cluster *selection* stays real (calibrated
+    # predictor on real hidden states).
+    from repro.core.clusters import make_plan, scale_plan_for_batch
+    base = make_plan(cfg.d_ff, 0.125, 0.10, cfg.sparse_ffn.cluster_size)
+    plan.plans = {b: scale_plan_for_batch(base, cfg.d_ff, b,
+                                          cfg.sparse_ffn.cluster_size)
+                  for b in (1, 2, 4, 8, 16, 32)}
+    params = permute_ffn_params(params, plan.neuron_order)
+    prompt = np.random.default_rng(seed).integers(
+        0, cfg.vocab_size, (4, 16)).astype(np.int32)
+    return cfg, model, params, plan, prompt
+
+
+def _train_with_cfg(cfg, params, steps, seed):
+    import jax as _jax
+    from repro.data.pipeline import DataConfig, SyntheticTokens
+    from repro.models.model import build_model
+    from repro.optim.adamw import AdamW
+    from repro.train.steps import make_train_step
+    model = build_model(cfg)
+    opt = AdamW(lr=2e-3)
+    step = _jax.jit(make_train_step(model, opt), donate_argnums=(0, 1))
+    state = opt.init(params)
+    data = SyntheticTokens(DataConfig(cfg.vocab_size, 64, 4, seed=seed))
+    losses = []
+    for _ in range(steps):
+        params, state, m = step(params, state, data.batch())
+        losses.append(float(m["loss"]))
+    return params, losses
+
+
+def paper_timing():
+    """Storage-plane cost constants at the paper's deployment size
+    (Bamboo-7B FP16: 24KB Gate-Up-Down bundles, 32 layers)."""
+    from repro.configs.paper_models import BAMBOO_7B
+    from repro.serving.engine import TimingProfile
+    return TimingProfile.from_config(BAMBOO_7B, 3)
+
+
+def timeit(fn, *args, n=10, warmup=2):
+    for _ in range(warmup):
+        fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn(*args)
+    return (time.perf_counter() - t0) / n
+
+
+def emit(rows):
+    """Print the harness CSV: name,us_per_call,derived."""
+    for name, us, derived in rows:
+        print(f"{name},{us},{derived}")

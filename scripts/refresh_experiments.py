@@ -1,0 +1,13 @@
+"""Insert the current roofline table into EXPERIMENTS.md (idempotent)."""
+import sys
+sys.path.insert(0, "src")
+from repro.launch.roofline import load_table, format_table
+
+rows = load_table("artifacts/dryrun", "16x16")
+table = format_table(rows)
+marker = "<!-- ROOFLINE_TABLE -->"
+text = open("EXPERIMENTS.md").read()
+head = text.split(marker)[0]
+open("EXPERIMENTS.md", "w").write(
+    head + marker + "\n\n```\n" + table + "\n```\n")
+print(f"inserted {len(rows)} rows")

@@ -1,0 +1,60 @@
+"""Sharded checkpointing without orbax: one .npy per leaf + manifest.
+
+Leaves are addressed by their pytree path; restore rebuilds the exact
+tree. Device arrays are pulled to host; on restore, arrays are placed
+with the provided sharding fn (or left on the default device).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+
+import jax
+import numpy as np
+
+
+def _leaf_name(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    name = "__".join(parts)
+    return re.sub(r"[^A-Za-z0-9_.-]", "_", name)
+
+
+def save_checkpoint(path: str, tree, step: int = 0):
+    os.makedirs(path, exist_ok=True)
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    manifest = {"step": step, "leaves": []}
+    for p, leaf in leaves:
+        name = _leaf_name(p)
+        arr = np.asarray(jax.device_get(leaf))
+        np.save(os.path.join(path, name + ".npy"), arr)
+        manifest["leaves"].append({"name": name,
+                                   "dtype": str(arr.dtype),
+                                   "shape": list(arr.shape)})
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+
+
+def restore_checkpoint(path: str, like_tree, device_put_fn=None):
+    """Restore into the structure of `like_tree` (shapes must match)."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like_tree)
+    by_name = {m["name"]: m for m in manifest["leaves"]}
+    out = []
+    for p, like in paths:
+        name = _leaf_name(p)
+        if name not in by_name:
+            raise KeyError(f"checkpoint missing leaf {name!r}")
+        arr = np.load(os.path.join(path, name + ".npy"))
+        if list(arr.shape) != list(like.shape):
+            raise ValueError(f"{name}: shape {arr.shape} != {like.shape}")
+        out.append(device_put_fn(arr) if device_put_fn else jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out), manifest["step"]

@@ -1,0 +1,42 @@
+"""Config registry: get_config('<arch-id>') for every assigned architecture
+(plus the paper's own models) and the four assigned input shapes."""
+from repro.configs.base import ModelConfig, SparseFFNConfig, InputShape, INPUT_SHAPES
+
+from repro.configs.nemotron_4_15b import CONFIG as _nemotron
+from repro.configs.llama3_405b import CONFIG as _llama3
+from repro.configs.recurrentgemma_9b import CONFIG as _rgemma
+from repro.configs.seamless_m4t_large_v2 import CONFIG as _seamless
+from repro.configs.grok_1_314b import CONFIG as _grok
+from repro.configs.smollm_135m import CONFIG as _smollm
+from repro.configs.mamba2_130m import CONFIG as _mamba2
+from repro.configs.qwen2_vl_2b import CONFIG as _qwen2vl
+from repro.configs.qwen3_14b import CONFIG as _qwen3
+from repro.configs.deepseek_moe_16b import CONFIG as _dsmoe
+from repro.configs.paper_models import (
+    BAMBOO_7B, MISTRAL_7B, TURBOSPARSE_MIXTRAL_47B)
+
+ASSIGNED_ARCHS = (
+    "nemotron-4-15b", "llama3-405b", "recurrentgemma-9b",
+    "seamless-m4t-large-v2", "grok-1-314b", "smollm-135m",
+    "mamba2-130m", "qwen2-vl-2b", "qwen3-14b", "deepseek-moe-16b",
+)
+
+_REGISTRY = {c.name: c for c in (
+    _nemotron, _llama3, _rgemma, _seamless, _grok, _smollm,
+    _mamba2, _qwen2vl, _qwen3, _dsmoe,
+    BAMBOO_7B, MISTRAL_7B, TURBOSPARSE_MIXTRAL_47B,
+)}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_archs():
+    return sorted(_REGISTRY)
+
+
+__all__ = ["ModelConfig", "SparseFFNConfig", "InputShape", "INPUT_SHAPES",
+           "ASSIGNED_ARCHS", "get_config", "list_archs"]

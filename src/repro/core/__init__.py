@@ -1,0 +1,27 @@
+"""PowerInfer-2 core: neuron clusters, hybrid hot/cold FFN, activation
+predictor, offline planner, segmented neuron cache, cold store, and the
+neuron-cluster-level pipeline."""
+from repro.core.clusters import HybridPlan, make_plan, scale_plan_for_batch
+from repro.core.predictor import init_predictor, predict_scores, predict_proba
+from repro.core.sparse_ffn import init_ffn, ffn_dense, ffn_hybrid, ffn_apply
+from repro.core.planner import (
+    ExecutionPlan, HardwareProfile, build_plan, profile_activations,
+    classify_neurons, permute_ffn_params, synthetic_frequencies)
+from repro.core.cache import NeuronCache, CacheStats
+from repro.core.coldstore import ColdStore
+from repro.core.pipeline import (
+    ClusterTask, simulate_pipeline, make_decode_tasks, PrefetchExecutor)
+from repro.core.adaptation import BucketedDecoder, BatchTracker, bucket_for
+from repro.core import baselines
+
+__all__ = [
+    "HybridPlan", "make_plan", "scale_plan_for_batch",
+    "init_predictor", "predict_scores", "predict_proba",
+    "init_ffn", "ffn_dense", "ffn_hybrid", "ffn_apply",
+    "ExecutionPlan", "HardwareProfile", "build_plan",
+    "profile_activations", "classify_neurons", "permute_ffn_params",
+    "synthetic_frequencies", "NeuronCache", "CacheStats", "ColdStore",
+    "ClusterTask", "simulate_pipeline", "make_decode_tasks",
+    "PrefetchExecutor", "BucketedDecoder", "BatchTracker", "bucket_for",
+    "baselines",
+]

@@ -1,0 +1,75 @@
+"""Dynamic CPU/NPU-ratio adaptation (paper §4.1.3).
+
+The NPU executes static graphs: PowerInfer-2 pre-builds one graph per
+(batch size, hot ratio) and swaps them asynchronously while attention
+runs. The XLA analogue is exact: we pre-jit one decode executable per
+batch bucket (static shapes) and swap executables as the live batch
+size changes. `BucketedDecoder` tracks sequence creation/completion and
+serves the right executable with zero-recompile switches.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict
+
+import jax
+
+from repro.core.clusters import HybridPlan
+from repro.core.planner import ExecutionPlan
+
+
+def bucket_for(batch: int, buckets=(1, 2, 4, 8, 16, 32)) -> int:
+    for b in buckets:
+        if batch <= b:
+            return b
+    return buckets[-1]
+
+
+@dataclass
+class BucketedDecoder:
+    """Pre-jitted decode executables per batch bucket.
+
+    make_step(plan) must return a decode callable
+    (params, tokens, cache) -> (logits, cache) specialized to the plan;
+    it is jitted once per bucket and cached (the paper's pre-generated
+    NPU graph table, §5 Batch-Adaptive Planning).
+    """
+    plan_source: ExecutionPlan
+    make_step: Callable[[HybridPlan], Callable]
+    buckets: tuple = (1, 2, 4, 8, 16, 32)
+    _cache: Dict[int, tuple] = field(default_factory=dict)
+    switches: int = 0
+    _last_bucket: int = -1
+
+    def prewarm(self):
+        for b in self.buckets:
+            self.executable_for(b)
+
+    def executable_for(self, batch: int):
+        b = bucket_for(batch, self.buckets)
+        if b not in self._cache:
+            plan = self.plan_source.plan_for_batch(b)
+            self._cache[b] = (plan, jax.jit(self.make_step(plan)))
+        if b != self._last_bucket:
+            self.switches += 1
+            self._last_bucket = b
+        return self._cache[b]
+
+    def live_plans(self):
+        return {b: p for b, (p, _) in self._cache.items()}
+
+
+@dataclass
+class BatchTracker:
+    """Tracks live decoding sequences (Best-of-N / continuous batching):
+    the *effective* batch size falls as sequences hit EOS (paper Fig 13)."""
+    active: int = 0
+    history: list = field(default_factory=list)
+
+    def start(self, n: int = 1):
+        self.active += n
+        self.history.append(self.active)
+
+    def finish(self, n: int = 1):
+        self.active = max(0, self.active - n)
+        self.history.append(self.active)

@@ -1,0 +1,238 @@
+"""Hybrid hot/cold FFN — the paper's technique as a composable JAX module.
+
+Weight layout (paper §4.4 "flexible neuron loading"): one bundled tensor
+`w` of shape (N, R, D) — neuron-major so that neuron *i*'s Gate row,
+Up row and Down column are contiguous (R=3 for gated FFNs, R=2 for
+ungated: [fc1, fc2]). This is exactly the paper's position-major
+Gate-Up-Down bundle: one fetch per neuron brings all of it.
+
+Three compute paths:
+  * ffn_dense   — full dense FFN; train / prefill ("NPU-centric", §4.1.1)
+                  and the hot prefix of decode.
+  * ffn_hybrid  — decode: dense hot prefix + predictor-gated gathered
+                  cold clusters (§4.1.2). Cold neurons are re-densified
+                  into MXU-aligned gathered tiles (TPU adaptation of the
+                  paper's CPU sparse path — see DESIGN.md §2).
+  * Pallas backend — plan.backend='pallas' routes the cold gather
+                  through kernels/cluster_gather_ffn (scalar-prefetch
+                  HBM->VMEM cluster streaming = the paper's
+                  neuron-cluster-level I/O pipeline at VMEM granularity).
+
+Distribution: the neuron dim is grouped as (groups, N/groups) with the
+group dim sharded over the mesh 'model' axis; predictor scoring, top-k
+selection and gathering are all per-group, so the cold path needs *no*
+collective beyond the FFN's usual output reduction.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.clusters import HybridPlan
+from repro.core.predictor import init_predictor, predictor_spec, predict_scores
+from repro.models.modules import dense_init, activation_fn
+from repro.sharding import constrain, BATCH
+
+
+def ffn_rows(activation: str) -> int:
+    return 2 if activation == "gelu" else 3
+
+
+def init_ffn(key, d_model: int, d_ff: int, activation: str, dtype,
+             predictor_rank: int = 0):
+    """Bundled FFN params (+ optional activation predictor)."""
+    kw, kp = jax.random.split(key)
+    R = ffn_rows(activation)
+    w = dense_init(kw, (d_ff, R, d_model), dtype)
+    params = {"w": w}
+    if predictor_rank:
+        params["pred"] = init_predictor(kp, d_model, d_ff, predictor_rank, dtype)
+    return params
+
+
+def ffn_spec(has_predictor: bool):
+    spec = {"w": P("model", None, None)}
+    if has_predictor:
+        spec["pred"] = predictor_spec()
+    return spec
+
+
+def _apply_bundle(w, x, activation: str):
+    """Dense FFN over a (n, R, D) bundle slice. x (..., D) -> (..., D)."""
+    act = activation_fn(activation)
+    g = jnp.einsum("...d,nd->...n", x, w[:, 0])
+    if w.shape[1] == 3:
+        u = jnp.einsum("...d,nd->...n", x, w[:, 1])
+        h = act(g) * u
+    else:
+        h = act(g)
+    return jnp.einsum("...n,nd->...d", h, w[:, -1])
+
+
+def ffn_dense(params, x, activation: str):
+    """Full dense FFN (the prefill/train path; paper §4.1.1)."""
+    w = params["w"]
+    act = activation_fn(activation)
+    g = jnp.einsum("...d,nd->...n", x, w[:, 0])
+    g = constrain(g, P(BATCH, *([None] * (g.ndim - 2)), "model"))
+    if w.shape[1] == 3:
+        u = jnp.einsum("...d,nd->...n", x, w[:, 1])
+        h = act(g) * u
+    else:
+        h = act(g)
+    y = jnp.einsum("...n,nd->...d", h, w[:, -1])
+    return constrain(y, P(BATCH, *([None] * (y.ndim - 1))))
+
+
+def _use_shard_map(groups: int) -> bool:
+    from repro.sharding import current_mesh
+    m = current_mesh()
+    if m is None or "model" not in m.axis_names or groups <= 1:
+        return False
+    return dict(m.shape).get("model") == groups
+
+
+def _cold_path_shard_map(params, x, activation: str, mode: str,
+                         plan: HybridPlan, n_hot: int, n_cold: int):
+    """Shard-local cold path: each 'model' shard scores its own neuron
+    slice, picks its top clusters, gathers them locally, computes the
+    partial FFN output and psums. x (B, D) -> ((B, D), (G, kc))."""
+    import jax.experimental  # noqa: F401  (shard_map is jax.shard_map)
+    from jax.sharding import PartitionSpec as PS
+    from repro.sharding import current_mesh
+
+    mesh = current_mesh()
+    G, cs, kc = plan.groups, plan.cluster_size, plan.clusters_per_group
+    nc_g = n_cold // G // cs
+    w = params["w"]
+    R, D = w.shape[1], w.shape[2]
+    act = activation_fn(activation)
+    wc = w[n_hot:].reshape(G * nc_g, cs, R, D)        # row-sharded 'model'
+    A = params["pred"]["A"]
+    Bp = params["pred"]["B"][:, n_hot:]               # (r, Nc) col-sharded
+
+    def local(xl, wcl, Al, Bl):
+        # xl (B, D) replicated over model; wcl (nc_g, cs, R, D) local;
+        # Bl (r, Nc_local) local predictor columns.
+        h = jnp.einsum("bd,dr->br", xl.astype(jnp.float32),
+                       Al.astype(jnp.float32))
+        scores = jnp.einsum("br,rn->bn", h, Bl.astype(jnp.float32))
+        union = scores.max(axis=0)                    # (Nc_local,)
+        cscore = union.reshape(nc_g, cs).max(axis=-1)
+        _, idx = jax.lax.top_k(cscore, kc)            # (kc,) local clusters
+        gath = wcl[idx].reshape(kc * cs, R, D)        # local gather
+        g = jnp.einsum("bd,kd->bk", xl, gath[:, 0])
+        if R == 3:
+            u = jnp.einsum("bd,kd->bk", xl, gath[:, 1])
+            hh = act(g) * u
+        else:
+            hh = act(g)
+        if mode == "cats":
+            tok = scores.reshape(-1, nc_g, cs)
+            tok = jnp.take_along_axis(tok, idx[None, :, None], axis=1)
+            hh = hh * (tok.reshape(hh.shape) > 0.0).astype(hh.dtype)
+        y = jnp.einsum("bk,kd->bd", hh.astype(w.dtype), gath[:, -1])
+        # psum in f32: XLA:CPU's AllReducePromotion pass crashes on
+        # bf16 all-reduce inside partial-manual shard_map (and f32
+        # reduction is numerically better anyway).
+        return (jax.lax.psum(y.astype(jnp.float32), "model"),
+                jax.lax.all_gather(idx, "model"))     # (G, kc)
+
+    fn = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(PS(None, None), PS("model", None, None, None),
+                  PS(None, None), PS(None, "model")),
+        out_specs=(PS(None, None), PS(None, None)),
+        axis_names={"model"}, check_vma=False)
+    return fn(x, wc, A, Bp)
+
+
+def ffn_hybrid(params, x, activation: str, mode: str, plan: HybridPlan,
+               return_indices: bool = False):
+    """Decode-phase hybrid FFN (paper §4.1.2). x: (B, D).
+
+    hot prefix  -> dense matmul (MXU; the NPU engine analogue)
+    cold suffix -> predictor scores -> batch-union -> per-group top-k
+                   clusters -> gathered dense tiles (the CPU engine
+                   analogue, re-densified for the MXU).
+    """
+    w = params["w"]                                   # (N, R, D)
+    N, R, D = w.shape
+    B = x.shape[0]
+    n_hot, G, kg = plan.n_hot, plan.groups, plan.k_cold
+    y = jnp.zeros((B, D), jnp.float32)
+
+    if n_hot > 0:
+        y += _apply_bundle(w[:n_hot], x, activation).astype(jnp.float32)
+
+    n_cold = N - n_hot
+    cs = plan.cluster_size
+    kc = plan.clusters_per_group                      # active clusters/group
+    cidx = jnp.zeros((G, max(kc, 1)), jnp.int32)
+    if n_cold > 0 and kc > 0 and "pred" in params and _use_shard_map(G):
+        # §Perf iteration C4: the grouped-pjit formulation below lowers
+        # to a per-shard materialize-and-select chain (each layer read
+        # the full local cold weights several times in f32). shard_map
+        # keeps predictor scoring, top-k and the cluster gather strictly
+        # shard-local; only the output psum crosses shards.
+        y_cold, cidx = _cold_path_shard_map(
+            params, x, activation, mode, plan, n_hot, n_cold)
+        y += y_cold.astype(jnp.float32)
+    elif n_cold > 0 and kc > 0 and "pred" in params:
+        nc_g = n_cold // G // cs                      # cold clusters per group
+        scores = predict_scores(params["pred"], x)[:, n_hot:]   # (B, Nc) fp32
+        # Batch union (paper fn.1: a neuron is active if any token in
+        # the batch triggers it), then *cluster*-granular selection —
+        # the neuron cluster is the basic unit (§3.1).
+        union = scores.max(axis=0)                              # (Nc,)
+        cscore = union.reshape(G, nc_g, cs).max(axis=-1)        # (G, nc_g)
+        cscore = constrain(cscore, P("model", None))
+        _, cidx = jax.lax.top_k(cscore, kc)                     # (G, kc)
+        wc = w[n_hot:].reshape(G, nc_g, cs, R, D)
+        wc = constrain(wc, P("model", None, None, None, None))
+        if plan.backend == "pallas":
+            from repro.kernels import ops as kops
+            y_cold = kops.cluster_gather_ffn_grouped(
+                x, wc, cidx, activation=activation)
+        else:
+            gath = jnp.take_along_axis(
+                wc, cidx[:, :, None, None, None], axis=1)   # (G,kc,cs,R,D)
+            gath = gath.reshape(G, kc * cs, R, D)
+            act = activation_fn(activation)
+            g = jnp.einsum("bd,gkd->bgk", x, gath[:, :, 0])
+            if R == 3:
+                u = jnp.einsum("bd,gkd->bgk", x, gath[:, :, 1])
+                h = act(g) * u
+            else:
+                h = act(g)
+            if mode == "cats":
+                # CATS-style (§7.2.5): gate each token's contribution by
+                # its own predicted activation for the selected neurons.
+                tok = scores.reshape(B, G, nc_g, cs)
+                tok = jnp.take_along_axis(
+                    tok, cidx[None, :, :, None], axis=2)    # (B,G,kc,cs)
+                h = h * (tok.reshape(B, G, kc * cs) > 0.0).astype(h.dtype)
+            y_cold = jnp.einsum("bgk,gkd->bd", h.astype(w.dtype), gath[:, :, -1])
+        y += y_cold.astype(jnp.float32)
+
+    y = constrain(y.astype(x.dtype), P(BATCH, None))
+    if return_indices:
+        return y, cidx       # (G, kc) selected cold cluster ids per group
+    return y
+
+
+def ffn_apply(params, x, activation: str, sparse_cfg, plan: HybridPlan | None,
+              return_indices: bool = False):
+    """Uniform entry: dense when plan is None (train/prefill) else hybrid."""
+    if plan is None or not sparse_cfg.enabled:
+        y = ffn_dense(params, x, activation)
+        return (y, None) if return_indices else y
+    squeeze = x.ndim == 3
+    xx = x.reshape(-1, x.shape[-1]) if squeeze else x
+    out = ffn_hybrid(params, xx, activation, sparse_cfg.mode, plan,
+                     return_indices=return_indices)
+    if return_indices:
+        y, cidx = out
+        return (y.reshape(x.shape) if squeeze else y), cidx
+    return out.reshape(x.shape) if squeeze else out

@@ -1,0 +1,75 @@
+"""Deterministic synthetic token pipeline.
+
+Generates Zipf-distributed token streams with short-range Markov
+structure (repeated n-grams), which is enough to (a) drive training
+loss down measurably, (b) give the activation profiler non-uniform
+neuron statistics, and (c) exercise the data path (sharded host ->
+device batches) end to end. Fully offline, seeded, reproducible.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+@dataclass
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    batch_size: int
+    seed: int = 0
+    zipf_a: float = 1.3
+    ngram_repeat: float = 0.3     # prob. of copying a recent token
+
+
+class SyntheticTokens:
+    """Iterator of {'tokens': (B,S), 'labels': (B,S)} numpy batches."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        self.rng = np.random.default_rng(cfg.seed)
+        # Zipf over the vocab, renormalized
+        ranks = np.arange(1, cfg.vocab_size + 1, dtype=np.float64)
+        p = 1.0 / ranks ** cfg.zipf_a
+        self.p = p / p.sum()
+
+    def _sequence(self, length):
+        out = np.empty(length + 1, np.int32)
+        base = self.rng.choice(self.cfg.vocab_size, size=length + 1, p=self.p)
+        out[:] = base
+        # inject n-gram copies for learnable structure
+        copy = self.rng.random(length + 1) < self.cfg.ngram_repeat
+        lag = self.rng.integers(1, 8, size=length + 1)
+        for i in np.nonzero(copy)[0]:
+            if i >= lag[i]:
+                out[i] = out[i - lag[i]]
+        return out
+
+    def batch(self):
+        cfg = self.cfg
+        seqs = np.stack([self._sequence(cfg.seq_len)
+                         for _ in range(cfg.batch_size)])
+        return {"tokens": seqs[:, :-1].astype(np.int32),
+                "labels": seqs[:, 1:].astype(np.int32)}
+
+    def __iter__(self):
+        while True:
+            yield self.batch()
+
+
+def shard_batch(batch, mesh=None):
+    """Host batch -> device arrays, batch dim sharded over pod+data."""
+    if mesh is None:
+        return jax.tree.map(jnp.asarray, batch)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.sharding import batch_axes
+    ax = batch_axes(mesh)
+
+    def put(x):
+        spec = P(ax, *([None] * (x.ndim - 1)))
+        return jax.device_put(x, NamedSharding(mesh, spec))
+
+    return jax.tree.map(put, batch)

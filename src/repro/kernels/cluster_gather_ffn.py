@@ -1,0 +1,91 @@
+"""Pallas TPU kernel: gathered neuron-cluster FFN (the paper's cold path).
+
+The TPU-native form of PowerInfer-2's neuron-cluster pipeline (§4.3):
+the grid walks the *active* clusters selected by the predictor; a
+scalar-prefetched index vector drives each BlockSpec's index_map, so
+the Pallas pipeline DMA-streams exactly the activated clusters from
+HBM ("flash" analogue) into VMEM ("DRAM" analogue) while the MXU
+computes the previous cluster — compute/I-O overlap at cluster
+granularity, which is precisely Fig 6(b) one level down the memory
+hierarchy.
+
+Weight layout matches the cold store: bundled (N, R, D) with R rows per
+neuron (Gate/Up/Down) so one block fetch brings a whole cluster bundle
+(§4.4 position-major bundling).
+
+Blocks: w block (cluster_size, R, D) — cluster_size is a multiple of
+128 in production configs, so the (B, D) x (D, cs) matmuls are
+MXU-aligned. Output (B, D) accumulates in fp32 across grid steps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(idx_ref, x_ref, w_ref, o_ref, *, activation: str, gated: bool):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]                                   # (B, D)
+    wg = w_ref[:, 0, :]                              # (cs, D)
+    g = jax.lax.dot_general(x, wg, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (B, cs)
+    if activation == "silu":
+        h = jax.nn.silu(g)
+    elif activation == "relu2":
+        h = jnp.square(jnp.maximum(g, 0.0))
+    else:                                            # gelu / geglu
+        h = jax.nn.gelu(g, approximate=True)
+    if gated:
+        u = jax.lax.dot_general(x, w_ref[:, 1, :], (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        h = h * u
+    wd = w_ref[:, -1, :]                             # (cs, D)
+    y = jax.lax.dot_general(h.astype(wd.dtype), wd, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (B, D)
+    o_ref[...] += y
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "cluster_size",
+                                             "interpret"))
+def cluster_gather_ffn(x, w, cluster_idx, *, activation: str,
+                       cluster_size: int, interpret: bool = True):
+    """x (B, D); w (N, R, D) in HBM; cluster_idx (K,) int32 cluster ids.
+
+    Returns (B, D) = sum over selected clusters of the bundled FFN.
+    """
+    B, D = x.shape
+    N, R, _ = w.shape
+    K = cluster_idx.shape[0]
+    assert N % cluster_size == 0
+    gated = R == 3
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(K,),
+        in_specs=[
+            pl.BlockSpec((B, D), lambda i, idx: (0, 0)),
+            # the gather: block row = the i-th *active* cluster id
+            pl.BlockSpec((cluster_size, R, D),
+                         lambda i, idx: (idx[i], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((B, D), lambda i, idx: (0, 0)),
+    )
+    w_blocked = w.reshape(N // cluster_size * cluster_size, R, D)
+    out = pl.pallas_call(
+        functools.partial(_kernel, activation=activation, gated=gated),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, D), jnp.float32),
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+    )(cluster_idx, x, w_blocked)
+    return out.astype(x.dtype)

@@ -1,0 +1,37 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+`interpret` defaults to True because this container is CPU-only; on a
+real TPU pass interpret=False (the kernels are written for TPU:
+MXU-aligned blocks, VMEM-resident accumulators, scalar-prefetch DMA).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.cluster_gather_ffn import cluster_gather_ffn
+from repro.kernels.dense_ffn import dense_ffn
+
+
+def cluster_gather_ffn_grouped(x, wc, cidx, *, activation: str,
+                               interpret: bool = True):
+    """Grouped (sharded-neuron-dim) form used by core.sparse_ffn.
+
+    x (B, D); wc (G, nc_g, cs, R, D) cold clusters per group;
+    cidx (G, kc) active cluster ids per group. Returns (B, D) fp32-acc
+    sum over all groups' gathered clusters.
+
+    Each group's clusters get a *global* cluster id (g * nc_g + local)
+    so one pallas_call covers all groups — on a sharded mesh each
+    shard calls this with only its local group (G=1) inside shard_map.
+    """
+    G, nc_g, cs, R, D = wc.shape
+    w_flat = wc.reshape(G * nc_g * cs, R, D)
+    gidx = (cidx + jnp.arange(G, dtype=cidx.dtype)[:, None] * nc_g).reshape(-1)
+    return cluster_gather_ffn(x, w_flat, gidx, activation=activation,
+                              cluster_size=cs, interpret=interpret)
+
+
+__all__ = ["cluster_gather_ffn", "cluster_gather_ffn_grouped", "dense_ffn"]

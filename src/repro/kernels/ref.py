@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for the Pallas kernels (allclose targets)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.modules import activation_fn
+
+
+def _apply(x, wsel, activation):
+    """x (B, D), wsel (K, R, D) -> (B, D), fp32 accumulation."""
+    act = activation_fn(activation)
+    g = jnp.einsum("bd,kd->bk", x, wsel[:, 0],
+                   preferred_element_type=jnp.float32)
+    if wsel.shape[1] == 3:
+        u = jnp.einsum("bd,kd->bk", x, wsel[:, 1],
+                       preferred_element_type=jnp.float32)
+        h = act(g) * u
+    else:
+        h = act(g)
+    return jnp.einsum("bk,kd->bd", h.astype(wsel.dtype), wsel[:, -1],
+                      preferred_element_type=jnp.float32)
+
+
+def cluster_gather_ffn_ref(x, w, cluster_idx, *, activation: str,
+                           cluster_size: int):
+    """Gathered sparse FFN oracle.
+
+    x: (B, D); w: (N, R, D) bundled neuron weights; cluster_idx: (K,)
+    int32 cluster ids (each cluster = cluster_size consecutive neurons).
+    """
+    N = w.shape[0]
+    wc = w.reshape(N // cluster_size, cluster_size, *w.shape[1:])
+    wsel = wc[cluster_idx].reshape(-1, *w.shape[1:])    # (K*cs, R, D)
+    return _apply(x, wsel, activation).astype(x.dtype)
+
+
+def dense_ffn_ref(x, w, *, activation: str):
+    """Dense bundled FFN oracle. x (B, D), w (N, R, D)."""
+    return _apply(x, w, activation).astype(x.dtype)

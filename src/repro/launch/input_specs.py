@@ -1,0 +1,129 @@
+"""ShapeDtypeStruct stand-ins for every (arch × input-shape) pair.
+
+No device allocation: shapes + dtypes + shardings only. For the audio
+and VLM archs the modality frontend is a stub — specs provide the frame
+/ patch embeddings directly (the sanctioned carve-out).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, InputShape
+from repro.sharding import batch_axes
+
+
+def _sds(shape, dtype, mesh, spec):
+    from repro.sharding import _filter_spec
+    spec = _filter_spec(spec, mesh, shape=shape)
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def batch_spec(mesh):
+    return P(batch_axes(mesh))
+
+
+def adapt_config(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    """Shape-driven config adaptation. long_500k decode on
+    full-attention archs switches to the sliding-window variant
+    (DESIGN.md §Arch-applicability — noted per row in EXPERIMENTS.md)."""
+    if (shape.name == "long_500k" and cfg.family not in ("ssm", "hybrid")
+            and not cfg.sliding_window):
+        cfg = cfg.replace(sliding_window=cfg.long_context_window)
+    return cfg
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, mesh):
+    """Model-input ShapeDtypeStructs for the given global shape."""
+    b = batch_axes(mesh)
+    B, S = shape.global_batch, shape.seq_len
+    tok = jnp.int32
+    emb = jnp.dtype(cfg.param_dtype)
+
+    if shape.kind == "train":
+        if cfg.family == "encdec":
+            return {
+                "frames": _sds((B, cfg.num_frames, cfg.d_model), emb, mesh,
+                               P(b, None, None)),
+                "tokens": _sds((B, S), tok, mesh, P(b, None)),
+                "labels": _sds((B, S), tok, mesh, P(b, None)),
+            }
+        if cfg.family == "vlm":
+            P_img = cfg.num_image_tokens
+            return {
+                "patch_embeds": _sds((B, P_img, cfg.d_model), emb, mesh,
+                                     P(b, None, None)),
+                "tokens": _sds((B, S - P_img), tok, mesh, P(b, None)),
+                "labels": _sds((B, S - P_img), tok, mesh, P(b, None)),
+            }
+        return {"tokens": _sds((B, S), tok, mesh, P(b, None)),
+                "labels": _sds((B, S), tok, mesh, P(b, None))}
+
+    if shape.kind == "prefill":
+        if cfg.family == "encdec":
+            return {
+                "frames": _sds((B, cfg.num_frames, cfg.d_model), emb, mesh,
+                               P(b, None, None)),
+                "tokens": _sds((B, S), tok, mesh, P(b, None)),
+            }
+        if cfg.family == "vlm":
+            P_img = cfg.num_image_tokens
+            return {
+                "patch_embeds": _sds((B, P_img, cfg.d_model), emb, mesh,
+                                     P(b, None, None)),
+                "tokens": _sds((B, S - P_img), tok, mesh, P(b, None)),
+            }
+        return {"tokens": _sds((B, S), tok, mesh, P(b, None))}
+
+    # decode: one new token against a cache of length S
+    return {"tokens": _sds((B, 1), tok, mesh, P(b, None))}
+
+
+def cache_specs(model, cfg: ModelConfig, shape: InputShape, mesh):
+    """Decode-cache ShapeDtypeStructs with the model's cache sharding."""
+    B, S = shape.global_batch, shape.seq_len
+    shapes = jax.eval_shape(lambda: model.init_cache(B, S))
+    specs = model.cache_spec(B, S)
+
+    def attach(sd, spec):
+        from repro.sharding import _filter_spec
+        return jax.ShapeDtypeStruct(
+            sd.shape, sd.dtype,
+            sharding=NamedSharding(mesh, _filter_spec(spec, mesh,
+                                                      shape=sd.shape)))
+
+    return jax.tree.map(attach, shapes, specs,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct)
+                        or isinstance(x, P))
+
+
+def param_specs(model, cfg: ModelConfig, mesh, fsdp: bool = False):
+    """Parameter ShapeDtypeStructs with the model's param sharding.
+
+    fsdp=True additionally shards each leaf's largest replicated dim
+    over 'data' (for the 314B/405B train states)."""
+    shapes = jax.eval_shape(model.init, jax.random.key(0))
+    specs = model.param_spec()
+
+    def attach(sd, spec):
+        from repro.sharding import _filter_spec
+        spec = _filter_spec(spec, mesh, shape=sd.shape)
+        if fsdp and "data" in mesh.axis_names:
+            parts = list(spec) + [None] * (len(sd.shape) - len(spec))
+            if "data" not in str(parts):
+                # shard the largest free dim over data
+                cand = [(dim, i) for i, (dim, pp) in
+                        enumerate(zip(sd.shape, parts)) if pp is None]
+                if cand:
+                    size, idx = max(cand)
+                    if size % 16 == 0:
+                        parts[idx] = "data"
+            spec = P(*parts)
+        return jax.ShapeDtypeStruct(sd.shape, sd.dtype,
+                                    sharding=NamedSharding(mesh, spec))
+
+    return jax.tree.map(attach, shapes, specs,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct)
+                        or isinstance(x, P))

@@ -1,0 +1,32 @@
+"""Production mesh construction (deliverable e).
+
+Single pod: (16, 16) = 256 chips, axes (data, model).
+Multi-pod:  (2, 16, 16) = 512 chips, axes (pod, data, model) — 'pod'
+is the outer replica/data axis crossing the ICI/DCN boundary.
+
+A FUNCTION, not a module constant: importing this module must never
+touch jax device state (the dry-run sets XLA_FLAGS before any init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh():
+    """1-device mesh for CPU smoke runs of mesh-aware code paths."""
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+# v5e hardware constants for the roofline (per chip)
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # bytes/s
+ICI_BW = 50e9                 # bytes/s per link

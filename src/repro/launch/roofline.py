@@ -1,0 +1,126 @@
+"""Roofline analysis (deliverable g) from dry-run artifacts.
+
+Per (arch × shape × mesh):
+  compute term    = per-device HLO FLOPs / 197 TFLOP/s (bf16, v5e)
+  memory term     = per-device HLO bytes / 819 GB/s HBM
+  collective term = per-device collective bytes / 50 GB/s ICI link
+
+cost_analysis() is per-device (verified empirically — DESIGN.md §8).
+MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) per trained token;
+for prefill 2·N·D, for decode 2·N_active per token. The ratio
+MODEL_FLOPS / (HLO_FLOPs × chips) exposes remat/redundancy waste.
+
+  PYTHONPATH=src python -m repro.launch.roofline --artifacts artifacts/dryrun
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.configs import get_config, INPUT_SHAPES
+from repro.launch.mesh import PEAK_FLOPS_BF16, HBM_BW, ICI_BW
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """Useful (algorithmic) FLOPs for the whole global step."""
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    n_active = cfg.active_param_count()
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    per_token = (6 if shape.kind == "train" else 2) * n_active
+    return float(per_token) * tokens
+
+
+def analyze_record(rec: dict) -> dict:
+    flops_dev = max(rec.get("flops_per_device", 0.0), 0.0)
+    # prefer the traffic-model bytes (TPU-dtype pricing; the raw
+    # 'bytes accessed' double-counts XLA:CPU's bf16->f32 dot converts)
+    bytes_dev = max(rec.get("traffic_bytes_per_device",
+                            rec.get("bytes_per_device", 0.0)), 0.0)
+    coll = rec.get("collectives", {}).get("bytes", {})
+    coll_bytes = float(sum(coll.values()))
+    t_comp = flops_dev / PEAK_FLOPS_BF16
+    t_mem = bytes_dev / HBM_BW
+    t_coll = coll_bytes / ICI_BW
+    terms = {"compute_s": t_comp, "memory_s": t_mem, "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec["arch"], rec["shape"])
+    hlo_total = flops_dev * rec.get("n_devices", 1)
+    return {
+        **{k: float(f"{v:.3e}") for k, v in terms.items()},
+        "dominant": dominant.replace("_s", ""),
+        "model_flops": float(f"{mf:.3e}"),
+        "hlo_flops_total": float(f"{hlo_total:.3e}"),
+        "useful_ratio": round(mf / hlo_total, 3) if hlo_total else None,
+        "bound_time_s": float(f"{max(terms.values()):.3e}"),
+    }
+
+
+def load_table(artifacts_dir: str, mesh: str = "16x16",
+               probe_dir: str = None):
+    """Prefer the unrolled cost-probe artifacts (exact FLOP counts —
+    the scanned dry-run hides loop trip counts from cost analysis);
+    fall back to raw dry-run records."""
+    base = os.path.dirname(artifacts_dir.rstrip("/"))
+    if probe_dir is None:
+        # prefer the traffic-model probe artifacts when present
+        for cand in ("probe_v2", "probe"):
+            if os.path.isdir(os.path.join(base, cand)):
+                probe_dir = os.path.join(base, cand)
+                break
+        else:
+            probe_dir = os.path.join(base, "probe")
+    rows = []
+    for f in sorted(glob.glob(os.path.join(artifacts_dir, "*.json"))):
+        rec = json.load(open(f))
+        if rec.get("mesh") != mesh or not rec.get("ok"):
+            continue
+        pf = os.path.join(probe_dir, f"{rec['arch']}__{rec['shape']}.json")
+        source = "raw"
+        if os.path.exists(pf):
+            probe = json.load(open(pf))
+            if probe.get("ok"):
+                keys = ["flops_per_device", "bytes_per_device",
+                        "collectives"]
+                if "traffic_bytes_per_device" in probe:
+                    keys.append("traffic_bytes_per_device")
+                rec = {**rec, **{k: probe[k] for k in keys}}
+                source = "probe"
+        rows.append({**{k: rec[k] for k in ("arch", "shape", "mesh")},
+                     **analyze_record(rec),
+                     "source": source,
+                     "collective_detail": rec["collectives"]["bytes"]})
+    return rows
+
+
+def format_table(rows) -> str:
+    hdr = (f"{'arch':24s} {'shape':12s} {'compute_s':>10s} {'memory_s':>10s} "
+           f"{'collect_s':>10s} {'bound':>10s} {'useful':>7s}")
+    out = [hdr, "-" * len(hdr)]
+    for r in rows:
+        out.append(
+            f"{r['arch']:24s} {r['shape']:12s} {r['compute_s']:10.3e} "
+            f"{r['memory_s']:10.3e} {r['collective_s']:10.3e} "
+            f"{r['dominant']:>10s} "
+            f"{r['useful_ratio'] if r['useful_ratio'] is not None else -1:7.3f}")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--artifacts", default="artifacts/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--json-out", default="artifacts/roofline.json")
+    args = ap.parse_args()
+    rows = load_table(args.artifacts, args.mesh)
+    print(format_table(rows))
+    with open(args.json_out, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"\n{len(rows)} rows -> {args.json_out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,177 @@
+"""Attention substrate: RoPE / M-RoPE, GQA, qk-norm, sliding window,
+pure-JAX flash attention (chunked online softmax) and decode-step attention.
+
+Shapes: q (B, Sq, H, dh); k/v (B, Skv, KV, dh); GQA groups G = H // KV.
+RoPE is applied *before* caching, so cached K carries absolute positions.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.modules import rms_norm
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------- RoPE ----
+
+def rope_angles(positions, d_half: int, theta: float):
+    """positions (..., S) -> angles (..., S, d_half)."""
+    inv = 1.0 / (theta ** (jnp.arange(d_half, dtype=jnp.float32) / d_half))
+    return positions[..., None].astype(jnp.float32) * inv
+
+
+def mrope_angles(positions3, sections, theta: float):
+    """M-RoPE (Qwen2-VL, arXiv:2409.12191).
+
+    positions3: (3, B, S) — temporal / height / width position streams.
+    sections: split of d_half, e.g. (16, 24, 24). Each section s_i uses
+    position stream i with its own slice of the inverse-frequency bank.
+    Returns angles (B, S, d_half).
+    """
+    d_half = sum(sections)
+    inv = 1.0 / (theta ** (jnp.arange(d_half, dtype=jnp.float32) / d_half))
+    chunks = []
+    off = 0
+    for i, sec in enumerate(sections):
+        p = positions3[i]                                  # (B, S)
+        chunks.append(p[..., None].astype(jnp.float32) * inv[off:off + sec])
+        off += sec
+    return jnp.concatenate(chunks, axis=-1)
+
+
+def apply_rotary(x, angles):
+    """x (B, S, H, dh), angles (B, S, dh//2) or (S, dh//2)."""
+    dt = x.dtype
+    d_half = x.shape[-1] // 2
+    if angles.ndim == 2:
+        angles = angles[None]
+    cos = jnp.cos(angles)[..., None, :]                    # (B, S, 1, dh/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :d_half].astype(jnp.float32), x[..., d_half:].astype(jnp.float32)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                           axis=-1).astype(dt)
+
+
+# ------------------------------------------------------------ qk-norm ----
+
+def maybe_qk_norm(q, k, params, eps):
+    """Per-head RMS norm on q and k (Qwen3 style) if weights present."""
+    if params is None:
+        return q, k
+    return (rms_norm(q, params["q_norm"], eps),
+            rms_norm(k, params["k_norm"], eps))
+
+
+# ----------------------------------------------- flash attention (jnp) ----
+
+def _block_mask(qpos, kpos, *, causal: bool, window: int):
+    """qpos (qb,), kpos (kb,) absolute positions -> (qb, kb) bool mask."""
+    m = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        m &= kpos[None, :] <= qpos[:, None]
+    if window:
+        m &= (qpos[:, None] - kpos[None, :]) < window
+    return m
+
+
+# Cost-probe override (launch/dryrun --probe): force single-chunk flash
+# so no while loop hides FLOPs from XLA's cost analysis. Never set in
+# production paths — single-chunk materializes the (Sq, Skv) scores.
+FLASH_FULL_BLOCKS = False
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, q_offset=0,
+                    q_block=512, kv_block=1024):
+    """Chunked online-softmax attention, fp32 accumulators.
+
+    Never materializes the (Sq, Skv) score matrix: scans q chunks
+    (outer) and kv chunks (inner), carrying (m, l, acc). `q_offset` is
+    the absolute position of q[0] relative to k[0] (0 for self-attn
+    over the same sequence).
+    """
+    B, Sq, H, dh = q.shape
+    _, Skv, KV, _ = k.shape
+    G = H // KV
+    if FLASH_FULL_BLOCKS:
+        q_block, kv_block = Sq, Skv
+    qb = min(q_block, Sq)
+    kb = min(kv_block, Skv)
+    assert Sq % qb == 0 and Skv % kb == 0, (Sq, qb, Skv, kb)
+    nq, nk = Sq // qb, Skv // kb
+    scale = dh ** -0.5
+
+    qr = q.reshape(B, nq, qb, KV, G, dh)
+    kr = k.reshape(B, nk, kb, KV, dh)
+    vr = v.reshape(B, nk, kb, KV, dh)
+
+    def q_chunk(carry, inputs):
+        i, qc = inputs                                     # qc (B,qb,KV,G,dh)
+        qpos = q_offset + i * qb + jnp.arange(qb)
+
+        def kv_chunk(state, inputs):
+            j, kc, vc = inputs
+            m_prev, l_prev, acc = state
+            kpos = j * kb + jnp.arange(kb)
+            s = jnp.einsum("bqkgd,btkd->bkgqt", qc, kc,
+                           preferred_element_type=jnp.float32) * scale
+            mask = _block_mask(qpos, kpos, causal=causal, window=window)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_prev, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_prev - m_new)
+            l_new = l_prev * corr + p.sum(axis=-1)
+            # NOTE (§Perf): converting the v-chunk up (kb x dh) is
+            # cheaper than converting p down (qb x kb) when qb > dh —
+            # the opposite trade from decode_attention.
+            pv = jnp.einsum("bkgqt,btkd->bkgqd", p, vc.astype(jnp.float32))
+            acc = acc * corr[..., None] + pv
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((B, KV, G, qb), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, qb), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, qb, dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_chunk, (m0, l0, a0),
+            (jnp.arange(nk), kr.swapaxes(0, 1), vr.swapaxes(0, 1)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]       # (B,KV,G,qb,dh)
+        return carry, out.transpose(0, 3, 1, 2, 4)         # (B,qb,KV,G,dh)
+
+    _, outs = jax.lax.scan(q_chunk, None,
+                           (jnp.arange(nq), qr.swapaxes(0, 1)))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, H, dh)
+    return out.astype(q.dtype)
+
+
+# ------------------------------------------------------ decode (Sq=1) ----
+
+def decode_attention(q, k_cache, v_cache, kv_pos, pos, *, window=0):
+    """One-token attention against a cache.
+
+    q: (B, 1, H, dh) (RoPE already applied at `pos`).
+    k_cache/v_cache: (B, T, KV, dh) — full buffer or ring buffer.
+    kv_pos: (B, T) absolute position of each slot, -1 = empty.
+    pos: (B,) current absolute position of the query token.
+    """
+    B, _, H, dh = q.shape
+    KV = k_cache.shape[2]
+    G = H // KV
+    scale = dh ** -0.5
+    qr = q.reshape(B, KV, G, dh)
+    s = jnp.einsum("bkgd,btkd->bkgt", qr, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    valid = (kv_pos >= 0) & (kv_pos <= pos[:, None])
+    if window:
+        valid &= (pos[:, None] - kv_pos) < window
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    # PV in the cache dtype with fp32 accumulation: casting p *down*
+    # (scores-sized) instead of V *up* (cache-sized) halves the decode
+    # memory traffic (§Perf iteration 1 — the convert was the top
+    # bytes-accessed op in the lowered HLO).
+    o = jnp.einsum("bkgt,btkd->bkgd", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, 1, H, dh).astype(q.dtype)

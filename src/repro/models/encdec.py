@@ -1,0 +1,244 @@
+"""Encoder-decoder audio backbone (SeamlessM4T-v2, arXiv:2308.11596).
+
+Transformer backbone only: the mel-spectrogram + conformer codec
+frontend is a stub — `input_specs()`/batches supply precomputed frame
+embeddings (B, num_frames, d_model). RoPE replaces Seamless's learned
+positions (TPU-friendly; recorded in DESIGN.md §2).
+
+Decoder layers: causal self-attention (cached at decode) + cross
+attention to the encoder memory (K/V precomputed once at prefill) +
+FFN carrying the PowerInfer-2 hybrid technique.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import blocks, dense
+from repro.models.attention import rope_angles, flash_attention
+from repro.models.kv_cache import write_pos
+from repro.models.modules import (
+    dtype_of, dense_init, embed_init, rms_norm, stack_layer_params)
+from repro.sharding import constrain, BATCH
+
+
+def init_enc_layer(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), dtype),
+        "attn": blocks.init_attn(k1, cfg, dtype),
+        "ln2": jnp.zeros((cfg.d_model,), dtype),
+        "ffn": blocks.init_ffn_block(k2, cfg, dtype),
+    }
+
+
+def init_dec_layer(key, cfg, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), dtype),
+        "attn": blocks.init_attn(k1, cfg, dtype),
+        "lnx": jnp.zeros((cfg.d_model,), dtype),
+        "xattn": blocks.init_attn(k2, cfg, dtype),
+        "ln2": jnp.zeros((cfg.d_model,), dtype),
+        "ffn": blocks.init_ffn_block(k3, cfg, dtype),
+    }
+
+
+def enc_layer_spec(cfg):
+    return {"ln1": P(None), "attn": blocks.attn_spec(cfg),
+            "ln2": P(None), "ffn": blocks.ffn_block_spec(cfg)}
+
+
+def dec_layer_spec(cfg):
+    return {"ln1": P(None), "attn": blocks.attn_spec(cfg),
+            "lnx": P(None), "xattn": blocks.attn_spec(cfg),
+            "ln2": P(None), "ffn": blocks.ffn_block_spec(cfg)}
+
+
+def init_params(key, cfg: ModelConfig):
+    dtype = dtype_of(cfg.param_dtype)
+    ke, kenc, kdec, kh = jax.random.split(key, 4)
+    return {
+        "embed": embed_init(ke, cfg.vocab_padded, cfg.d_model, dtype),
+        "enc_norm": jnp.zeros((cfg.d_model,), dtype),
+        "out_norm": jnp.zeros((cfg.d_model,), dtype),
+        "enc_layers": stack_layer_params(
+            kenc, cfg.num_encoder_layers,
+            lambda k: init_enc_layer(k, cfg, dtype)),
+        "dec_layers": stack_layer_params(
+            kdec, cfg.num_layers, lambda k: init_dec_layer(k, cfg, dtype)),
+        "lm_head": dense_init(kh, (cfg.d_model, cfg.vocab_padded), dtype),
+    }
+
+
+def params_spec(cfg: ModelConfig):
+    enc = jax.tree.map(lambda s: P(None, *s), enc_layer_spec(cfg),
+                       is_leaf=lambda s: isinstance(s, P))
+    dec = jax.tree.map(lambda s: P(None, *s), dec_layer_spec(cfg),
+                       is_leaf=lambda s: isinstance(s, P))
+    return {"embed": P("model", None), "enc_norm": P(None),
+            "out_norm": P(None), "enc_layers": enc, "dec_layers": dec,
+            "lm_head": P(None, "model")}
+
+
+def encode(params, cfg: ModelConfig, frames):
+    """frames (B, F, D) stub embeddings -> encoder memory (B, F, D)."""
+    x = frames.astype(dtype_of(cfg.compute_dtype))
+    F = x.shape[1]
+    angles = rope_angles(jnp.arange(F), cfg.d_head // 2, cfg.rope_theta)
+
+    def body(h, lp):
+        a, _ = blocks.attn_full(lp["attn"], rms_norm(h, lp["ln1"], cfg.norm_eps),
+                                cfg, angles, causal=False)
+        h = h + a
+        f = blocks.apply_ffn_block(lp["ffn"],
+                                   rms_norm(h, lp["ln2"], cfg.norm_eps),
+                                   cfg, None)
+        return h + f, None
+
+    x, _ = blocks.scan_layers(body, x, params["enc_layers"], remat=cfg.remat)
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def cross_memory(params, cfg, memory):
+    """Precompute per-decoder-layer cross K/V from encoder memory."""
+    B, F, _ = memory.shape
+    kv, dh = cfg.num_kv_heads, cfg.d_head
+
+    def body(_, lp):
+        k = jnp.einsum("bfd,de->bfe", memory, lp["xattn"]["wk"]).reshape(
+            B, F, kv, dh)
+        v = jnp.einsum("bfd,de->bfe", memory, lp["xattn"]["wv"]).reshape(
+            B, F, kv, dh)
+        return None, (k, v)
+
+    _, (mk, mv) = blocks.scan_over(body, None, params["dec_layers"])
+    return mk, mv                                          # (L,B,F,KV,dh)
+
+
+def _dec_layer_full(lp, x, cfg, angles, mem_k, mem_v, plan):
+    a, kv = blocks.attn_full(lp["attn"], rms_norm(x, lp["ln1"], cfg.norm_eps),
+                             cfg, angles, causal=True,
+                             window=cfg.sliding_window)
+    x = x + a
+    c = blocks.cross_attn(lp["xattn"], rms_norm(x, lp["lnx"], cfg.norm_eps),
+                          mem_k, mem_v, cfg)
+    x = x + c
+    f = blocks.apply_ffn_block(lp["ffn"], rms_norm(x, lp["ln2"], cfg.norm_eps),
+                               cfg, plan)
+    return x + f, kv
+
+
+def make_model(cfg: ModelConfig) -> dense.Model:
+    dh_half = cfg.d_head // 2
+    kv, dh = cfg.num_kv_heads, cfg.d_head
+    W = cfg.sliding_window
+
+    def forward(params, batch, plan=None):
+        memory = encode(params, cfg, batch["frames"])
+        tokens = batch["tokens"]
+        x = dense.embed_tokens(params, cfg, tokens)
+        S = x.shape[1]
+        angles = rope_angles(jnp.arange(S), dh_half, cfg.rope_theta)
+        mk, mv = cross_memory(params, cfg, memory)
+
+        def body(h, xs):
+            lp, k, v = xs
+            h, _ = _dec_layer_full(lp, h, cfg, angles, k, v, plan)
+            return h, None
+
+        x, _ = blocks.scan_layers(body, x, params["dec_layers"], mk, mv,
+                                  remat=cfg.remat)
+        return dense.lm_logits(params, cfg, x)
+
+    def prefill(params, batch, max_len=None):
+        memory = encode(params, cfg, batch["frames"])
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = dense.embed_tokens(params, cfg, tokens)
+        angles = rope_angles(jnp.arange(S), dh_half, cfg.rope_theta)
+        mk, mv = cross_memory(params, cfg, memory)
+
+        def body(h, xs):
+            lp, k, v = xs
+            h, kvp = _dec_layer_full(lp, h, cfg, angles, k, v, None)
+            return h, kvp
+
+        x, (k, v) = blocks.scan_layers(body, x, params["dec_layers"],
+                                       mk, mv, remat=cfg.remat)
+        if W and W < S:
+            assert S % W == 0
+            k, v = k[:, :, S - W:], v[:, :, S - W:]
+            kv_pos = jnp.broadcast_to(jnp.arange(S - W, S), (B, W))
+        else:
+            T = max_len or S
+            pad = T - S
+            if pad:
+                z = jnp.zeros(k.shape[:2] + (pad,) + k.shape[3:], k.dtype)
+                k = jnp.concatenate([k, z], 2)
+                v = jnp.concatenate([v, z], 2)
+            kv_pos = jnp.broadcast_to(
+                jnp.where(jnp.arange(T) < S, jnp.arange(T), -1), (B, T))
+        cache = {"k": k, "v": v, "mem_k": mk, "mem_v": mv,
+                 "kv_pos": kv_pos.astype(jnp.int32),
+                 "length": jnp.full((B,), S, jnp.int32)}
+        return dense.lm_logits(params, cfg, x[:, -1:]), cache
+
+    def decode_step(params, tokens, cache, plan=None):
+        pos = cache["length"]
+        x = dense.embed_tokens(params, cfg, tokens)
+        angles = rope_angles(pos[:, None], dh_half, cfg.rope_theta)
+        kv_pos = write_pos(cache["kv_pos"], pos)
+
+        def body(h, xs):
+            lp, kc, vc, mk, mv = xs
+            a, kc, vc = blocks.attn_decode(
+                lp["attn"], rms_norm(h, lp["ln1"], cfg.norm_eps), cfg,
+                angles, kc, vc, kv_pos, pos, window=W)
+            h = h + a
+            c = blocks.cross_attn(lp["xattn"],
+                                  rms_norm(h, lp["lnx"], cfg.norm_eps),
+                                  mk, mv, cfg)
+            h = h + c
+            f = blocks.apply_ffn_block(
+                lp["ffn"], rms_norm(h, lp["ln2"], cfg.norm_eps), cfg, plan)
+            return h + f, (kc, vc)
+
+        x, (k, v) = blocks.scan_over(
+            body, x, (params["dec_layers"], cache["k"], cache["v"],
+                      cache["mem_k"], cache["mem_v"]))
+        new_cache = dict(cache, k=k, v=v, kv_pos=kv_pos, length=pos + 1)
+        return dense.lm_logits(params, cfg, x), new_cache
+
+    def init_cache(batch, seq_len, dtype=None):
+        dtype = dtype or dtype_of(cfg.param_dtype)
+        T = min(W, seq_len) if W else seq_len
+        L, F = cfg.num_layers, cfg.num_frames
+        return {
+            "k": jnp.zeros((L, batch, T, kv, dh), dtype),
+            "v": jnp.zeros((L, batch, T, kv, dh), dtype),
+            "mem_k": jnp.zeros((L, batch, F, kv, dh), dtype),
+            "mem_v": jnp.zeros((L, batch, F, kv, dh), dtype),
+            "kv_pos": jnp.full((batch, T), -1, jnp.int32),
+            "length": jnp.zeros((batch,), jnp.int32),
+        }
+
+    def cache_spec(batch=None, seq_len=None):
+        return {"k": P(None, BATCH, "model", None, None),
+                "v": P(None, BATCH, "model", None, None),
+                "mem_k": P(None, BATCH, None, "model", None),
+                "mem_v": P(None, BATCH, None, "model", None),
+                "kv_pos": P(BATCH, "model"), "length": P(BATCH)}
+
+    return dense.Model(
+        cfg=cfg,
+        init=lambda key: init_params(key, cfg),
+        param_spec=lambda: params_spec(cfg),
+        forward=forward,
+        prefill=prefill,
+        decode_step=decode_step,
+        init_cache=init_cache,
+        cache_spec=cache_spec,
+    )

@@ -1,0 +1,64 @@
+"""Decode-time state caches.
+
+Three kinds, all pure pytrees so they thread through jit / scan:
+  * full KV cache     — (B, S_max, KV, dh) buffers, append at `length`.
+  * ring KV cache     — (B, W, KV, dh) sliding-window buffers (slot = pos % W)
+                        with explicit per-slot absolute positions.
+  * recurrent state   — SSM / RG-LRU states + causal-conv tails.
+
+`kv_pos` is materialized for both cache kinds so decode_attention masks
+uniformly (-1 = empty slot).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_full_cache(n_layers, batch, s_max, kv_heads, d_head, dtype):
+    return {
+        "k": jnp.zeros((n_layers, batch, s_max, kv_heads, d_head), dtype),
+        "v": jnp.zeros((n_layers, batch, s_max, kv_heads, d_head), dtype),
+        "kv_pos": jnp.full((batch, s_max), -1, jnp.int32),
+        "length": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def init_ring_cache(n_layers, batch, window, kv_heads, d_head, dtype):
+    return {
+        "k": jnp.zeros((n_layers, batch, window, kv_heads, d_head), dtype),
+        "v": jnp.zeros((n_layers, batch, window, kv_heads, d_head), dtype),
+        "kv_pos": jnp.full((batch, window), -1, jnp.int32),
+        "length": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def cache_slot(cache_k_layer, pos):
+    """Write slot index for each batch element. pos (B,)."""
+    T = cache_k_layer.shape[1]
+    return pos % T            # full cache: pos < S_max so identity
+
+
+def write_kv(k_layer, v_layer, k_new, v_new, pos):
+    """Insert one token per batch row at slot pos % T (vmapped)."""
+    T = k_layer.shape[1]
+    slot = pos % T
+
+    def upd(buf, new, s):
+        # buf (T,KV,dh), new (1,KV,dh)
+        return jax.lax.dynamic_update_slice(buf, new, (s, 0, 0))
+
+    k_layer = jax.vmap(upd)(k_layer, k_new, slot)
+    v_layer = jax.vmap(upd)(v_layer, v_new, slot)
+    return k_layer, v_layer
+
+
+def write_pos(kv_pos, pos):
+    """Update per-slot absolute positions after inserting token at `pos`."""
+    T = kv_pos.shape[1]
+    slot = pos % T
+
+    def upd(row, s, p):
+        return jax.lax.dynamic_update_slice(row, p[None], (s,))
+
+    return jax.vmap(upd)(kv_pos, slot, pos)

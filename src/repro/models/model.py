@@ -1,0 +1,23 @@
+"""build_model(config) — family dispatcher for the uniform Model API."""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+from repro.models.dense import Model
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family == "dense":
+        from repro.models import dense as fam
+    elif cfg.family == "moe":
+        from repro.models import moe as fam
+    elif cfg.family == "ssm":
+        from repro.models import ssm as fam
+    elif cfg.family == "hybrid":
+        from repro.models import rglru as fam
+    elif cfg.family == "encdec":
+        from repro.models import encdec as fam
+    elif cfg.family == "vlm":
+        from repro.models import vlm as fam
+    else:
+        raise ValueError(f"unknown family {cfg.family!r}")
+    return fam.make_model(cfg)

@@ -1,0 +1,65 @@
+"""Pure-JAX parameter pytree helpers (no flax dependency).
+
+Parameters are nested dicts of jnp arrays. Each model provides
+`init(key) -> params` and a parallel `param_spec() -> pytree of
+PartitionSpec` used by the launcher for pjit shardings.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+def dense_init(key, shape, dtype, scale: float | None = None):
+    """Truncated-normal init with 1/sqrt(fan_in) scale (last-but-one dim)."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(key, vocab, dim, dtype):
+    return (jax.random.normal(key, (vocab, dim), jnp.float32) * 0.02).astype(dtype)
+
+
+def stack_layer_params(key, n_layers: int, init_one):
+    """Initialize n_layers layers with vmapped init -> leaves (L, ...)."""
+    keys = jax.random.split(key, n_layers)
+    return jax.vmap(init_one)(keys)
+
+
+def param_count(params) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+
+
+def param_bytes(params) -> int:
+    return sum(int(np.prod(x.shape)) * x.dtype.itemsize
+               for x in jax.tree.leaves(params))
+
+
+def cast_tree(params, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype), params)
+
+
+def rms_norm(x, weight, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + weight.astype(jnp.float32))).astype(dt)
+
+
+def activation_fn(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "relu2":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    if name in ("gelu", "geglu"):
+        return lambda x: jax.nn.gelu(x, approximate=True)
+    raise ValueError(f"unknown activation {name!r}")

@@ -1,0 +1,310 @@
+"""Mixture-of-Experts FFN + MoE decoder model (grok-1 / deepseek-moe /
+turbosparse-mixtral).
+
+The paper's neuron-cluster abstraction maps onto MoE at two levels
+(DESIGN.md §Arch-applicability):
+  * expert level — shared experts (deepseek) are *hot clusters*
+    (always-dense), routed experts are *cold clusters* gated by the
+    router (which plays the predictor's role);
+  * neuron level — inside each expert the hybrid hot/cold FFN applies
+    (the paper's TurboSparse-Mixtral-47B case).
+
+Dispatch is sort-based (fully jittable, capacity-dropped):
+tokens -> top-k experts -> rank within expert via stable argsort ->
+(E, C, D) dispatch buffer -> batched expert GEMMs -> weighted combine.
+
+Sharding: 'ep' shards the expert dim over the mesh 'model' axis
+(deepseek: 64/16 = 4 per shard; routing crosses shards via XLA-inserted
+all-to-alls); 'tp' shards d_ff inside every expert (grok: 8 experts < 16
+shards). Both selectable per config; roofline hillclimb compares.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core.clusters import HybridPlan
+from repro.models import blocks, dense
+from repro.models.attention import rope_angles
+from repro.models.kv_cache import write_pos
+from repro.models.modules import (
+    dtype_of, dense_init, rms_norm, stack_layer_params)
+from repro.core.sparse_ffn import init_ffn, ffn_spec, ffn_dense
+from repro.sharding import constrain, BATCH
+
+
+# ------------------------------------------------------------- MoE FFN ----
+
+def init_moe_ffn(key, cfg: ModelConfig, dtype):
+    from repro.core.sparse_ffn import ffn_rows
+    E, f, d = cfg.num_experts, cfg.d_ff, cfg.d_model
+    R = ffn_rows(cfg.activation)
+    kr, ke, ks = jax.random.split(key, 3)
+    p = {
+        "router": dense_init(kr, (d, E), dtype),
+        "experts": dense_init(ke, (E, f, R, d), dtype),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = init_ffn(ks, d, f * cfg.num_shared_experts,
+                               cfg.activation, dtype)
+    return p
+
+
+def moe_ffn_spec(cfg: ModelConfig):
+    ep = cfg.moe_shard_mode == "ep"
+    s = {"router": P(None, None),
+         "experts": P("model", None, None, None) if ep
+         else P(None, "model", None, None)}
+    if cfg.num_shared_experts:
+        s["shared"] = ffn_spec(False)
+    return s
+
+
+def _capacity(T: int, k: int, E: int, factor: float) -> int:
+    c = int(T * k / E * factor)
+    return max(8, ((c + 7) // 8) * 8)
+
+
+def moe_dispatch(gates, k: int, capacity: int):
+    """gates (T, E) router probs -> dispatch metadata.
+
+    Returns (expert_idx (T,k), combine_w (T,k), slot (T,k), keep (T,k))
+    where slot indexes a flat (E*C) buffer.
+    """
+    T, E = gates.shape
+    topv, tope = jax.lax.top_k(gates, k)                    # (T, k)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+    flat_e = tope.reshape(-1)                               # (T*k,)
+    order = jnp.argsort(flat_e, stable=True)
+    ranks = jnp.zeros((T * k,), jnp.int32).at[order].set(
+        jnp.arange(T * k, dtype=jnp.int32))
+    counts = jnp.zeros((E,), jnp.int32).at[flat_e].add(1)
+    offsets = jnp.cumsum(counts) - counts                   # exclusive
+    pos_in_e = ranks - offsets[flat_e]                      # (T*k,)
+    keep = pos_in_e < capacity
+    slot = jnp.where(keep, flat_e * capacity + pos_in_e, 0)
+    return (tope, topv, slot.reshape(T, k), keep.reshape(T, k))
+
+
+def _dispatch_group(xt, router, cfg, C):
+    """One dispatch group: xt (T, D) -> (buf (E,C,D), combine metadata).
+    Vmapped over data-local groups by apply_moe_ffn."""
+    T, D = xt.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    gates = jax.nn.softmax(
+        jnp.einsum("td,de->te", xt.astype(jnp.float32),
+                   router.astype(jnp.float32)), axis=-1)
+    tope, topv, slot, keep = moe_dispatch(gates, k, C)
+    xk = jnp.broadcast_to(xt[:, None], (T, k, D)).reshape(T * k, D)
+    wgt = jnp.where(keep.reshape(-1), 1.0, 0.0).astype(xt.dtype)
+    buf = jnp.zeros((E * C, D), xt.dtype)
+    buf = buf.at[slot.reshape(-1)].add(xk * wgt[:, None])
+    # router load-balance aux loss (Switch-style)
+    me = gates.mean(axis=0)
+    ce = jnp.zeros((E,), jnp.float32).at[tope.reshape(-1)].add(1.0 / (T * k))
+    aux = E * jnp.sum(me * ce)
+    return buf.reshape(E, C, D), (slot, keep, topv), aux
+
+
+def _combine_group(yb, slot, keep, topv):
+    """yb (E*C, D) expert outputs -> (T, D) weighted combine."""
+    T, k = slot.shape
+    yk = jnp.take(yb, slot.reshape(-1), axis=0).reshape(T, k, yb.shape[-1])
+    yk = yk * (topv * keep).astype(yk.dtype)[..., None]
+    return yk.sum(axis=1)
+
+
+def apply_moe_ffn(params, x, cfg: ModelConfig,
+                  plan: Optional[HybridPlan] = None):
+    """x (..., D) -> ((..., D), aux). Train (T=B*S) and decode (T=B).
+
+    Hierarchical dispatch (§Perf iteration, EXPERIMENTS.md): tokens are
+    routed within `moe_dispatch_groups` data-local groups (group dim
+    sharded over batch axes, experts over 'model'), so the dispatch
+    buffer is (G, E, C_local, D) — per-device E_local*C_local*D —
+    instead of a replicated global (E, C_global, D). Per-token top-k is
+    unchanged; only capacity dropping becomes group-local, which is
+    *more* faithful to EP systems (capacity is per-device there too).
+    """
+    shape = x.shape
+    D = shape[-1]
+    xt = x.reshape(-1, D)                                   # (T, D)
+    T = xt.shape[0]
+    E, k = cfg.num_experts, cfg.experts_per_token
+    G = cfg.moe_dispatch_groups \
+        if cfg.moe_dispatch_groups > 0 and T % cfg.moe_dispatch_groups == 0 \
+        else 1
+    Tg = T // G
+    C = _capacity(Tg, k, E, cfg.moe_capacity_factor)
+    w = params["experts"]                                   # (E, f, R, D)
+
+    xg = constrain(xt.reshape(G, Tg, D), P(BATCH, None, None))
+    buf, meta, auxg = jax.vmap(
+        lambda xx: _dispatch_group(xx, params["router"], cfg, C))(xg)
+
+    # explicit all-to-all: the dispatch buffer reshards from
+    # batch-sharded groups to expert-sharded slots — tokens move to the
+    # experts' shards instead of XLA all-gathering every expert's
+    # weights onto every data shard (§Perf iteration 3).
+    ep = cfg.moe_shard_mode == "ep"
+    espec = P(BATCH, "model", None, None) if ep \
+        else P(BATCH, None, None, None)
+    buf = constrain(buf, espec)
+
+    from repro.models.modules import activation_fn
+    act = activation_fn(cfg.activation)
+    R = w.shape[2]
+    g = jnp.einsum("gecd,efd->gecf", buf, w[:, :, 0])
+    g = constrain(g, P(BATCH, "model", None, None) if ep
+                  else P(BATCH, None, None, "model"))
+    if R == 3:
+        u = jnp.einsum("gecd,efd->gecf", buf, w[:, :, 1])
+        h = act(g) * u
+    else:
+        h = act(g)
+    yb = jnp.einsum("gecf,efd->gecd", h, w[:, :, -1])
+    # all-to-all back: expert-sharded outputs return to their groups
+    yb = constrain(yb, P(BATCH, None, None, None))
+    slot, keep, topv = meta
+    yg = jax.vmap(_combine_group)(
+        yb.reshape(G, E * C, D), slot, keep, topv)
+    yg = constrain(yg, P(BATCH, None, None))
+    y = yg.reshape(T, D)
+    aux = auxg.mean()
+
+    if "shared" in params:                                  # hot clusters
+        y = y + ffn_dense(params["shared"], xt, cfg.activation)
+    return y.reshape(shape), aux
+
+
+# ------------------------------------------------------------- model ----
+
+def init_layer(key, cfg: ModelConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), dtype),
+        "attn": blocks.init_attn(k1, cfg, dtype),
+        "ln2": jnp.zeros((cfg.d_model,), dtype),
+        "moe": init_moe_ffn(k2, cfg, dtype),
+    }
+
+
+def layer_spec(cfg: ModelConfig):
+    return {"ln1": P(None), "attn": blocks.attn_spec(cfg),
+            "ln2": P(None), "moe": moe_ffn_spec(cfg)}
+
+
+def init_params(key, cfg: ModelConfig):
+    dtype = dtype_of(cfg.param_dtype)
+    ke, kl, kh = jax.random.split(key, 3)
+    from repro.models.modules import embed_init
+    params = {
+        "embed": embed_init(ke, cfg.vocab_padded, cfg.d_model, dtype),
+        "out_norm": jnp.zeros((cfg.d_model,), dtype),
+        "layers": stack_layer_params(kl, cfg.num_layers,
+                                     lambda k: init_layer(k, cfg, dtype)),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(kh, (cfg.d_model, cfg.vocab_padded), dtype)
+    return params
+
+
+def params_spec(cfg: ModelConfig):
+    ls = jax.tree.map(lambda s: P(None, *s), layer_spec(cfg),
+                      is_leaf=lambda s: isinstance(s, P))
+    spec = {"embed": P("model", None), "out_norm": P(None), "layers": ls}
+    if not cfg.tie_embeddings:
+        spec["lm_head"] = P(None, "model")
+    return spec
+
+
+def make_model(cfg: ModelConfig) -> dense.Model:
+    dh_half = cfg.d_head // 2
+    init_cache, cache_spec = dense.make_cache_fns(cfg)
+    W = cfg.sliding_window
+
+    def forward(params, batch, plan=None):
+        tokens = batch["tokens"]
+        x = dense.embed_tokens(params, cfg, tokens)
+        S = x.shape[1]
+        angles = rope_angles(jnp.arange(S), dh_half, cfg.rope_theta)
+
+        def body(h, lp):
+            a, _ = blocks.attn_full(lp["attn"],
+                                    rms_norm(h, lp["ln1"], cfg.norm_eps),
+                                    cfg, angles, causal=True, window=W)
+            h = h + a
+            f, aux = apply_moe_ffn(lp["moe"],
+                                   rms_norm(h, lp["ln2"], cfg.norm_eps), cfg)
+            return h + f, aux
+
+        x, auxs = blocks.scan_layers(body, x, params["layers"],
+                                     remat=cfg.remat)
+        logits = dense.lm_logits(params, cfg, x)
+        return logits
+
+    def prefill(params, batch, max_len=None):
+        tokens = batch["tokens"]
+        B = tokens.shape[0]
+        x = dense.embed_tokens(params, cfg, tokens)
+        S = x.shape[1]
+        angles = rope_angles(jnp.arange(S), dh_half, cfg.rope_theta)
+
+        def body(h, lp):
+            a, kv = blocks.attn_full(lp["attn"],
+                                     rms_norm(h, lp["ln1"], cfg.norm_eps),
+                                     cfg, angles, causal=True, window=W)
+            h = h + a
+            f, _ = apply_moe_ffn(lp["moe"],
+                                 rms_norm(h, lp["ln2"], cfg.norm_eps), cfg)
+            return h + f, kv
+
+        x, (k, v) = blocks.scan_layers(body, x, params["layers"],
+                                       remat=cfg.remat)
+        T = max_len or S
+        pad = T - S
+        if pad:
+            zeros = jnp.zeros(k.shape[:2] + (pad,) + k.shape[3:], k.dtype)
+            k = jnp.concatenate([k, zeros], axis=2)
+            v = jnp.concatenate([v, zeros], axis=2)
+        kv_pos = jnp.where(jnp.arange(T) < S, jnp.arange(T), -1)
+        kv_pos = jnp.broadcast_to(kv_pos, (B, T)).astype(jnp.int32)
+        cache = {"k": k, "v": v, "kv_pos": kv_pos,
+                 "length": jnp.full((B,), S, jnp.int32)}
+        return dense.lm_logits(params, cfg, x[:, -1:]), cache
+
+    def decode_step(params, tokens, cache, plan=None):
+        pos = cache["length"]
+        x = dense.embed_tokens(params, cfg, tokens)
+        angles = rope_angles(pos[:, None], dh_half, cfg.rope_theta)
+        kv_pos = write_pos(cache["kv_pos"], pos)
+
+        def body(h, xs):
+            lp, kc, vc = xs
+            a, kc, vc = blocks.attn_decode(
+                lp["attn"], rms_norm(h, lp["ln1"], cfg.norm_eps), cfg,
+                angles, kc, vc, kv_pos, pos, window=W)
+            h = h + a
+            f, _ = apply_moe_ffn(lp["moe"],
+                                 rms_norm(h, lp["ln2"], cfg.norm_eps), cfg)
+            return h + f, (kc, vc)
+
+        x, (k, v) = blocks.scan_over(body, x, (params["layers"],
+                                               cache["k"], cache["v"]))
+        new_cache = dict(cache, k=k, v=v, kv_pos=kv_pos, length=pos + 1)
+        return dense.lm_logits(params, cfg, x), new_cache
+
+    return dense.Model(
+        cfg=cfg,
+        init=lambda key: init_params(key, cfg),
+        param_spec=lambda: params_spec(cfg),
+        forward=forward,
+        prefill=prefill,
+        decode_step=decode_step,
+        init_cache=init_cache,
+        cache_spec=cache_spec,
+    )

@@ -1,0 +1,424 @@
+"""RecurrentGemma / Griffin hybrid (arXiv:2402.19427).
+
+Block pattern ('rec','rec','attn') repeating: two RG-LRU recurrent
+blocks per local-attention (MQA, window 2048) block; every temporal
+block is followed by a GeGLU MLP that carries the PowerInfer-2 hybrid
+FFN technique. 38 layers = 12 scanned groups + 2 remainder rec layers.
+
+RG-LRU: r_t = σ(x_t·w_r + b_r), i_t = σ(x_t·w_i + b_i)
+        a_t = exp(-c · softplus(Λ) · r_t)
+        h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+Full-sequence via associative scan; decode is the O(1) update.
+Gates are per-channel (diagonal) — a TPU-friendly simplification of
+Griffin's block-diagonal gate matrices (DESIGN.md §2 records this).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import blocks, dense
+from repro.models.attention import rope_angles
+from repro.models.kv_cache import write_pos
+from repro.models.modules import (
+    dtype_of, dense_init, embed_init, rms_norm, stack_layer_params)
+from repro.models.ssm import causal_conv
+from repro.sharding import constrain, BATCH
+
+
+# ------------------------------------------------------------- RG-LRU ----
+
+def rglru_full(p, x, cfg, init_h=None):
+    """x (B,S,dr) -> (y, h_final). Associative scan over the sequence."""
+    c = cfg.rglru_c
+    r = jax.nn.sigmoid(x * p["w_r"] + p["b_r"]).astype(jnp.float32)
+    i = jax.nn.sigmoid(x * p["w_i"] + p["b_i"])
+    log_a = -c * jax.nn.softplus(p["lam"]) * r               # (B,S,dr) fp32
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6)) \
+        * (i * x).astype(jnp.float32)
+
+    def combine(u, v):
+        a1, b1 = u
+        a2, b2 = v
+        return a1 * a2, b2 + a2 * b1
+
+    A, Bc = jax.lax.associative_scan(combine, (a, b), axis=1)
+    if init_h is not None:
+        Bc = Bc + A * init_h[:, None].astype(jnp.float32)
+    return Bc.astype(x.dtype), Bc[:, -1].astype(x.dtype)
+
+
+def rglru_step(p, x, cfg, h):
+    """x (B,dr), h (B,dr) -> (y, h')."""
+    c = cfg.rglru_c
+    r = jax.nn.sigmoid(x * p["w_r"] + p["b_r"]).astype(jnp.float32)
+    i = jax.nn.sigmoid(x * p["w_i"] + p["b_i"])
+    log_a = -c * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6)) \
+        * (i * x).astype(jnp.float32)
+    h = a * h.astype(jnp.float32) + b
+    return h.astype(x.dtype), h.astype(x.dtype)
+
+
+# ------------------------------------------------------------- blocks ----
+
+def init_rec_block(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    dr = d                                                   # lru width
+    W = cfg.rglru_conv_width
+    ks = jax.random.split(key, 6)
+    k2 = jax.random.split(ks[5], 2)
+    return {
+        "ln": jnp.zeros((d,), dtype),
+        "w_in": dense_init(ks[0], (d, dr), dtype),
+        "w_gate": dense_init(ks[1], (d, dr), dtype),
+        "conv_w": dense_init(ks[2], (W, dr), dtype, scale=0.5),
+        "conv_b": jnp.zeros((dr,), dtype),
+        "lru": {"w_r": dense_init(k2[0], (dr,), dtype, scale=1.0),
+                "b_r": jnp.zeros((dr,), dtype),
+                "w_i": dense_init(k2[1], (dr,), dtype, scale=1.0),
+                "b_i": jnp.zeros((dr,), dtype),
+                "lam": jnp.full((dr,), 0.7, jnp.float32)},
+        "w_out": dense_init(ks[3], (dr, d), dtype),
+        "ln2": jnp.zeros((d,), dtype),
+        "ffn": blocks.init_ffn_block(ks[4], cfg, dtype),
+    }
+
+
+def rec_block_spec(cfg):
+    return {
+        "ln": P(None),
+        "w_in": P(None, "model"), "w_gate": P(None, "model"),
+        "conv_w": P(None, "model"), "conv_b": P("model"),
+        "lru": {"w_r": P("model"), "b_r": P("model"),
+                "w_i": P("model"), "b_i": P("model"), "lam": P("model")},
+        "w_out": P("model", None),
+        "ln2": P(None),
+        "ffn": blocks.ffn_block_spec(cfg),
+    }
+
+
+def init_attn_block(key, cfg: ModelConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln": jnp.zeros((cfg.d_model,), dtype),
+        "attn": blocks.init_attn(k1, cfg, dtype),
+        "ln2": jnp.zeros((cfg.d_model,), dtype),
+        "ffn": blocks.init_ffn_block(k2, cfg, dtype),
+    }
+
+
+def attn_block_spec(cfg):
+    return {"ln": P(None), "attn": blocks.attn_spec(cfg),
+            "ln2": P(None), "ffn": blocks.ffn_block_spec(cfg)}
+
+
+def _apply_mlp(lp, x, cfg, plan):
+    f = blocks.apply_ffn_block(lp["ffn"], rms_norm(x, lp["ln2"], cfg.norm_eps),
+                               cfg, plan)
+    return x + f
+
+
+def rec_full(lp, x, cfg, plan=None, init_h=None, conv_tail=None):
+    """Full-seq recurrent block + MLP. Returns (x, (h_final, conv_tail))."""
+    xi = rms_norm(x, lp["ln"], cfg.norm_eps)
+    gate = jax.nn.gelu(jnp.einsum("bsd,de->bse", xi, lp["w_gate"]))
+    u = jnp.einsum("bsd,de->bse", xi, lp["w_in"])
+    u, tail = causal_conv(u, lp["conv_w"], lp["conv_b"], conv_tail)
+    y, h = rglru_full(lp["lru"], u, cfg, init_h)
+    out = jnp.einsum("bse,ed->bsd", y * gate, lp["w_out"])
+    x = x + constrain(out, P(BATCH, None, None))
+    return _apply_mlp(lp, x, cfg, plan), (h, tail)
+
+
+def rec_step(lp, x, cfg, h, tail, plan=None):
+    """One-token recurrent block + MLP. x (B,1,D)."""
+    xi = rms_norm(x, lp["ln"], cfg.norm_eps)
+    gate = jax.nn.gelu(jnp.einsum("bsd,de->bse", xi, lp["w_gate"]))
+    u = jnp.einsum("bsd,de->bse", xi, lp["w_in"])
+    u, tail = causal_conv(u, lp["conv_w"], lp["conv_b"], tail)
+    y, h = rglru_step(lp["lru"], u[:, 0], cfg, h)
+    out = jnp.einsum("bse,ed->bsd", y[:, None] * gate, lp["w_out"])
+    x = x + out
+    return _apply_mlp(lp, x, cfg, plan), (h, tail)
+
+
+def attn_full_block(lp, x, cfg, angles, plan=None):
+    a, kv = blocks.attn_full(lp["attn"], rms_norm(x, lp["ln"], cfg.norm_eps),
+                             cfg, angles, causal=True, window=cfg.local_window)
+    x = x + a
+    return _apply_mlp(lp, x, cfg, plan), kv
+
+
+def attn_step_block(lp, x, cfg, angles, kc, vc, kv_pos, pos, plan=None):
+    a, kc, vc = blocks.attn_decode(lp["attn"],
+                                   rms_norm(x, lp["ln"], cfg.norm_eps),
+                                   cfg, angles, kc, vc, kv_pos, pos,
+                                   window=cfg.local_window)
+    x = x + a
+    return _apply_mlp(lp, x, cfg, plan), (kc, vc)
+
+
+# ------------------------------------------------------------- model ----
+
+def _layout(cfg: ModelConfig):
+    """(n_groups, remainder_kinds) for the repeating block pattern."""
+    period = len(cfg.block_pattern)
+    n_groups = cfg.num_layers // period
+    rem = cfg.block_pattern[: cfg.num_layers - n_groups * period]
+    return n_groups, rem
+
+
+def init_params(key, cfg: ModelConfig):
+    dtype = dtype_of(cfg.param_dtype)
+    n_groups, rem = _layout(cfg)
+    ke, kg, kr = jax.random.split(key, 3)
+
+    def init_group(k):
+        ks = jax.random.split(k, len(cfg.block_pattern))
+        return {f"b{i}": (init_rec_block(ks[i], cfg, dtype) if kind == "rec"
+                          else init_attn_block(ks[i], cfg, dtype))
+                for i, kind in enumerate(cfg.block_pattern)}
+
+    params = {
+        "embed": embed_init(ke, cfg.vocab_padded, cfg.d_model, dtype),
+        "out_norm": jnp.zeros((cfg.d_model,), dtype),
+        "groups": stack_layer_params(kg, n_groups, init_group),
+    }
+    krs = jax.random.split(kr, max(len(rem), 1))
+    for i, kind in enumerate(rem):
+        params[f"rem{i}"] = (init_rec_block(krs[i], cfg, dtype)
+                             if kind == "rec"
+                             else init_attn_block(krs[i], cfg, dtype))
+    return params
+
+
+def params_spec(cfg: ModelConfig):
+    _, rem = _layout(cfg)
+    gspec = {f"b{i}": (rec_block_spec(cfg) if kind == "rec"
+                       else attn_block_spec(cfg))
+             for i, kind in enumerate(cfg.block_pattern)}
+    gspec = jax.tree.map(lambda s: P(None, *s), gspec,
+                         is_leaf=lambda s: isinstance(s, P))
+    spec = {"embed": P("model", None), "out_norm": P(None), "groups": gspec}
+    for i, kind in enumerate(rem):
+        spec[f"rem{i}"] = (rec_block_spec(cfg) if kind == "rec"
+                           else attn_block_spec(cfg))
+    return spec
+
+
+def make_model(cfg: ModelConfig) -> dense.Model:
+    dh_half = cfg.d_head // 2
+    pattern = cfg.block_pattern
+    n_groups, rem = _layout(cfg)
+    n_rec_g = sum(1 for k in pattern if k == "rec")
+    n_attn_g = sum(1 for k in pattern if k == "attn")
+    dr, Wc = cfg.d_model, cfg.rglru_conv_width
+    Wloc = cfg.local_window
+    kv, dh = cfg.num_kv_heads, cfg.d_head
+
+    def init_cache(batch, seq_len=0, dtype=None):
+        dtype = dtype or dtype_of(cfg.param_dtype)
+        n_rec = n_groups * n_rec_g + sum(1 for k in rem if k == "rec")
+        n_attn = n_groups * n_attn_g + sum(1 for k in rem if k == "attn")
+        return {
+            "rec_h": jnp.zeros((n_rec, batch, dr), dtype),
+            "rec_conv": jnp.zeros((n_rec, batch, Wc - 1, dr), dtype),
+            "attn_k": jnp.zeros((n_attn, batch, Wloc, kv, dh), dtype),
+            "attn_v": jnp.zeros((n_attn, batch, Wloc, kv, dh), dtype),
+            "kv_pos": jnp.full((batch, Wloc), -1, jnp.int32),
+            "length": jnp.zeros((batch,), jnp.int32),
+        }
+
+    def cache_spec(batch=None, seq_len=None):
+        return {"rec_h": P(None, BATCH, "model"),
+                "rec_conv": P(None, BATCH, None, "model"),
+                "attn_k": P(None, BATCH, None, "model", None),
+                "attn_v": P(None, BATCH, None, "model", None),
+                "kv_pos": P(BATCH, None), "length": P(BATCH)}
+
+    def _group_full(gp, x, angles, plan, collect):
+        """Apply one (rec, rec, attn) group. Returns (x, states)."""
+        states = {}
+        ri = ai = 0
+        for i, kind in enumerate(pattern):
+            lp = gp[f"b{i}"]
+            if kind == "rec":
+                x, st = rec_full(lp, x, cfg, plan)
+                states[f"rec{ri}"] = st
+                ri += 1
+            else:
+                x, kvp = attn_full_block(lp, x, cfg, angles, plan)
+                states[f"attn{ai}"] = kvp
+                ai += 1
+        return x, (states if collect else None)
+
+    def forward(params, batch, plan=None):
+        x = dense.embed_tokens(params, cfg, batch["tokens"])
+        S = x.shape[1]
+        angles = rope_angles(jnp.arange(S), dh_half, cfg.rope_theta)
+
+        def body(h, gp):
+            h, _ = _group_full(gp, h, angles, plan, False)
+            return h, None
+
+        x, _ = blocks.scan_layers(body, x, params["groups"], remat=cfg.remat)
+        for i, kind in enumerate(rem):
+            lp = params[f"rem{i}"]
+            x = (rec_full(lp, x, cfg, plan)[0] if kind == "rec"
+                 else attn_full_block(lp, x, cfg, angles, plan)[0])
+        return dense.lm_logits(params, cfg, x)
+
+    def prefill(params, batch, max_len=None):
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = dense.embed_tokens(params, cfg, tokens)
+        angles = rope_angles(jnp.arange(S), dh_half, cfg.rope_theta)
+
+        def body(h, gp):
+            h, st = _group_full(gp, h, angles, None, True)
+            return h, st
+
+        x, gstates = blocks.scan_layers(body, x, params["groups"],
+                                        remat=cfg.remat)
+        rec_h = [gstates[f"rec{i}"][0] for i in range(n_rec_g)]
+        rec_conv = [gstates[f"rec{i}"][1] for i in range(n_rec_g)]
+        attn_k = [gstates[f"attn{i}"][0] for i in range(n_attn_g)]
+        attn_v = [gstates[f"attn{i}"][1] for i in range(n_attn_g)]
+        # interleave group-major: scanned states are (n_groups, B, ...)
+        rec_h = (jnp.stack(rec_h, 1).reshape(-1, B, dr)
+                 if rec_h else jnp.zeros((0, B, dr), x.dtype))
+        rec_conv = (jnp.stack(rec_conv, 1).reshape(-1, B, Wc - 1, dr)
+                    if rec_conv else jnp.zeros((0, B, Wc - 1, dr), x.dtype))
+
+        def ring(k):
+            # k (G, B, S, kv, dh) -> last Wloc tokens
+            assert S % Wloc == 0 or S < Wloc, (S, Wloc)
+            if S >= Wloc:
+                return k[:, :, S - Wloc:]
+            pad = jnp.zeros(k.shape[:2] + (Wloc - S,) + k.shape[3:], k.dtype)
+            return jnp.concatenate([k, pad], axis=2)
+
+        attn_k = [ring(jnp.stack(attn_k, 1).reshape(-1, B, S, kv, dh))] \
+            if attn_k else []
+        attn_v = [ring(jnp.stack(attn_v, 1).reshape(-1, B, S, kv, dh))] \
+            if attn_v else []
+
+        # remainder layers
+        rem_states = []
+        for i, kind in enumerate(rem):
+            lp = params[f"rem{i}"]
+            if kind == "rec":
+                x, st = rec_full(lp, x, cfg, None)
+                rem_states.append(st)
+            else:
+                x, kvp = attn_full_block(lp, x, cfg, angles, None)
+                attn_k.append(ring(kvp[0][None]))
+                attn_v.append(ring(kvp[1][None]))
+        if rem_states:
+            rec_h = jnp.concatenate(
+                [rec_h] + [st[0][None] for st in rem_states], 0)
+            rec_conv = jnp.concatenate(
+                [rec_conv] + [st[1][None] for st in rem_states], 0)
+
+        if S >= Wloc:
+            kv_pos = jnp.broadcast_to(jnp.arange(S - Wloc, S), (B, Wloc))
+        else:
+            kv_pos = jnp.broadcast_to(
+                jnp.where(jnp.arange(Wloc) < S, jnp.arange(Wloc), -1),
+                (B, Wloc))
+        cache = {
+            "rec_h": rec_h, "rec_conv": rec_conv,
+            "attn_k": (jnp.concatenate(attn_k, 0) if attn_k
+                       else jnp.zeros((0, B, Wloc, kv, dh), x.dtype)),
+            "attn_v": (jnp.concatenate(attn_v, 0) if attn_v
+                       else jnp.zeros((0, B, Wloc, kv, dh), x.dtype)),
+            "kv_pos": kv_pos.astype(jnp.int32),
+            "length": jnp.full((B,), S, jnp.int32),
+        }
+        return dense.lm_logits(params, cfg, x[:, -1:]), cache
+
+    def decode_step(params, tokens, cache, plan=None):
+        pos = cache["length"]
+        x = dense.embed_tokens(params, cfg, tokens)
+        angles = rope_angles(pos[:, None], dh_half, cfg.rope_theta)
+        kv_pos = write_pos(cache["kv_pos"], pos)
+
+        def body(carry, xs):
+            h = carry
+            gp, rh, rc, ak, av = xs
+            new_rh, new_rc, new_ak, new_av = [], [], [], []
+            ri = ai = 0
+            for i, kind in enumerate(pattern):
+                lp = gp[f"b{i}"]
+                if kind == "rec":
+                    h, (hh, tl) = rec_step(lp, h, cfg, rh[ri], rc[ri], plan)
+                    new_rh.append(hh)
+                    new_rc.append(tl)
+                    ri += 1
+                else:
+                    h, (kc, vc) = attn_step_block(lp, h, cfg, angles,
+                                                  ak[ai], av[ai], kv_pos,
+                                                  pos, plan)
+                    new_ak.append(kc)
+                    new_av.append(vc)
+                    ai += 1
+            return h, (jnp.stack(new_rh), jnp.stack(new_rc),
+                       jnp.stack(new_ak), jnp.stack(new_av))
+
+        ng = n_groups
+        rh = cache["rec_h"][: ng * n_rec_g].reshape(ng, n_rec_g, *cache["rec_h"].shape[1:])
+        rc = cache["rec_conv"][: ng * n_rec_g].reshape(ng, n_rec_g, *cache["rec_conv"].shape[1:])
+        ak = cache["attn_k"][: ng * n_attn_g].reshape(ng, n_attn_g, *cache["attn_k"].shape[1:])
+        av = cache["attn_v"][: ng * n_attn_g].reshape(ng, n_attn_g, *cache["attn_v"].shape[1:])
+        x, (rh, rc, ak, av) = blocks.scan_over(
+            body, x, (params["groups"], rh, rc, ak, av))
+        rec_h = rh.reshape(-1, *cache["rec_h"].shape[1:])
+        rec_conv = rc.reshape(-1, *cache["rec_conv"].shape[1:])
+        attn_k = ak.reshape(-1, *cache["attn_k"].shape[1:])
+        attn_v = av.reshape(-1, *cache["attn_v"].shape[1:])
+
+        ri, ai = n_groups * n_rec_g, n_groups * n_attn_g
+        rem_h, rem_c, rem_k, rem_v = [], [], [], []
+        for i, kind in enumerate(rem):
+            lp = params[f"rem{i}"]
+            if kind == "rec":
+                x, (hh, tl) = rec_step(lp, x, cfg, cache["rec_h"][ri],
+                                       cache["rec_conv"][ri], plan)
+                rem_h.append(hh)
+                rem_c.append(tl)
+                ri += 1
+            else:
+                x, (kc, vc) = attn_step_block(lp, x, cfg, angles,
+                                              cache["attn_k"][ai],
+                                              cache["attn_v"][ai],
+                                              kv_pos, pos, plan)
+                rem_k.append(kc)
+                rem_v.append(vc)
+                ai += 1
+        if rem_h:
+            rec_h = jnp.concatenate([rec_h, jnp.stack(rem_h)], 0)
+            rec_conv = jnp.concatenate([rec_conv, jnp.stack(rem_c)], 0)
+        if rem_k:
+            attn_k = jnp.concatenate([attn_k, jnp.stack(rem_k)], 0)
+            attn_v = jnp.concatenate([attn_v, jnp.stack(rem_v)], 0)
+
+        new_cache = dict(cache, rec_h=rec_h, rec_conv=rec_conv,
+                         attn_k=attn_k, attn_v=attn_v, kv_pos=kv_pos,
+                         length=pos + 1)
+        return dense.lm_logits(params, cfg, x), new_cache
+
+    return dense.Model(
+        cfg=cfg,
+        init=lambda key: init_params(key, cfg),
+        param_spec=lambda: params_spec(cfg),
+        forward=forward,
+        prefill=prefill,
+        decode_step=decode_step,
+        init_cache=init_cache,
+        cache_spec=cache_spec,
+    )

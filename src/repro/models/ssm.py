@@ -1,0 +1,291 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060).
+
+Attention-free, FFN-free (d_ff=0): the PowerInfer-2 hot/cold FFN
+technique is inapplicable here (DESIGN.md §Arch-applicability); the
+arch is implemented without it, as the brief requires.
+
+Train/prefill use the chunked SSD algorithm (block-diagonal intra-chunk
+"attention" + low-rank inter-chunk recurrence); decode is the O(1)
+recurrent update h' = exp(dt*A) h + dt*B x, y = C h + D x.
+
+Projections are stored separately (wz/wx/wB/wC/wdt) so the inner
+(d_inner) dim shards cleanly over the mesh 'model' axis; B/C (state dim)
+are replicated — the scan stays collective-free.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import blocks, dense
+from repro.models.modules import (
+    dtype_of, dense_init, embed_init, rms_norm, stack_layer_params)
+from repro.sharding import constrain, BATCH
+
+
+# ------------------------------------------------------------ SSD core ----
+
+def segsum(x):
+    """x (..., l) -> lower-triangular pairwise segment sums (..., l, l)."""
+    l = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    ss = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool), 0)
+    return jnp.where(mask, ss, -jnp.inf)
+
+
+def ssd_chunked(X, A, B, C, chunk: int, init_state=None):
+    """Chunked SSD scan.
+
+    X: (b, s, h, p) inputs (already dt-scaled);  A: (b, s, h) log-decay
+    per step (dt * A);  B, C: (b, s, n) shared across heads (n_groups=1).
+    Returns (Y (b, s, h, p), final_state (b, h, p, n)).
+    """
+    b, s, h, p = X.shape
+    n = B.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    c = s // chunk
+    Xc = X.reshape(b, c, chunk, h, p)
+    # decay accumulations in fp32 (bf16 cumsum over long chunks drifts)
+    Ac = A.reshape(b, c, chunk, h).transpose(0, 3, 1, 2).astype(jnp.float32)
+    Bc = B.reshape(b, c, chunk, n)
+    Cc = C.reshape(b, c, chunk, n)
+    A_cum = jnp.cumsum(Ac, axis=-1)                         # (b,h,c,l)
+
+    # 1. intra-chunk (block-diagonal) term
+    L = jnp.exp(segsum(Ac))                                 # (b,h,c,l,l)
+    Y_diag = jnp.einsum("bcln,bcsn,bhcls,bcshp->bclhp", Cc, Bc, L, Xc)
+
+    # 2. per-chunk end states
+    decay_states = jnp.exp(A_cum[..., -1:] - A_cum)         # (b,h,c,l)
+    states = jnp.einsum("bcln,bhcl,bclhp->bchpn", Bc, decay_states, Xc)
+
+    # 3. inter-chunk recurrence (include initial state as chunk -1)
+    if init_state is None:
+        init_state = jnp.zeros((b, h, p, n), X.dtype)
+    states = jnp.concatenate([init_state[:, None].transpose(0, 1, 2, 3, 4),
+                              states], axis=1)              # (b,c+1,h,p,n)
+    chunk_decay = A_cum[..., -1]                            # (b,h,c)
+    dec = jnp.exp(segsum(jnp.pad(chunk_decay, ((0, 0), (0, 0), (1, 0)))))
+    # dec (b,h,c+1,c+1): weight of chunk-z state at chunk-c boundary
+    new_states = jnp.einsum("bhzc,bchpn->bzhpn", dec, states)
+    prev_states = new_states[:, :-1]                        # (b,c,h,p,n)
+    final_state = new_states[:, -1]
+
+    # 4. state -> output within each chunk
+    state_decay = jnp.exp(A_cum)                            # (b,h,c,l)
+    Y_off = jnp.einsum("bcln,bchpn,bhcl->bclhp", Cc, prev_states, state_decay)
+    Y = (Y_diag + Y_off).reshape(b, s, h, p).astype(X.dtype)
+    return Y, final_state.astype(X.dtype)
+
+
+def ssd_step(state, x, dA, dt, B, C):
+    """One recurrent step. state (b,h,p,n); x (b,h,p); dA (b,h) = dt*A;
+    dt (b,h); B, C (b,n). Returns (state', y (b,h,p))."""
+    decay = jnp.exp(dA)[..., None, None]                    # (b,h,1,1)
+    dBx = jnp.einsum("bh,bhp,bn->bhpn", dt, x, B)
+    state = state * decay + dBx
+    y = jnp.einsum("bhpn,bn->bhp", state, C)
+    return state, y
+
+
+# --------------------------------------------------------- conv helper ----
+
+def causal_conv(x, w, b, tail=None):
+    """Depthwise causal conv. x (B,S,C), w (W,C), b (C,).
+
+    tail (B,W-1,C) carries state across steps; returns (y, new_tail).
+    """
+    W = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], W - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)
+    # (B, S, C) windows: sum_w xp[:, i+w] * w[w]
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(W))
+    new_tail = xp[:, -(W - 1):]
+    return jax.nn.silu(y + b), new_tail
+
+
+# ----------------------------------------------------------- the model ----
+
+def init_layer(key, cfg: ModelConfig, dtype):
+    d, di, n, h = (cfg.d_model, cfg.ssm_d_inner, cfg.ssm_state,
+                   cfg.ssm_heads)
+    W = cfg.ssm_conv_width
+    ks = jax.random.split(key, 8)
+    return {
+        "ln": jnp.zeros((d,), dtype),
+        "wz": dense_init(ks[0], (d, di), dtype),
+        "wx": dense_init(ks[1], (d, di), dtype),
+        "wB": dense_init(ks[2], (d, n), dtype),
+        "wC": dense_init(ks[3], (d, n), dtype),
+        "wdt": dense_init(ks[4], (d, h), dtype),
+        "conv_w": dense_init(ks[5], (W, di + 2 * n), dtype, scale=0.5),
+        "conv_b": jnp.zeros((di + 2 * n,), dtype),
+        "A_log": jnp.zeros((h,), jnp.float32),              # A = -exp(A_log)
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.full((h,), -2.0, jnp.float32),       # softplus ~ 0.12
+        "gn": jnp.zeros((di,), dtype),
+        "wo": dense_init(ks[6], (di, d), dtype),
+    }
+
+
+def layer_spec(cfg: ModelConfig):
+    return {
+        "ln": P(None),
+        "wz": P(None, "model"), "wx": P(None, "model"),
+        "wB": P(None, None), "wC": P(None, None), "wdt": P(None, None),
+        "conv_w": P(None, None), "conv_b": P(None),
+        "A_log": P(None), "D": P(None), "dt_bias": P(None),
+        "gn": P("model"), "wo": P("model", None),
+    }
+
+
+def _proj(lp, x, cfg):
+    """x (B,S,D) -> z, xin, B, C, dt (pre-conv)."""
+    z = jnp.einsum("bsd,de->bse", x, lp["wz"])
+    xin = jnp.einsum("bsd,de->bse", x, lp["wx"])
+    Bm = jnp.einsum("bsd,dn->bsn", x, lp["wB"])
+    Cm = jnp.einsum("bsd,dn->bsn", x, lp["wC"])
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x, lp["wdt"]).astype(jnp.float32)
+        + lp["dt_bias"])
+    return z, xin, Bm, Cm, dt
+
+
+def _layer_full(lp, x, cfg: ModelConfig, init_state=None):
+    """Full-sequence mamba2 block. Returns (out, (final_state, conv_tail))."""
+    b, s, d = x.shape
+    h, p, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    xi = rms_norm(x, lp["ln"], cfg.norm_eps)
+    z, xin, Bm, Cm, dt = _proj(lp, xi, cfg)
+    conv_in = jnp.concatenate([xin, Bm, Cm], axis=-1)
+    conv_out, tail = causal_conv(conv_in, lp["conv_w"], lp["conv_b"])
+    di = cfg.ssm_d_inner
+    xin, Bm, Cm = (conv_out[..., :di], conv_out[..., di:di + n],
+                   conv_out[..., di + n:])
+    A = -jnp.exp(lp["A_log"])                               # (h,)
+    Xh = (xin.reshape(b, s, h, p)
+          * dt[..., None].astype(xin.dtype))                # dt-scaled input
+    Ah = (dt * A).astype(xin.dtype)                         # (b,s,h)
+    Y, fstate = ssd_chunked(Xh, Ah, Bm, Cm, min(cfg.ssm_chunk, s),
+                            init_state)
+    Y = Y + lp["D"].astype(Y.dtype)[None, None, :, None] \
+        * xin.reshape(b, s, h, p)
+    y = Y.reshape(b, s, di) * jax.nn.silu(z)
+    y = rms_norm(y, lp["gn"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, lp["wo"])
+    return x + constrain(out, P(BATCH, None, None)), (fstate, tail)
+
+
+def _layer_step(lp, x, cfg: ModelConfig, state, tail):
+    """One-token mamba2 step. x (B,1,D)."""
+    b = x.shape[0]
+    state_dtype = state.dtype
+    h, p, n, di = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_d_inner
+    xi = rms_norm(x, lp["ln"], cfg.norm_eps)
+    z, xin, Bm, Cm, dt = _proj(lp, xi, cfg)
+    conv_in = jnp.concatenate([xin, Bm, Cm], axis=-1)
+    conv_out, tail = causal_conv(conv_in, lp["conv_w"], lp["conv_b"], tail)
+    xin, Bm, Cm = (conv_out[..., :di], conv_out[..., di:di + n],
+                   conv_out[..., di + n:])
+    A = -jnp.exp(lp["A_log"])
+    dt1 = dt[:, 0]                                          # (b,h)
+    state, yh = ssd_step(state.astype(jnp.float32),
+                         xin[:, 0].reshape(b, h, p), dt1 * A,
+                         dt1.astype(jnp.float32),
+                         Bm[:, 0].astype(jnp.float32),
+                         Cm[:, 0].astype(jnp.float32))
+    yh = yh + lp["D"].astype(yh.dtype)[None, :, None] \
+        * xin[:, 0].reshape(b, h, p).astype(jnp.float32)
+    y = (yh.reshape(b, 1, di)).astype(x.dtype) * jax.nn.silu(z)
+    y = rms_norm(y, lp["gn"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, lp["wo"])
+    return (x + out).astype(x.dtype), (state.astype(state_dtype), tail)
+
+
+def init_params(key, cfg: ModelConfig):
+    dtype = dtype_of(cfg.param_dtype)
+    ke, kl = jax.random.split(key)
+    return {
+        "embed": embed_init(ke, cfg.vocab_padded, cfg.d_model, dtype),
+        "out_norm": jnp.zeros((cfg.d_model,), dtype),
+        "layers": stack_layer_params(kl, cfg.num_layers,
+                                     lambda k: init_layer(k, cfg, dtype)),
+    }
+
+
+def params_spec(cfg: ModelConfig):
+    ls = jax.tree.map(lambda s: P(None, *s), layer_spec(cfg),
+                      is_leaf=lambda s: isinstance(s, P))
+    return {"embed": P("model", None), "out_norm": P(None), "layers": ls}
+
+
+def make_model(cfg: ModelConfig) -> dense.Model:
+    h, p, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    di, W = cfg.ssm_d_inner, cfg.ssm_conv_width
+
+    def init_cache(batch, seq_len=0, dtype=None):
+        dtype = dtype or dtype_of(cfg.param_dtype)
+        return {
+            "ssm": jnp.zeros((cfg.num_layers, batch, h, p, n), dtype),
+            "conv": jnp.zeros((cfg.num_layers, batch, W - 1, di + 2 * n), dtype),
+            "length": jnp.zeros((batch,), jnp.int32),
+        }
+
+    def cache_spec(batch=None, seq_len=None):
+        return {"ssm": P(None, BATCH, "model", None, None),
+                "conv": P(None, BATCH, None, "model"),
+                "length": P(BATCH)}
+
+    def forward(params, batch, plan=None):
+        x = dense.embed_tokens(params, cfg, batch["tokens"])
+
+        def body(hh, lp):
+            hh, _ = _layer_full(lp, hh, cfg)
+            return hh, None
+
+        x, _ = blocks.scan_layers(body, x, params["layers"], remat=cfg.remat)
+        return dense.lm_logits(params, cfg, x)
+
+    def prefill(params, batch, max_len=None):
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = dense.embed_tokens(params, cfg, tokens)
+
+        def body(hh, lp):
+            hh, st = _layer_full(lp, hh, cfg)
+            return hh, st
+
+        x, (states, tails) = blocks.scan_layers(body, x, params["layers"],
+                                                remat=cfg.remat)
+        cache = {"ssm": states, "conv": tails,
+                 "length": jnp.full((B,), S, jnp.int32)}
+        return dense.lm_logits(params, cfg, x[:, -1:]), cache
+
+    def decode_step(params, tokens, cache, plan=None):
+        x = dense.embed_tokens(params, cfg, tokens)
+
+        def body(hh, xs):
+            lp, st, tl = xs
+            hh, (st, tl) = _layer_step(lp, hh, cfg, st, tl)
+            return hh, (st, tl)
+
+        x, (states, tails) = blocks.scan_over(
+            body, x, (params["layers"], cache["ssm"], cache["conv"]))
+        new_cache = dict(cache, ssm=states, conv=tails,
+                         length=cache["length"] + 1)
+        return dense.lm_logits(params, cfg, x), new_cache
+
+    return dense.Model(
+        cfg=cfg,
+        init=lambda key: init_params(key, cfg),
+        param_spec=lambda: params_spec(cfg),
+        forward=forward,
+        prefill=prefill,
+        decode_step=decode_step,
+        init_cache=init_cache,
+        cache_spec=cache_spec,
+    )

@@ -1,0 +1,67 @@
+"""Pure-JAX AdamW with configurable moment dtype.
+
+For the 314B/405B train_4k dry-runs the moments are kept in bf16
+(`moment_dtype='bfloat16'`) so the optimizer state fits the production
+mesh (DESIGN.md §5); small-model training uses fp32 moments.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    moment_dtype: str = "float32"
+    grad_clip: float = 1.0
+
+    def init(self, params):
+        dt = jnp.dtype(self.moment_dtype)
+        zeros = lambda p: jnp.zeros(p.shape, dt)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(self, grads, state, params):
+        step = state["step"] + 1
+        # global-norm clip
+        if self.grad_clip:
+            gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                              for g in jax.tree.leaves(grads)))
+            scale = jnp.minimum(1.0, self.grad_clip / (gn + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+
+        dt = jnp.dtype(self.moment_dtype)
+        b1, b2 = self.b1, self.b2
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g32 = g.astype(jnp.float32)
+            m32 = m.astype(jnp.float32) * b1 + (1 - b1) * g32
+            v32 = v.astype(jnp.float32) * b2 + (1 - b2) * jnp.square(g32)
+            mh = m32 / c1
+            vh = v32 / c2
+            delta = mh / (jnp.sqrt(vh) + self.eps) \
+                + self.weight_decay * p.astype(jnp.float32)
+            return ((p.astype(jnp.float32) - self.lr * delta).astype(p.dtype),
+                    m32.astype(dt), v32.astype(dt))
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, {"m": new_m, "v": new_v, "step": step}

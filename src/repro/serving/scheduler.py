@@ -1,0 +1,61 @@
+"""Continuous-batching scheduler: tracks live sequences, their
+completion (EOS or length), and the resulting effective-batch-size
+timeline that drives the dynamic CPU/NPU adaptation (paper §4.1.3,
+Fig 13: Best-of-N batch shrinks as candidates finish)."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+
+@dataclass
+class Sequence:
+    uid: int
+    prompt_len: int
+    max_new: int
+    generated: list = field(default_factory=list)
+    finished: bool = False
+
+    @property
+    def n_generated(self) -> int:
+        return len(self.generated)
+
+
+class BatchScheduler:
+    """Keeps the active set; reports batch-size changes."""
+
+    def __init__(self, eos_id: Optional[int] = None):
+        self.eos_id = eos_id
+        self.sequences: dict[int, Sequence] = {}
+        self._next_uid = 0
+        self.batch_history: list[int] = []
+
+    def add(self, prompt_len: int, max_new: int) -> Sequence:
+        seq = Sequence(self._next_uid, prompt_len, max_new)
+        self._next_uid += 1
+        self.sequences[seq.uid] = seq
+        return seq
+
+    @property
+    def active(self) -> list:
+        return [s for s in self.sequences.values() if not s.finished]
+
+    @property
+    def batch_size(self) -> int:
+        return len(self.active)
+
+    def step(self, tokens_by_uid: dict):
+        """Record one generated token per active sequence; mark EOS /
+        length completions. Returns uids that finished this step."""
+        done = []
+        for uid, tok in tokens_by_uid.items():
+            seq = self.sequences[uid]
+            seq.generated.append(int(tok))
+            if ((self.eos_id is not None and int(tok) == self.eos_id)
+                    or seq.n_generated >= seq.max_new):
+                seq.finished = True
+                done.append(uid)
+        self.batch_history.append(self.batch_size)
+        return done

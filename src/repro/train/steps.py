@@ -1,0 +1,45 @@
+"""Generic training step over the uniform Model API.
+
+Cross-entropy LM loss with label masking (labels < 0 are ignored —
+used for VLM image positions and padding). Works for every family:
+the batch dict carries whatever the model's forward expects.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import AdamW
+
+
+def lm_loss(logits, labels):
+    """logits (B,S,V), labels (B,S) int32 (-1 = masked)."""
+    mask = (labels >= 0).astype(jnp.float32)
+    labels_safe = jnp.maximum(labels, 0)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels_safe[..., None], axis=-1)[..., 0]
+    return -(ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def make_loss_fn(model):
+    def loss_fn(params, batch):
+        logits = model.forward(params, batch)
+        S_logits = logits.shape[1]
+        labels = batch["labels"]
+        if labels.shape[1] < S_logits:       # VLM: image positions unmasked
+            pad = jnp.full((labels.shape[0], S_logits - labels.shape[1]),
+                           -1, labels.dtype)
+            labels = jnp.concatenate([pad, labels], axis=1)
+        return lm_loss(logits, labels)
+    return loss_fn
+
+
+def make_train_step(model, optimizer: AdamW):
+    loss_fn = make_loss_fn(model)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt_state = optimizer.update(grads, opt_state, params)
+        return params, opt_state, {"loss": loss}
+
+    return train_step

@@ -1,0 +1,121 @@
+"""Attention substrate: flash vs naive oracle, decode vs full,
+sliding window, RoPE / M-RoPE properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import (
+    NEG_INF, apply_rotary, decode_attention, flash_attention, mrope_angles,
+    rope_angles)
+
+
+def naive_attention(q, k, v, causal=True, window=0):
+    B, Sq, H, dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qr = q.reshape(B, Sq, KV, G, dh)
+    s = jnp.einsum("bskgd,btkd->bkgst", qr.astype(jnp.float32),
+                   k.astype(jnp.float32)) * dh ** -0.5
+    i = jnp.arange(Sq)[:, None]
+    j = jnp.arange(k.shape[1])[None, :]
+    m = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        m &= j <= i
+    if window:
+        m &= (i - j) < window
+    s = jnp.where(m[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,btkd->bskgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, dh).astype(q.dtype)
+
+
+@pytest.mark.parametrize("Sq,Skv,H,KV,window", [
+    (64, 64, 4, 2, 0), (128, 128, 8, 8, 0), (64, 64, 4, 1, 16),
+    (256, 256, 4, 2, 64),
+])
+def test_flash_matches_naive(Sq, Skv, H, KV, window):
+    B, dh = 2, 32
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, dh)) * 0.5
+    k = jax.random.normal(ks[1], (B, Skv, KV, dh)) * 0.5
+    v = jax.random.normal(ks[2], (B, Skv, KV, dh)) * 0.5
+    out = flash_attention(q, k, v, causal=True, window=window,
+                          q_block=32, kv_block=32)
+    ref = naive_attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_bidirectional():
+    B, S, H, KV, dh = 2, 64, 4, 4, 32
+    ks = jax.random.split(jax.random.key(1), 3)
+    q = jax.random.normal(ks[0], (B, S, H, dh)) * 0.5
+    k = jax.random.normal(ks[1], (B, S, KV, dh)) * 0.5
+    v = jax.random.normal(ks[2], (B, S, KV, dh)) * 0.5
+    out = flash_attention(q, k, v, causal=False, q_block=16, kv_block=16)
+    ref = naive_attention(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_decode_attention_matches_last_row_of_full():
+    B, S, H, KV, dh = 2, 32, 4, 2, 16
+    ks = jax.random.split(jax.random.key(2), 3)
+    q = jax.random.normal(ks[0], (B, S, H, dh)) * 0.5
+    k = jax.random.normal(ks[1], (B, S, KV, dh)) * 0.5
+    v = jax.random.normal(ks[2], (B, S, KV, dh)) * 0.5
+    full = naive_attention(q, k, v, causal=True)
+    kv_pos = jnp.broadcast_to(jnp.arange(S), (B, S)).astype(jnp.int32)
+    pos = jnp.full((B,), S - 1, jnp.int32)
+    dec = decode_attention(q[:, -1:], k, v, kv_pos, pos)
+    np.testing.assert_allclose(np.asarray(dec[:, 0]),
+                               np.asarray(full[:, -1]), atol=2e-5, rtol=2e-5)
+
+
+def test_decode_attention_ignores_empty_and_future_slots():
+    B, T, H, KV, dh = 1, 16, 2, 1, 8
+    ks = jax.random.split(jax.random.key(3), 3)
+    q = jax.random.normal(ks[0], (B, 1, H, dh))
+    k = jax.random.normal(ks[1], (B, T, KV, dh))
+    v = jax.random.normal(ks[2], (B, T, KV, dh))
+    kv_pos = jnp.where(jnp.arange(T) < 8, jnp.arange(T), -1)[None]
+    pos = jnp.array([7], jnp.int32)
+    out1 = decode_attention(q, k, v, kv_pos.astype(jnp.int32), pos)
+    # corrupt the masked slots: output must not change
+    k2 = k.at[:, 8:].set(99.0)
+    v2 = v.at[:, 8:].set(-99.0)
+    out2 = decode_attention(q, k2, v2, kv_pos.astype(jnp.int32), pos)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2))
+
+
+def test_rotary_preserves_norm_and_relative_phase():
+    B, S, H, dh = 1, 16, 1, 32
+    x = jax.random.normal(jax.random.key(4), (B, S, H, dh))
+    ang = rope_angles(jnp.arange(S), dh // 2, 10000.0)
+    y = apply_rotary(x, ang)
+    # rotation preserves the norm of each (x1_i, x2_i) pair
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(x), axis=-1),
+                               np.linalg.norm(np.asarray(y), axis=-1),
+                               atol=1e-4, rtol=1e-4)
+    # inner products depend only on relative distance
+    q = apply_rotary(x, ang)
+    k = apply_rotary(x, ang)
+    dots = np.einsum("bshd,bthd->st", np.asarray(q), np.asarray(k))
+    # <q_i, k_j> == <q_{i+1}, k_{j+1}> when inputs are identical rows
+    x0 = jnp.broadcast_to(x[:, :1], x.shape)
+    q0 = apply_rotary(x0, ang)
+    d = np.einsum("bshd,bthd->st", np.asarray(q0), np.asarray(q0))
+    np.testing.assert_allclose(np.diag(d, 1)[:-1], np.diag(d, 1)[1:],
+                               atol=1e-3, rtol=1e-3)
+
+
+def test_mrope_reduces_to_rope_when_streams_equal():
+    S, dhh = 8, 32
+    pos = jnp.arange(S)[None]                      # (B=1, S)
+    pos3 = jnp.stack([pos, pos, pos])
+    sections = (8, 12, 12)
+    a3 = mrope_angles(pos3, sections, 10000.0)
+    a1 = rope_angles(pos, dhh, 10000.0)
+    np.testing.assert_allclose(np.asarray(a3), np.asarray(a1),
+                               atol=1e-5, rtol=1e-5)

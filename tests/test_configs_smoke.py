@@ -1,0 +1,65 @@
+"""Per-architecture smoke tests (deliverable f).
+
+For each of the 10 assigned architectures: instantiate the REDUCED
+same-family variant (2 layers, d_model<=512, <=4 experts) and run one
+forward pass + one train step + one decode step on CPU, asserting
+output shapes and finiteness. Full configs are exercised only via the
+dry-run (launch/dryrun.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny_batch
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.models.model import build_model
+from repro.optim.adamw import AdamW
+from repro.train.steps import make_train_step
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_reduced_forward_and_train_step(arch):
+    cfg = get_config(arch).reduced()
+    assert cfg.num_layers <= len(cfg.block_pattern) + 2 if cfg.block_pattern \
+        else cfg.num_layers == 2
+    assert cfg.d_model <= 512
+    if cfg.num_experts:
+        assert cfg.num_experts <= 4
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    B, S = 2, 32
+    batch = tiny_batch(cfg, B, S, with_labels=True)
+
+    logits = jax.jit(lambda p, b: model.forward(p, b))(params, batch)
+    S_out = S if cfg.family != "vlm" else S + cfg.num_image_tokens
+    assert logits.shape == (B, S_out, cfg.vocab_padded)
+    assert bool(jnp.isfinite(logits).all()), f"{arch}: NaN/Inf in logits"
+
+    opt = AdamW(lr=1e-3)
+    step = jax.jit(make_train_step(model, opt))
+    params2, _, metrics = step(params, opt.init(params), batch)
+    assert bool(jnp.isfinite(metrics["loss"])), f"{arch}: NaN loss"
+    # params actually changed
+    changed = any(
+        not np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(params2)))
+    assert changed
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_reduced_prefill_decode(arch):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    B, S = 2, 32
+    batch = tiny_batch(cfg, B, S)
+    T = S + 4 + (cfg.num_image_tokens if cfg.family == "vlm" else 0)
+    lg, cache = jax.jit(lambda p, b: model.prefill(p, b, max_len=T))(
+        params, batch)
+    assert lg.shape == (B, 1, cfg.vocab_padded)
+    tok = batch["tokens"][:, -1:]
+    lg2, cache2 = jax.jit(model.decode_step)(params, jnp.asarray(tok), cache)
+    assert lg2.shape == (B, 1, cfg.vocab_padded)
+    assert bool(jnp.isfinite(lg2).all())
+    S_cache = S + (cfg.num_image_tokens if cfg.family == "vlm" else 0)
+    assert int(cache2["length"][0]) == S_cache + 1

@@ -1,0 +1,120 @@
+"""Distribution tests in a subprocess with 8 forced host devices
+(device count locks at first jax init, so the main test process stays
+single-device)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_in_subprocess(body: str, timeout=420):
+    prog = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+    """) + textwrap.dedent(body)
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    r = subprocess.run([sys.executable, "-c", prog], capture_output=True,
+                       text=True, timeout=timeout, env=env)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout
+
+
+def test_shard_map_cold_path_matches_local_8dev():
+    out = run_in_subprocess("""
+        from repro.core.sparse_ffn import init_ffn, ffn_hybrid
+        from repro.core.clusters import HybridPlan
+        D, N, cs, G = 64, 512, 32, 4
+        params = init_ffn(jax.random.key(0), D, N, "relu2", jnp.float32,
+                          predictor_rank=16)
+        x = jax.random.normal(jax.random.key(1), (2, D)) * 0.5
+        plan = HybridPlan(n_hot=128, k_cold=64, groups=G, cluster_size=cs)
+        y_local = ffn_hybrid(params, x, "relu2", "relu", plan)
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        with jax.set_mesh(mesh):
+            spec = {"w": NamedSharding(mesh, P("model", None, None)),
+                    "pred": {"A": NamedSharding(mesh, P(None, None)),
+                             "B": NamedSharding(mesh, P(None, "model"))}}
+            ps = jax.tree.map(jax.device_put, params, spec)
+            y_sm = jax.jit(lambda p, xx: ffn_hybrid(
+                p, xx, "relu2", "relu", plan))(ps, x)
+        np.testing.assert_allclose(np.asarray(y_sm), np.asarray(y_local),
+                                   atol=1e-3, rtol=1e-3)
+        print("OK shard_map")
+    """)
+    assert "OK shard_map" in out
+
+
+def test_sharded_train_step_matches_single_device():
+    out = run_in_subprocess("""
+        from repro.configs import get_config
+        from repro.models.model import build_model
+        from repro.optim.adamw import AdamW
+        from repro.train.steps import make_train_step
+        from repro.launch.input_specs import param_specs
+
+        cfg = get_config("smollm-135m").reduced()
+        model = build_model(cfg)
+        opt = AdamW(lr=1e-3)
+        params = model.init(jax.random.key(0))
+        state = opt.init(params)
+        rng = np.random.default_rng(0)
+        batch = {"tokens": rng.integers(0, cfg.vocab_size, (4, 32)).astype(np.int32),
+                 "labels": rng.integers(0, cfg.vocab_size, (4, 32)).astype(np.int32)}
+        step = make_train_step(model, opt)
+        _, _, m1 = jax.jit(step)(params, state, batch)
+
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        with jax.set_mesh(mesh):
+            specs = param_specs(model, cfg, mesh)
+            ps = jax.tree.map(lambda a, s: jax.device_put(a, s.sharding),
+                              params, specs)
+            ss = opt.init(ps)
+            b = {k: jax.device_put(v, NamedSharding(mesh, P("data", None)))
+                 for k, v in batch.items()}
+            _, _, m2 = jax.jit(step)(ps, ss, b)
+        np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                                   atol=1e-3, rtol=1e-4)
+        print("OK sharded train", float(m1["loss"]), float(m2["loss"]))
+    """)
+    assert "OK sharded train" in out
+
+
+def test_sharded_moe_forward_matches_single_device():
+    out = run_in_subprocess("""
+        from repro.configs import get_config
+        from repro.models.model import build_model
+        from repro.launch.input_specs import param_specs
+
+        cfg = get_config("deepseek-moe-16b").reduced().replace(
+            moe_capacity_factor=8.0, moe_dispatch_groups=2)
+        model = build_model(cfg)
+        params = model.init(jax.random.key(0))
+        rng = np.random.default_rng(0)
+        batch = {"tokens": rng.integers(0, cfg.vocab_size,
+                                        (4, 32)).astype(np.int32)}
+        y1 = jax.jit(lambda p, b: model.forward(p, b))(params, batch)
+
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        with jax.set_mesh(mesh):
+            specs = param_specs(model, cfg, mesh)
+            ps = jax.tree.map(lambda a, s: jax.device_put(a, s.sharding),
+                              params, specs)
+            b = {"tokens": jax.device_put(
+                batch["tokens"], NamedSharding(mesh, P("data", None)))}
+            y2 = jax.jit(lambda p, bb: model.forward(p, bb))(ps, b)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                                   atol=2e-3, rtol=2e-3)
+        print("OK sharded moe")
+    """)
+    assert "OK sharded moe" in out

@@ -1,0 +1,87 @@
+"""Pallas kernel validation (deliverable c): shape/dtype sweeps against
+the pure-jnp oracles in kernels/ref.py, interpret=True on CPU."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ops import (cluster_gather_ffn, cluster_gather_ffn_grouped,
+                               dense_ffn)
+from repro.kernels.ref import cluster_gather_ffn_ref, dense_ffn_ref
+
+ACTS = [("silu", 3), ("relu2", 3), ("gelu", 2), ("geglu", 3)]
+SHAPES = [(1, 64, 256, 32), (4, 128, 512, 64), (8, 256, 1024, 128),
+          (2, 384, 768, 128)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _tol(dtype):
+    return dict(atol=5e-2, rtol=5e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=2e-4, rtol=2e-4)
+
+
+@pytest.mark.parametrize("act,R", ACTS)
+@pytest.mark.parametrize("B,D,N,cs", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_cluster_gather_ffn_sweep(act, R, B, D, N, cs, dtype):
+    kx, kw, ki = jax.random.split(jax.random.key(B * N + cs), 3)
+    x = (jax.random.normal(kx, (B, D)) * 0.5).astype(dtype)
+    w = (jax.random.normal(kw, (N, R, D)) * 0.1).astype(dtype)
+    n_clusters = N // cs
+    k = max(1, n_clusters // 2)
+    idx = jax.random.permutation(ki, n_clusters)[:k].astype(jnp.int32)
+    y = cluster_gather_ffn(x, w, idx, activation=act, cluster_size=cs)
+    yr = cluster_gather_ffn_ref(x, w, idx, activation=act, cluster_size=cs)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("act,R", ACTS[:2])
+@pytest.mark.parametrize("B,D,N,cs", SHAPES[:3])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_dense_ffn_sweep(act, R, B, D, N, cs, dtype):
+    kx, kw = jax.random.split(jax.random.key(7))
+    x = (jax.random.normal(kx, (B, D)) * 0.5).astype(dtype)
+    w = (jax.random.normal(kw, (N, R, D)) * 0.1).astype(dtype)
+    y = dense_ffn(x, w, activation=act, block_n=cs)
+    yr = dense_ffn_ref(x, w, activation=act)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), **_tol(dtype))
+
+
+def test_gather_equals_dense_when_all_selected():
+    """Selecting every cluster must reproduce the dense FFN exactly."""
+    B, D, N, cs = 2, 128, 512, 64
+    x = jax.random.normal(jax.random.key(0), (B, D)) * 0.5
+    w = jax.random.normal(jax.random.key(1), (N, 3, D)) * 0.1
+    idx = jnp.arange(N // cs, dtype=jnp.int32)
+    y = cluster_gather_ffn(x, w, idx, activation="silu", cluster_size=cs)
+    yd = dense_ffn(x, w, activation="silu", block_n=cs)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yd),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_gather_order_invariance():
+    """Cluster accumulation is order-independent (fp32 accumulator)."""
+    B, D, N, cs = 2, 128, 512, 64
+    x = jax.random.normal(jax.random.key(0), (B, D)) * 0.5
+    w = jax.random.normal(jax.random.key(1), (N, 3, D)) * 0.1
+    idx = jnp.array([0, 2, 5, 7], jnp.int32)
+    y1 = cluster_gather_ffn(x, w, idx, activation="silu", cluster_size=cs)
+    y2 = cluster_gather_ffn(x, w, idx[::-1], activation="silu",
+                            cluster_size=cs)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_grouped_matches_per_group_sum():
+    G, nc_g, cs, D, B = 3, 4, 32, 64, 2
+    wc = jax.random.normal(jax.random.key(2), (G, nc_g, cs, 3, D)) * 0.1
+    cidx = jnp.array([[0, 2], [1, 3], [0, 1]], jnp.int32)
+    x = jax.random.normal(jax.random.key(3), (B, D)) * 0.5
+    y = cluster_gather_ffn_grouped(x, wc, cidx, activation="silu")
+    ref = sum(cluster_gather_ffn_ref(x, wc[g].reshape(nc_g * cs, 3, D),
+                                     cidx[g], activation="silu",
+                                     cluster_size=cs) for g in range(G))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(ref),
+                               atol=1e-4, rtol=1e-4)

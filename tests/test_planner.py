@@ -1,0 +1,108 @@
+"""Offline planner (paper §5): profiling, classification, permutation."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core.planner import (
+    ExecutionPlan, HardwareProfile, build_plan, classify_neurons,
+    permute_ffn_params, profile_activations, synthetic_frequencies)
+from repro.core.sparse_ffn import ffn_dense
+from repro.models.dense import make_model
+
+
+@pytest.fixture(scope="module")
+def relu_model():
+    cfg = get_config("smollm-135m").reduced().replace(activation="relu2")
+    cfg = cfg.replace(sparse_ffn=dataclasses.replace(cfg.sparse_ffn,
+                                                     mode="relu"))
+    m = make_model(cfg)
+    params = m.init(jax.random.key(0))
+    return cfg, m, params
+
+
+def test_profile_counts_bounded(relu_model):
+    cfg, m, params = relu_model
+    batches = [jax.random.randint(jax.random.key(i), (2, 32), 0,
+                                  cfg.vocab_size) for i in range(2)]
+    counts, n_tok = profile_activations(params, cfg, batches)
+    assert counts.shape == (cfg.num_layers, cfg.d_ff)
+    assert n_tok == 2 * 2 * 32
+    assert (counts >= 0).all() and (counts <= n_tok).all()
+
+
+def test_classification_hot_grows_with_batch():
+    cfg = get_config("smollm-135m").reduced()
+    freqs = synthetic_frequencies(cfg, seed=1)
+    order, sf, plans = classify_neurons(freqs, cfg, HardwareProfile())
+    hots = [plans[b].n_hot for b in sorted(plans)]
+    assert hots == sorted(hots), "hot prefix must grow with batch size"
+    # permutation is a bijection per layer
+    for l in range(order.shape[0]):
+        assert sorted(order[l].tolist()) == list(range(order.shape[1]))
+    # frequencies sorted descending after permutation
+    assert (np.diff(sf, axis=1) <= 1e-9).all()
+
+
+def test_io_cap_limits_hot_set():
+    cfg = get_config("smollm-135m").reduced()
+    freqs = np.full((cfg.num_layers, cfg.d_ff), 0.9, np.float32)
+    slow = HardwareProfile(seq_bw=1e4, attn_time_s=1e-6)   # ~0 capacity
+    _, _, plans = classify_neurons(freqs, cfg, slow)
+    fast = HardwareProfile(seq_bw=1e12, attn_time_s=1.0)
+    _, _, plans_fast = classify_neurons(freqs, cfg, fast)
+    assert plans[32].n_hot <= plans_fast[32].n_hot
+
+
+def test_permutation_preserves_dense_ffn(relu_model):
+    cfg, m, params = relu_model
+    plan = build_plan(cfg)
+    p2 = permute_ffn_params(params, plan.neuron_order)
+    x = jax.random.normal(jax.random.key(5), (2, 8, cfg.d_model)) * 0.1
+    for l in range(cfg.num_layers):
+        l0 = jax.tree.map(lambda a: a[l], params["layers"]["ffn"])
+        l1 = jax.tree.map(lambda a: a[l], p2["layers"]["ffn"])
+        y0 = ffn_dense(l0, x, cfg.activation)
+        y1 = ffn_dense(l1, x, cfg.activation)
+        np.testing.assert_allclose(np.asarray(y0), np.asarray(y1),
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_permutation_aligns_predictor(relu_model):
+    """After permutation, predictor scores must follow neurons."""
+    cfg, m, params = relu_model
+    from repro.core.predictor import predict_scores
+    plan = build_plan(cfg)
+    p2 = permute_ffn_params(params, plan.neuron_order)
+    x = jax.random.normal(jax.random.key(6), (3, cfg.d_model)) * 0.1
+    s0 = np.asarray(predict_scores(
+        jax.tree.map(lambda a: a[0], params["layers"]["ffn"])["pred"], x))
+    s1 = np.asarray(predict_scores(
+        jax.tree.map(lambda a: a[0], p2["layers"]["ffn"])["pred"], x))
+    np.testing.assert_allclose(s1, s0[:, plan.neuron_order[0]],
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_plan_save_load_roundtrip(tmp_path):
+    cfg = get_config("smollm-135m").reduced()
+    plan = build_plan(cfg)
+    f = tmp_path / "plan.json"
+    plan.save(f)
+    plan2 = ExecutionPlan.load(f)
+    assert plan2.plans == plan.plans
+    assert np.array_equal(plan2.neuron_order, plan.neuron_order)
+    assert plan2.hardware == plan.hardware
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 64))
+def test_plan_for_batch_monotone(b):
+    cfg = get_config("smollm-135m").reduced()
+    plan = build_plan(cfg)
+    p = plan.plan_for_batch(b)
+    p2 = plan.plan_for_batch(min(b * 2, 64))
+    assert p2.n_hot >= p.n_hot

@@ -1,0 +1,93 @@
+"""Quantization (paper §7.6): scheme error ordering + roundtrips."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.quant.quantize import (
+    bundle_nbytes_int4, dequantize_groupwise_int4, dequantize_mixed,
+    dequantize_per_channel_int4, quant_error, quantize_groupwise_int4,
+    quantize_mixed, quantize_per_channel_int4)
+
+
+@pytest.fixture
+def w_outliers():
+    """Weights with heavy outliers — the regime where QNN-style
+    per-channel INT4 collapses (paper Table 7)."""
+    key = jax.random.key(0)
+    w = jax.random.normal(key, (64, 256)) * 0.02
+    mask = jax.random.bernoulli(jax.random.key(1), 0.005, w.shape)
+    return jnp.where(mask, w * 50.0, w)
+
+
+def test_error_ordering_matches_paper(w_outliers):
+    """group32 (llama.cpp) and mixed (PowerInfer-2) must both beat plain
+    per-channel (QNN) on outlier-heavy weights."""
+    e_group = quant_error(w_outliers, "group32", group=32)
+    e_chan = quant_error(w_outliers, "per_channel")
+    e_mixed = quant_error(w_outliers, "mixed", outlier_frac=0.01)
+    assert e_group < e_chan
+    assert e_mixed < e_chan
+    assert e_mixed < 0.25
+
+
+def test_groupwise_roundtrip_bounded():
+    w = jax.random.normal(jax.random.key(2), (32, 128)) * 0.1
+    deq = dequantize_groupwise_int4(quantize_groupwise_int4(w, 32))
+    err = np.abs(np.asarray(deq - w))
+    scale = np.abs(np.asarray(w)).reshape(32, 4, 32).max(-1) / 7.0
+    assert (err.reshape(32, 4, 32) <= scale[..., None] * 0.5 + 1e-7).all()
+
+
+def test_per_channel_int8_range():
+    w = jax.random.normal(jax.random.key(3), (16, 64))
+    q = quantize_per_channel_int4(w)
+    assert q["q"].dtype == jnp.int8
+    assert int(jnp.max(q["q"])) <= 7 and int(jnp.min(q["q"])) >= -8
+
+
+def test_mixed_preserves_outliers_exactly_ish(w_outliers):
+    qw = quantize_mixed(w_outliers, outlier_frac=0.01)
+    deq = dequantize_mixed(qw)
+    mask = np.asarray(qw["outlier_mask"])
+    w = np.asarray(w_outliers)
+    rel = np.abs(np.asarray(deq)[mask] - w[mask]) / (np.abs(w[mask]) + 1e-9)
+    assert rel.max() < 0.002      # FP16-preserved outliers: <0.2% error
+
+
+def test_bundle_bytes_matches_paper():
+    """§4.4: 4-bit Gate-Up-Down bundle for d=4096 is ~7.5KB -> 8KB."""
+    nb = bundle_nbytes_int4(4096, gated=True)
+    assert nb == 8192
+
+
+def test_int8_kv_cache_roundtrip():
+    """Beyond-paper: int8 KV cache halves decode cache traffic with
+    sub-1% roundtrip error and near-identical attention outputs."""
+    from repro.quant.quantize import quantize_kv, dequantize_kv, \
+        kv_quant_error
+    from repro.models.attention import decode_attention
+    import jax.numpy as jnp
+
+    ks = jax.random.split(jax.random.key(0), 3)
+    B, T, KV, dh, H = 2, 64, 2, 32, 4
+    k = jax.random.normal(ks[0], (B, T, KV, dh))
+    v = jax.random.normal(ks[1], (B, T, KV, dh))
+    assert kv_quant_error(k) < 0.01
+    q = jax.random.normal(ks[2], (B, 1, H, dh))
+    kv_pos = jnp.broadcast_to(jnp.arange(T), (B, T)).astype(jnp.int32)
+    pos = jnp.full((B,), T - 1, jnp.int32)
+    ref = decode_attention(q, k, v, kv_pos, pos)
+    kq = dequantize_kv(quantize_kv(k)).astype(k.dtype)
+    vq = dequantize_kv(quantize_kv(v)).astype(v.dtype)
+    out = decode_attention(q, kq, vq, kv_pos, pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=5e-3, rtol=5e-3)
+
+
+def test_int8_kv_scale_shapes():
+    from repro.quant.quantize import quantize_kv
+    k = jax.random.normal(jax.random.key(1), (3, 8, 2, 16))
+    qkv = quantize_kv(k)
+    assert qkv["q"].shape == k.shape and qkv["q"].dtype.name == "int8"
+    assert qkv["scale"].shape == (3, 8, 2, 1)

@@ -1,0 +1,161 @@
+"""The paper's technique: hybrid hot/cold FFN correctness properties."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SparseFFNConfig
+from repro.core.clusters import HybridPlan, make_plan, scale_plan_for_batch
+from repro.core.sparse_ffn import ffn_dense, ffn_hybrid, init_ffn
+from repro.core.predictor import predict_scores
+
+
+def _params(D=64, N=512, act="relu2", rank=16, seed=0):
+    return init_ffn(jax.random.key(seed), D, N, act, jnp.float32,
+                    predictor_rank=rank)
+
+
+def test_hybrid_equals_dense_at_full_budget():
+    """hot=100% makes the hybrid path exactly the dense path."""
+    D, N = 64, 512
+    p = _params(D, N)
+    x = jax.random.normal(jax.random.key(1), (4, D)) * 0.5
+    plan = HybridPlan(n_hot=N, k_cold=0, groups=1, cluster_size=64)
+    yh = ffn_hybrid(p, x, "relu2", "relu", plan)
+    yd = ffn_dense(p, x, "relu2")
+    np.testing.assert_allclose(np.asarray(yh), np.asarray(yd),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_hybrid_cold_only_selects_top_clusters():
+    """With hot=0, the computed output must equal manually gathering the
+    predictor's top clusters."""
+    D, N, cs = 64, 512, 64
+    p = _params(D, N)
+    x = jax.random.normal(jax.random.key(2), (2, D)) * 0.5
+    plan = HybridPlan(n_hot=0, k_cold=128, groups=1, cluster_size=cs)
+    y = ffn_hybrid(p, x, "relu2", "relu", plan)
+    scores = predict_scores(p["pred"], x)
+    union = np.asarray(scores).max(0)
+    cscore = union.reshape(N // cs, cs).max(-1)
+    top = np.argsort(-cscore)[:2]
+    w = np.asarray(p["w"]).reshape(N // cs, cs, 3, D)
+    xs = np.asarray(x)
+    g = np.einsum("bd,kd->bk", xs, w[top].reshape(-1, 3, D)[:, 0])
+    u = np.einsum("bd,kd->bk", xs, w[top].reshape(-1, 3, D)[:, 1])
+    h = np.square(np.maximum(g, 0)) * u
+    ref = np.einsum("bk,kd->bd", h, w[top].reshape(-1, 3, D)[:, 2])
+    np.testing.assert_allclose(np.asarray(y), ref, atol=1e-3, rtol=1e-3)
+
+
+def test_hybrid_approaches_dense_as_budget_grows():
+    """Approximation error must fall monotonically-ish with cold budget
+    (relu2 zeros make the missing clusters mostly irrelevant)."""
+    D, N, cs = 64, 1024, 64
+    p = _params(D, N)
+    x = jax.random.normal(jax.random.key(3), (4, D)) * 0.5
+    yd = np.asarray(ffn_dense(p, x, "relu2"))
+    errs = []
+    for ratio in (0.125, 0.25, 0.5, 1.0):
+        k = int(N * ratio)
+        plan = HybridPlan(n_hot=0, k_cold=k, groups=1, cluster_size=cs)
+        yh = np.asarray(ffn_hybrid(p, x, "relu2", "relu", plan))
+        errs.append(np.linalg.norm(yh - yd) / np.linalg.norm(yd))
+    assert errs[-1] < 1e-5                       # full budget == dense
+    assert errs[0] > errs[-1]
+    assert errs[1] >= errs[2] - 1e-6
+
+
+def test_grouped_equals_ungrouped():
+    """Group partitioning (sharding) must not change the selected-cluster
+    set when scores are spread evenly — validated via equal budgets."""
+    D, N, cs = 64, 512, 32
+    p = _params(D, N, rank=8, seed=5)
+    x = jax.random.normal(jax.random.key(6), (2, D)) * 0.5
+    # all clusters selected -> grouping irrelevant
+    plan1 = HybridPlan(n_hot=0, k_cold=N, groups=1, cluster_size=cs)
+    plan4 = HybridPlan(n_hot=0, k_cold=N // 4, groups=4, cluster_size=cs)
+    y1 = ffn_hybrid(p, x, "relu2", "relu", plan1)
+    y4 = ffn_hybrid(p, x, "relu2", "relu", plan4)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y4),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_pallas_backend_matches_jnp():
+    D, N = 64, 512
+    p = _params(D, N)
+    x = jax.random.normal(jax.random.key(7), (2, D)) * 0.5
+    pj = make_plan(N, 0.25, 0.25, 64, groups=2)
+    pp = dataclasses.replace(pj, backend="pallas")
+    yj = ffn_hybrid(p, x, "relu2", "relu", pj)
+    yp = ffn_hybrid(p, x, "relu2", "relu", pp)
+    np.testing.assert_allclose(np.asarray(yj), np.asarray(yp),
+                               atol=1e-3, rtol=1e-3)
+
+
+def test_make_plan_alignment():
+    for N, hot, cold, cs, g in [(1536, 0.25, 0.15, 64, 16),
+                                (24576, 0.25, 0.1, 128, 16),
+                                (512, 0.5, 0.5, 32, 4)]:
+        plan = make_plan(N, hot, cold, cs, groups=g)
+        n_cold = N - plan.n_hot
+        assert n_cold % (g * cs) == 0
+        assert plan.k_cold % cs == 0
+        assert 0 <= plan.n_hot <= N
+
+
+def test_batch_scaling_grows_hot_share():
+    base = make_plan(4096, 0.2, 0.1, 128, groups=1)
+    hots = [scale_plan_for_batch(base, 4096, b, 128).n_hot
+            for b in (1, 4, 16, 32)]
+    assert hots == sorted(hots)
+    assert hots[-1] > hots[0]
+
+
+def test_return_indices_shape():
+    D, N, cs = 64, 512, 64
+    p = _params(D, N)
+    x = jax.random.normal(jax.random.key(8), (2, D)) * 0.5
+    plan = HybridPlan(n_hot=128, k_cold=128, groups=2, cluster_size=cs)
+    y, cidx = ffn_hybrid(p, x, "relu2", "relu", plan, return_indices=True)
+    assert cidx.shape == (2, 2)                 # (groups, clusters/group)
+    nc_g = (N - plan.n_hot) // plan.groups // cs
+    assert (np.asarray(cidx) >= 0).all() and (np.asarray(cidx) < nc_g).all()
+
+
+def test_shard_map_cold_path_matches_local():
+    """§Perf C4: the shard-local cold path must equal the grouped path.
+
+    Runs in a subprocess-free way by spawning a mesh of host devices is
+    not possible here (device count locks at first jax use), so this
+    test exercises the code path only when the session already has >=4
+    devices; otherwise it checks the selector logic.
+    """
+    import jax
+    from repro.core.sparse_ffn import _use_shard_map
+
+    if jax.device_count() < 4:
+        # no mesh in context -> never selects shard_map
+        assert _use_shard_map(4) is False
+        return
+
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    D, N, cs, G = 64, 512, 32, 4
+    params = _params(D, N)
+    x = jax.random.normal(jax.random.key(1), (2, D)) * 0.5
+    plan = HybridPlan(n_hot=128, k_cold=64, groups=G, cluster_size=cs)
+    y_local = ffn_hybrid(params, x, "relu2", "relu", plan)
+    mesh = jax.make_mesh((1, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    with jax.set_mesh(mesh):
+        pspec = {"w": NamedSharding(mesh, P("model", None, None)),
+                 "pred": {"A": NamedSharding(mesh, P(None, None)),
+                          "B": NamedSharding(mesh, P(None, "model"))}}
+        params_s = jax.tree.map(jax.device_put, params, pspec)
+        y_sm = jax.jit(lambda p, xx: ffn_hybrid(p, xx, "relu2", "relu",
+                                                plan))(params_s, x)
+    np.testing.assert_allclose(np.asarray(y_sm), np.asarray(y_local),
+                               atol=1e-3, rtol=1e-3)

@@ -1,0 +1,78 @@
+"""Substrate: optimizer, data pipeline, checkpointing, train loop."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.ckpt import restore_checkpoint, save_checkpoint
+from repro.data.pipeline import DataConfig, SyntheticTokens
+from repro.optim.adamw import AdamW
+
+
+def test_adamw_reduces_quadratic():
+    opt = AdamW(lr=0.1, weight_decay=0.0)
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.sum(jnp.square(p["w"]))
+
+    for _ in range(100):
+        g = jax.grad(loss)(params)
+        params, state = opt.update(g, state, params)
+    assert float(loss(params)) < 1e-2
+
+
+def test_adamw_bf16_moments_dtype():
+    opt = AdamW(moment_dtype="bfloat16")
+    params = {"w": jnp.zeros((4, 4))}
+    st = opt.init(params)
+    assert st["m"]["w"].dtype == jnp.bfloat16
+    g = {"w": jnp.ones((4, 4))}
+    p2, st2 = opt.update(g, st, params)
+    assert st2["m"]["w"].dtype == jnp.bfloat16
+    assert p2["w"].dtype == params["w"].dtype
+
+
+def test_grad_clip_bounds_update():
+    opt = AdamW(lr=1.0, grad_clip=1.0, weight_decay=0.0)
+    params = {"w": jnp.zeros((2,))}
+    st = opt.init(params)
+    huge = {"w": jnp.array([1e9, -1e9])}
+    p2, _ = opt.update(huge, st, params)
+    assert bool(jnp.isfinite(p2["w"]).all())
+
+
+def test_data_pipeline_deterministic():
+    cfg = DataConfig(vocab_size=128, seq_len=16, batch_size=4, seed=7)
+    b1 = SyntheticTokens(cfg).batch()
+    b2 = SyntheticTokens(cfg).batch()
+    assert np.array_equal(b1["tokens"], b2["tokens"])
+    assert b1["tokens"].shape == (4, 16)
+    # labels are next-token shifted from the same stream
+    assert (b1["tokens"] < 128).all() and (b1["tokens"] >= 0).all()
+
+
+def test_data_pipeline_zipf_skew():
+    cfg = DataConfig(vocab_size=1000, seq_len=256, batch_size=16, seed=0)
+    toks = SyntheticTokens(cfg).batch()["tokens"].reshape(-1)
+    counts = np.bincount(toks, minlength=1000)
+    top10 = counts[np.argsort(-counts)[:10]].sum()
+    assert top10 / counts.sum() > 0.3     # heavy head, like real text
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "nested": {"b": jnp.ones((4,), jnp.int32)}}
+    save_checkpoint(str(tmp_path / "ck"), tree, step=7)
+    restored, step = restore_checkpoint(str(tmp_path / "ck"), tree)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_train_loss_decreases():
+    from repro.launch.train import train
+    _, losses = train("smollm-135m", steps=30, batch_size=4, seq_len=32,
+                      reduced=True, lr=2e-3, log_every=0)
+    assert losses[-1] < losses[0] * 0.8, (losses[0], losses[-1])
