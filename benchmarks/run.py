@@ -16,6 +16,7 @@ MODULES = [
     ("fig10_memory", "benchmarks.bench_memory"),
     ("table5_latency", "benchmarks.bench_latency"),
     ("fig13_bon", "benchmarks.bench_bon"),
+    ("serving_stream", "benchmarks.bench_serving"),
     ("fig14_ablation", "benchmarks.bench_ablation"),
     ("table4_io_split", "benchmarks.bench_io_split"),
     ("table7_accuracy", "benchmarks.bench_accuracy"),

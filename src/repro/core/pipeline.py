@@ -56,24 +56,41 @@ class PipelineResult:
 
 def _greedy_compute(tasks, ready, workers, floor=0.0):
     """List-schedule tasks on workers; each task starts at
-    max(ready[task], worker_free, floor). Returns (busy, completion)."""
-    pending = list(tasks)
+    max(ready[task], worker_free, floor). Returns (busy, completion).
+
+    Each round picks the task minimizing (start, matrix, cluster) with
+    start = max(ready, earliest-free worker, floor) and assigns it to
+    that worker. Two heaps — tasks keyed by ready time and workers
+    keyed by free time — make each pick O(log n) instead of the naive
+    rescan of all pending tasks (O(n^2 * W) overall); the schedule, and
+    therefore the makespan, is identical.
+    """
     busy = 0.0
     last = floor
-    while pending:
-        best = None
-        for task in pending:
-            wi = min(range(len(workers)), key=lambda i: workers[i])
-            start = max(ready[(task.matrix, task.cluster)], workers[wi], floor)
-            key = (start, task.matrix, task.cluster)
-            if best is None or key < best[0]:
-                best = (key, task, wi)
-        (start, _, _), task, wi = best
+    future = []            # (ready_time, matrix, cluster, task)
+    for t in tasks:
+        r = max(ready[(t.matrix, t.cluster)], floor)
+        future.append((r, t.matrix, t.cluster, t))
+    heapq.heapify(future)
+    avail = []             # ready now: (matrix, cluster, task)
+    wheap = list(workers)
+    heapq.heapify(wheap)
+    while future or avail:
+        wfree = heapq.heappop(wheap)
+        now = max(wfree, floor)
+        while future and future[0][0] <= now:
+            _, m, c, t = heapq.heappop(future)
+            heapq.heappush(avail, (m, c, t))
+        if avail:
+            _, _, task = heapq.heappop(avail)
+            start = now
+        else:                       # idle until the next task is ready
+            start, _, _, task = heapq.heappop(future)
         end = start + task.comp_time
-        workers[wi] = end
+        heapq.heappush(wheap, end)
         busy += task.comp_time
         last = max(last, end)
-        pending.remove(task)
+    workers[:] = wheap              # free-time multiset for the caller
     return busy, last
 
 

@@ -94,10 +94,15 @@ def _use_shard_map(groups: int) -> bool:
 
 
 def _cold_path_shard_map(params, x, activation: str, mode: str,
-                         plan: HybridPlan, n_hot: int, n_cold: int):
+                         plan: HybridPlan, n_hot: int, n_cold: int,
+                         active_mask=None):
     """Shard-local cold path: each 'model' shard scores its own neuron
     slice, picks its top clusters, gathers them locally, computes the
-    partial FFN output and psums. x (B, D) -> ((B, D), (G, kc))."""
+    partial FFN output and psums. x (B, D) -> ((B, D), (G, kc)).
+
+    active_mask (B,) bool: rows excluded from the batch-union predictor
+    scoring (free KV-arena slots decode garbage lanes; they must not
+    steer cluster selection for live requests)."""
     import jax.experimental  # noqa: F401  (shard_map is jax.shard_map)
     from jax.sharding import PartitionSpec as PS
     from repro.sharding import current_mesh
@@ -112,13 +117,14 @@ def _cold_path_shard_map(params, x, activation: str, mode: str,
     A = params["pred"]["A"]
     Bp = params["pred"]["B"][:, n_hot:]               # (r, Nc) col-sharded
 
-    def local(xl, wcl, Al, Bl):
+    def local(xl, wcl, Al, Bl, maskl):
         # xl (B, D) replicated over model; wcl (nc_g, cs, R, D) local;
         # Bl (r, Nc_local) local predictor columns.
         h = jnp.einsum("bd,dr->br", xl.astype(jnp.float32),
                        Al.astype(jnp.float32))
         scores = jnp.einsum("br,rn->bn", h, Bl.astype(jnp.float32))
-        union = scores.max(axis=0)                    # (Nc_local,)
+        union = jnp.where(maskl[:, None], scores,
+                          -jnp.inf).max(axis=0)       # (Nc_local,)
         cscore = union.reshape(nc_g, cs).max(axis=-1)
         _, idx = jax.lax.top_k(cscore, kc)            # (kc,) local clusters
         gath = wcl[idx].reshape(kc * cs, R, D)        # local gather
@@ -139,23 +145,29 @@ def _cold_path_shard_map(params, x, activation: str, mode: str,
         return (jax.lax.psum(y.astype(jnp.float32), "model"),
                 jax.lax.all_gather(idx, "model"))     # (G, kc)
 
+    if active_mask is None:
+        active_mask = jnp.ones((x.shape[0],), bool)
     fn = jax.shard_map(
         local, mesh=mesh,
         in_specs=(PS(None, None), PS("model", None, None, None),
-                  PS(None, None), PS(None, "model")),
+                  PS(None, None), PS(None, "model"), PS(None)),
         out_specs=(PS(None, None), PS(None, None)),
         axis_names={"model"}, check_vma=False)
-    return fn(x, wc, A, Bp)
+    return fn(x, wc, A, Bp, active_mask)
 
 
 def ffn_hybrid(params, x, activation: str, mode: str, plan: HybridPlan,
-               return_indices: bool = False):
+               return_indices: bool = False, active_mask=None):
     """Decode-phase hybrid FFN (paper §4.1.2). x: (B, D).
 
     hot prefix  -> dense matmul (MXU; the NPU engine analogue)
     cold suffix -> predictor scores -> batch-union -> per-group top-k
                    clusters -> gathered dense tiles (the CPU engine
                    analogue, re-densified for the MXU).
+
+    active_mask (B,) bool, optional: rows excluded from the batch-union
+    selection (the serving engine's free KV-arena slots). Masked rows
+    still produce an output but never steer which clusters activate.
     """
     w = params["w"]                                   # (N, R, D)
     N, R, D = w.shape
@@ -177,7 +189,7 @@ def ffn_hybrid(params, x, activation: str, mode: str, plan: HybridPlan,
         # keeps predictor scoring, top-k and the cluster gather strictly
         # shard-local; only the output psum crosses shards.
         y_cold, cidx = _cold_path_shard_map(
-            params, x, activation, mode, plan, n_hot, n_cold)
+            params, x, activation, mode, plan, n_hot, n_cold, active_mask)
         y += y_cold.astype(jnp.float32)
     elif n_cold > 0 and kc > 0 and "pred" in params:
         nc_g = n_cold // G // cs                      # cold clusters per group
@@ -185,7 +197,11 @@ def ffn_hybrid(params, x, activation: str, mode: str, plan: HybridPlan,
         # Batch union (paper fn.1: a neuron is active if any token in
         # the batch triggers it), then *cluster*-granular selection —
         # the neuron cluster is the basic unit (§3.1).
-        union = scores.max(axis=0)                              # (Nc,)
+        if active_mask is not None:
+            union = jnp.where(active_mask[:, None], scores,
+                              -jnp.inf).max(axis=0)             # (Nc,)
+        else:
+            union = scores.max(axis=0)                          # (Nc,)
         cscore = union.reshape(G, nc_g, cs).max(axis=-1)        # (G, nc_g)
         cscore = constrain(cscore, P("model", None))
         _, cidx = jax.lax.top_k(cscore, kc)                     # (G, kc)
@@ -223,7 +239,7 @@ def ffn_hybrid(params, x, activation: str, mode: str, plan: HybridPlan,
 
 
 def ffn_apply(params, x, activation: str, sparse_cfg, plan: HybridPlan | None,
-              return_indices: bool = False):
+              return_indices: bool = False, active_mask=None):
     """Uniform entry: dense when plan is None (train/prefill) else hybrid."""
     if plan is None or not sparse_cfg.enabled:
         y = ffn_dense(params, x, activation)
@@ -231,7 +247,7 @@ def ffn_apply(params, x, activation: str, sparse_cfg, plan: HybridPlan | None,
     squeeze = x.ndim == 3
     xx = x.reshape(-1, x.shape[-1]) if squeeze else x
     out = ffn_hybrid(params, xx, activation, sparse_cfg.mode, plan,
-                     return_indices=return_indices)
+                     return_indices=return_indices, active_mask=active_mask)
     if return_indices:
         y, cidx = out
         return (y.reshape(x.shape) if squeeze else y), cidx

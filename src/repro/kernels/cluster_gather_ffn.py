@@ -26,6 +26,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# JAX renamed TPUCompilerParams -> CompilerParams across releases; take
+# whichever this install provides so both versions lower the kernels.
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams
+
 
 def _kernel(idx_ref, x_ref, w_ref, o_ref, *, activation: str, gated: bool):
     i = pl.program_id(0)
@@ -85,7 +90,7 @@ def cluster_gather_ffn(x, w, cluster_idx, *, activation: str,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, D), jnp.float32),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("arbitrary",)),
     )(cluster_idx, x, w_blocked)
     return out.astype(x.dtype)

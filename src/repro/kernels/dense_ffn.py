@@ -14,7 +14,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.cluster_gather_ffn import _kernel
+from repro.kernels.cluster_gather_ffn import CompilerParams, _kernel
 
 
 @functools.partial(jax.jit, static_argnames=("activation", "block_n",
@@ -43,7 +43,7 @@ def dense_ffn(x, w, *, activation: str, block_n: int = 512,
         out_specs=pl.BlockSpec((B, D), lambda i: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((B, D), jnp.float32),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("arbitrary",)),
     )(x, w)
     return out.astype(x.dtype)

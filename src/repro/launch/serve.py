@@ -24,7 +24,7 @@ from repro.serving.engine import ServeEngine
 
 def build_engine(arch: str, reduced: bool = True, offload: float = 0.5,
                  spec=POWERINFER2, storage=UFS40, profile: bool = False,
-                 seed: int = 0):
+                 seed: int = 0, **engine_kwargs):
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
@@ -41,7 +41,8 @@ def build_engine(arch: str, reduced: bool = True, offload: float = 0.5,
         plan = build_plan(cfg)
     params = permute_ffn_params(params, plan.neuron_order)
     return ServeEngine(cfg, params, plan, spec=spec, storage=storage,
-                       offload_ratio=offload, seed=seed), cfg
+                       offload_ratio=offload, seed=seed,
+                       **engine_kwargs), cfg
 
 
 def main():

@@ -107,9 +107,10 @@ def ffn_block_spec(cfg: ModelConfig):
     return ffn_spec(cfg.sparse_ffn.enabled)
 
 
-def apply_ffn_block(params, x, cfg: ModelConfig, plan, return_indices=False):
+def apply_ffn_block(params, x, cfg: ModelConfig, plan, return_indices=False,
+                    active_mask=None):
     return ffn_apply(params, x, cfg.activation, cfg.sparse_ffn, plan,
-                     return_indices=return_indices)
+                     return_indices=return_indices, active_mask=active_mask)
 
 
 # ------------------------------------------------------------- scanning ----

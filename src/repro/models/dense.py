@@ -192,8 +192,12 @@ def make_decode_step(cfg: ModelConfig, angles_decode_fn=None,
     dh_half = cfg.d_head // 2
     W = cfg.sliding_window
 
-    def decode_step(params, tokens, cache, plan: Optional[HybridPlan] = None):
-        """tokens (B,1) -> (logits (B,1,V), cache'[, cluster_ids])."""
+    def decode_step(params, tokens, cache, plan: Optional[HybridPlan] = None,
+                    active_mask=None):
+        """tokens (B,1) -> (logits (B,1,V), cache'[, cluster_ids]).
+
+        active_mask (B,) bool: live rows for the sparse-FFN batch-union
+        selection; None = all rows live (the static-batch path)."""
         pos = cache["length"]                          # (B,)
         x = embed_tokens(params, cfg, tokens)
         angles = (angles_decode_fn(pos, dh_half) if angles_decode_fn
@@ -208,7 +212,7 @@ def make_decode_step(cfg: ModelConfig, angles_decode_fn=None,
             h = h + a
             f = blocks.apply_ffn_block(
                 lp["ffn"], rms_norm(h, lp["ln2"], cfg.norm_eps), cfg, plan,
-                return_indices=collect_indices)
+                return_indices=collect_indices, active_mask=active_mask)
             if collect_indices:
                 f, cidx = f
             h = h + f

@@ -8,8 +8,15 @@ Three kinds, all pure pytrees so they thread through jit / scan:
 
 `kv_pos` is materialized for both cache kinds so decode_attention masks
 uniformly (-1 = empty slot).
+
+`KVSlotArena` (DESIGN.md §4) wraps the full cache as a fixed-slot arena
+for continuous batching: requests are admitted into free slots and
+freed on completion without reshaping live rows; the arena only changes
+shape at decoder bucket boundaries.
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -62,3 +69,113 @@ def write_pos(kv_pos, pos):
         return jax.lax.dynamic_update_slice(row, p[None], (s,))
 
     return jax.vmap(upd)(kv_pos, slot, pos)
+
+
+# ------------------------------------------------------- slot arena ----
+
+@jax.jit
+def _write_row(cache, row, slot):
+    """Overwrite arena slot `slot` with a single-request cache row.
+
+    row: full-cache pytree with batch dim 1 and the arena's seq length.
+    `slot` is a traced scalar, so one executable serves every slot.
+    """
+    return {
+        "k": jax.lax.dynamic_update_slice(cache["k"], row["k"],
+                                          (0, slot, 0, 0, 0)),
+        "v": jax.lax.dynamic_update_slice(cache["v"], row["v"],
+                                          (0, slot, 0, 0, 0)),
+        "kv_pos": jax.lax.dynamic_update_slice(cache["kv_pos"],
+                                               row["kv_pos"], (slot, 0)),
+        "length": jax.lax.dynamic_update_slice(cache["length"],
+                                               row["length"], (slot,)),
+    }
+
+
+class KVSlotArena:
+    """Fixed-slot KV arena with a free list (continuous batching).
+
+    Physical layout is the ordinary full cache — (L, n_slots, T, KV,
+    dh) buffers — but rows are *slots* owned by live requests. Admitting
+    a request writes its prefilled KV into a free slot (one
+    dynamic_update_slice; live rows untouched); completion just returns
+    the slot to the free list. Freed slots keep decoding as masked
+    "zombie" lanes whose outputs are ignored, so the decode executable
+    shape never changes inside a bucket. `resize` — the only operation
+    that reshapes the buffers — is invoked by the engine solely at
+    decoder bucket-boundary crossings.
+    """
+
+    def __init__(self, n_layers, n_slots, max_len, kv_heads, d_head, dtype):
+        self.dims = (n_layers, kv_heads, d_head)
+        self.max_len = max_len
+        self.dtype = dtype
+        self.cache = init_full_cache(n_layers, n_slots, max_len,
+                                     kv_heads, d_head, dtype)
+        self.free = list(range(n_slots))
+        self.slot_of: dict = {}          # uid -> slot
+        self.writes = 0
+        self.resizes = 0
+
+    @property
+    def n_slots(self) -> int:
+        return self.cache["k"].shape[1]
+
+    @property
+    def n_free(self) -> int:
+        return len(self.free)
+
+    def alloc(self, uid) -> int:
+        slot = self.free.pop(0)
+        self.slot_of[uid] = slot
+        return slot
+
+    def release(self, uid) -> int:
+        slot = self.slot_of.pop(uid)
+        self.free.append(slot)
+        self.free.sort()
+        return slot
+
+    def write(self, uid, row_cache):
+        """Install a prefilled request (batch-1 cache row) in uid's slot."""
+        slot = self.slot_of[uid]
+        self.cache = _write_row(self.cache, row_cache, jnp.int32(slot))
+        self.writes += 1
+        return slot
+
+    def rows_for(self, uids):
+        return [self.slot_of[u] for u in uids]
+
+    def resize(self, new_n_slots: int, uid_order):
+        """Gather live rows (in uid_order) into a new arena of
+        `new_n_slots` slots; live requests are renumbered 0..k-1."""
+        rows = [self.slot_of[u] for u in uid_order]
+        k_live = len(rows)
+        assert k_live <= new_n_slots, (k_live, new_n_slots)
+        nl, kv, dh = self.dims
+        new = init_full_cache(nl, new_n_slots, self.max_len, kv, dh,
+                              self.dtype)
+        if k_live:
+            idx = jnp.asarray(rows, jnp.int32)
+            pad = new_n_slots - k_live
+            gat = {
+                "k": self.cache["k"].take(idx, axis=1),
+                "v": self.cache["v"].take(idx, axis=1),
+                "kv_pos": self.cache["kv_pos"].take(idx, axis=0),
+                "length": self.cache["length"].take(idx, axis=0),
+            }
+            if pad:
+                new = {
+                    "k": jnp.concatenate([gat["k"], new["k"][:, k_live:]], 1),
+                    "v": jnp.concatenate([gat["v"], new["v"][:, k_live:]], 1),
+                    "kv_pos": jnp.concatenate(
+                        [gat["kv_pos"], new["kv_pos"][k_live:]], 0),
+                    "length": jnp.concatenate(
+                        [gat["length"], new["length"][k_live:]], 0),
+                }
+            else:
+                new = gat
+        self.cache = new
+        self.slot_of = {u: i for i, u in enumerate(uid_order)}
+        self.free = list(range(k_live, new_n_slots))
+        self.resizes += 1

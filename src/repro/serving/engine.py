@@ -1,23 +1,26 @@
-"""PowerInfer-2 serving engine.
+"""PowerInfer-2 serving engine — the thin orchestrator.
 
-Two planes, cleanly separated (DESIGN.md §2 records why):
+Three layers, cleanly separated (DESIGN.md §2 records why):
 
 * **Data plane** — always numerically real: pre-jitted decode
   executables per batch bucket (core/adaptation.BucketedDecoder — the
   paper's per-batch NPU graph table) run the hybrid hot/cold FFN and
   return, besides logits, the *true* per-layer cold-cluster selections
   (the activation trace).
-* **Storage plane** — the trace drives the segmented NeuronCache and
-  the bundled ColdStore exactly as on the phone; I/O time comes from
-  the StorageModel, and per-token effective latency is composed by the
-  neuron-cluster pipeline simulator under the engine's SystemSpec
-  (llama.cpp-analogue / LLMFlash-analogue / PowerInfer-2). On real
-  hardware the storage plane gates the data plane; on this CPU
-  container it produces the modeled timeline the benchmarks report.
+* **Storage plane** (serving/storage_plane.py) — the trace drives the
+  segmented NeuronCache and the bundled ColdStore exactly as on the
+  phone; I/O time comes from the StorageModel, per-token effective
+  latency is composed by the neuron-cluster pipeline simulator, and a
+  single-I/O-thread prefetcher overlaps next-layer miss fetches with
+  current-layer pricing.
+* **Scheduler** (serving/scheduler.py) — request-level continuous
+  batching: an admission queue, per-step admission up to the decoder's
+  next bucket boundary, prefill-on-admit, completion/eviction.
 
-Compute times in the storage plane are analytic (FLOPs / engine rate
-from the HardwareProfile) so results are deterministic and
-hardware-grounded rather than CPU-wall-clock noise.
+This module only orchestrates: submit()/step()/run_until_drained()
+drive requests through slot-based KV management (models/kv_cache.
+KVSlotArena); generate() remains as a static-batch compatibility
+wrapper over the same loop.
 """
 from __future__ import annotations
 
@@ -32,55 +35,18 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.adaptation import BucketedDecoder, bucket_for
 from repro.core.baselines import SystemSpec, POWERINFER2
-from repro.core.cache import NeuronCache
-from repro.core.clusters import HybridPlan
-from repro.core.coldstore import ColdStore
 from repro.core.io_model import StorageModel, UFS40
 from repro.core.planner import ExecutionPlan, HardwareProfile
-from repro.core.pipeline import ClusterTask, simulate_pipeline
 from repro.models import dense
+from repro.models.kv_cache import KVSlotArena
+from repro.models.modules import dtype_of
 from repro.serving.sampler import sample_tokens
 from repro.serving.scheduler import BatchScheduler
+from repro.serving.storage_plane import StoragePlane, TimingProfile, \
+    TokenStats
 
-
-@dataclass(frozen=True)
-class TimingProfile:
-    """Cost constants for the storage plane.
-
-    The engine's data plane runs the (reduced) model for real; the
-    storage plane prices compute and I/O at the *deployment-size*
-    model's constants so compute/I-O ratios land in the paper's regime
-    (e.g. bamboo-7b FP16: 24KB Gate-Up-Down bundles — exactly §4.4).
-    Defaults derive from the engine's own config.
-    """
-    d_model: int
-    d_ff: int
-    num_heads: int
-    num_kv_heads: int
-    d_head: int
-    num_layers: int
-    rows: int = 3
-    itemsize: int = 2
-
-    @classmethod
-    def from_config(cls, cfg, rows):
-        return cls(d_model=cfg.d_model, d_ff=cfg.d_ff,
-                   num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
-                   d_head=cfg.d_head, num_layers=cfg.num_layers, rows=rows)
-
-    @property
-    def bundle_bytes(self):
-        return self.rows * self.d_model * self.itemsize
-
-
-@dataclass
-class TokenStats:
-    compute_s: float
-    io_s: float            # raw (unpipelined) I/O demand
-    effective_s: float     # after pipeline composition
-    cache_hit_rate: float
-    n_miss: int
-    batch: int
+__all__ = ["ServeEngine", "GenerationResult", "ServeReport", "StepResult",
+           "TimingProfile", "TokenStats"]
 
 
 @dataclass
@@ -103,8 +69,55 @@ class GenerationResult:
                 "p99": float(np.percentile(lat, 99))}
 
 
+@dataclass
+class StepResult:
+    """Outcome of one continuous-batching decode step."""
+    stats: TokenStats
+    tokens: dict                       # uid -> generated token
+    admitted: list = field(default_factory=list)
+    finished: list = field(default_factory=list)
+
+
+@dataclass
+class ServeReport:
+    """Aggregate serving metrics over a drained request stream."""
+    stats: list                        # TokenStats per step
+    requests: list                     # finished Requests
+
+    @property
+    def total_tokens(self) -> int:
+        return sum(s.batch for s in self.stats)
+
+    @property
+    def tokens_per_s(self) -> float:
+        total = sum(s.effective_s for s in self.stats)
+        return self.total_tokens / total if total else float("inf")
+
+    def ttft(self) -> np.ndarray:
+        return np.array([r.ttft for r in self.requests
+                         if r.ttft is not None])
+
+    def token_latencies(self) -> np.ndarray:
+        """Per-token effective latency: every token generated in a step
+        experienced that step's effective seconds."""
+        out = []
+        for s in self.stats:
+            out.extend([s.effective_s] * s.batch)
+        return np.array(out)
+
+    def latency_percentiles(self):
+        lat = self.token_latencies()
+        return {"mean": float(lat.mean()),
+                "p50": float(np.percentile(lat, 50)),
+                "p90": float(np.percentile(lat, 90)),
+                "p99": float(np.percentile(lat, 99))}
+
+
 class ServeEngine:
-    """Single-host serving engine for dense sparse-FFN models."""
+    """Single-host continuous-batching engine for dense sparse-FFN
+    models. Orchestrates the data plane (BucketedDecoder), the storage
+    plane (StoragePlane) and the scheduler (BatchScheduler) over a
+    slot-based KV arena."""
 
     def __init__(self, cfg: ModelConfig, params, plan: ExecutionPlan,
                  spec: SystemSpec = POWERINFER2,
@@ -113,265 +126,285 @@ class ServeEngine:
                  hw: HardwareProfile = None,
                  timing: TimingProfile = None,
                  n_compute_workers: int = 4,
-                 seed: int = 0):
+                 seed: int = 0,
+                 buckets: tuple = None,
+                 ctx_budget: int = None,
+                 eos_id: int = None,
+                 temperature: float = 0.8,
+                 prefetch: bool = True):
         assert cfg.family in ("dense", "vlm"), "engine demo targets dense family"
         self.cfg = cfg
         self.params = params
         self.plan = plan
         self.spec = spec
-        self.hw = hw or plan.hardware
-        self.n_workers = n_compute_workers
         self.key = jax.random.key(seed)
 
+        # ---- data plane ----
         self.model = dense.make_model(cfg)
         self._step_traced = dense.make_decode_step(cfg, collect_indices=True)
         self.decoder = BucketedDecoder(
             plan_source=plan,
-            make_step=lambda p: (lambda pr, t, c: self._step_traced(pr, t, c, p)),
-            buckets=tuple(range(1, 65)))
+            make_step=lambda p: (lambda pr, t, c, m: self._step_traced(
+                pr, t, c, p, m)),
+            buckets=tuple(buckets) if buckets else tuple(range(1, 65)))
 
         # ---- storage plane ----
-        sc = cfg.sparse_ffn
-        self.cs = sc.cluster_size
-        N = cfg.d_ff
-        self.N = N
-        from repro.core.sparse_ffn import ffn_rows
-        self.timing = timing or TimingProfile.from_config(
-            cfg, ffn_rows(cfg.activation))
-        # scale factors: storage-plane costs priced at deployment size
-        # while traces come from the (possibly reduced) data-plane model
-        self.neuron_scale = self.timing.d_ff / N
-        self.layer_scale = self.timing.num_layers / cfg.num_layers
-        bundles = [np.asarray(params["layers"]["ffn"]["w"][l])
-                   for l in range(cfg.num_layers)]
-        self.coldstore = ColdStore(bundles, storage=storage,
-                                   two_phase=spec.two_phase,
-                                   block_size=24576 if spec.use_bundling
-                                   else 4096,
-                                   bundle_bytes_override=self.timing.bundle_bytes,
-                                   count_scale=self.neuron_scale)
-        self.bundle_bytes = self.coldstore.bundle_bytes()
+        self.storage = StoragePlane(
+            cfg, params, plan, spec=spec, storage=storage,
+            offload_ratio=offload_ratio, hw=hw, timing=timing,
+            n_compute_workers=n_compute_workers, prefetch=prefetch)
 
-        # memory budget: resident = (1-offload)*N neurons per layer.
-        # With a pinned hot region (§4.2, PowerInfer-2) the budget splits
-        # between hot prefix and cold LRU (hot may not starve cold below
-        # its per-token working set). Baseline systems stream *all*
-        # activated neurons (hot included) through one LRU cache, with
-        # bundling-redundancy derating (spec.cache_efficiency).
-        resident = int(N * (1.0 - offload_ratio))
-        plan1 = plan.plan_for_batch(1)
-        if spec.pinned_hot:
-            hot_cap = (resident // 2) // self.cs * self.cs
-            self.n_hot = min(plan1.n_hot, max(hot_cap, self.cs))
-            cold_capacity = max(resident - self.n_hot, self.cs) \
-                * cfg.num_layers
-        else:
-            self.n_hot = 0
-            cold_capacity = max(int(resident * spec.cache_efficiency),
-                                self.cs) * cfg.num_layers
-        # the per-token activated set always includes the plan's hot
-        # prefix; pinned systems never do I/O for it.
-        self.plan_hot = plan1.n_hot
-        # the hot prefix is pinned (fixed region); the LRU capacity below
-        # is entirely the cold region.
-        self.cache = NeuronCache(cfg.num_layers, N, self.cs,
-                                 capacity_neurons=cold_capacity,
-                                 hot_fraction=0.0,
-                                 bytes_per_neuron=self.bundle_bytes)
-        # warm the cold cache with the most-frequent cold neurons
-        per_layer = cold_capacity // cfg.num_layers
-        for l in range(cfg.num_layers):
-            ids = range(self.n_hot, min(self.n_hot + per_layer, N))
-            self.cache.admit_cold(l, list(ids))
-        self.cache.stats.reset()
-        self.coldstore.reset_stats()
+        # ---- scheduler + KV slots ----
+        self.sched = BatchScheduler(eos_id=eos_id)
+        self.arena: Optional[KVSlotArena] = None
+        self._last = None                  # (n_slots, V) next-token logits
+        self._prefill_fns = {}
+        self._temperature = temperature
+        self.ctx_budget = ctx_budget
+        self.clock_s = 0.0                 # modeled serving clock
 
-    # ---------------------------------------------------- timing model ----
-    def _ffn_flops_token(self, plan: HybridPlan):
-        t = self.timing
-        per_neuron = 2 * t.rows * t.d_model
-        hot = plan.n_hot * self.neuron_scale * per_neuron
-        cold = plan.total_cold * self.neuron_scale * per_neuron
-        return hot, cold
+    def close(self):
+        """Release the storage plane's I/O thread (also runs at GC)."""
+        self.storage.close()
 
-    def _attn_flops_token(self, ctx_len: int):
-        t = self.timing
-        return 4 * t.num_heads * t.d_head * ctx_len \
-            + 4 * t.d_model * (t.num_heads + 2 * t.num_kv_heads) * t.d_head
+    # ------------------------------------------------ legacy attributes ----
+    # Storage-plane internals used to live on the engine; keep read
+    # access for benchmarks/examples without re-exposing the wiring.
+    @property
+    def cache(self):
+        return self.storage.cache
 
-    def _compute_time(self, plan: HybridPlan, batch: int, ctx_len: int):
-        hot_f, cold_f = self._ffn_flops_token(plan)
-        L = self.timing.num_layers
-        attn = self._attn_flops_token(ctx_len) * L * batch
-        if self.spec.hybrid_engines:
-            # hot on the dense engine, cold on the sparse path, overlapped
-            t_ffn = max(hot_f / self.hw.dense_engine_flops,
-                        cold_f / self.hw.sparse_engine_flops) * L * batch
-        elif self.spec.use_predictor:
-            t_ffn = (hot_f + cold_f) / self.hw.sparse_engine_flops * L * batch
-        else:
-            # dense everything (llama.cpp): all N neurons on sparse engine
-            t_ffn = (self.timing.d_ff * 2 * self.timing.rows
-                     * self.timing.d_model) \
-                / self.hw.sparse_engine_flops * L * batch
-        return t_ffn + attn / self.hw.dense_engine_flops
+    @property
+    def coldstore(self):
+        return self.storage.coldstore
 
-    # ---------------------------------------------------- decode loop ----
-    def _storage_step(self, cidx, plan: HybridPlan, batch: int,
-                      ctx_len: int) -> TokenStats:
-        """Run the storage plane for one decode step given the real
-        cluster trace cidx (L, G, kc)."""
-        cfg, spec = self.cfg, self.spec
-        L = cfg.num_layers
-        cs = self.cs
-        comp_total = self._compute_time(plan, batch, ctx_len)
-        h0, m0 = self.cache.stats.hits, self.cache.stats.misses
+    @property
+    def timing(self):
+        return self.storage.timing
 
-        tasks = []
-        io_raw = 0.0
-        comp_per_matrix = comp_total / L
-        for l in range(L):
-            if spec.use_predictor:
-                ids = np.unique(np.asarray(cidx[l]).reshape(-1))
-                cold_ids = (self.plan_hot
-                            + (ids[:, None] * cs
-                               + np.arange(cs)[None]).reshape(-1))
-                cold_ids = cold_ids[cold_ids < self.N]
-                if spec.pinned_hot:
-                    neuron_ids = cold_ids       # hot prefix pinned: no I/O
-                else:
-                    # activated set = hot prefix + selected cold, all
-                    # streamed through the single cache
-                    neuron_ids = np.concatenate(
-                        [np.arange(self.plan_hot), cold_ids])
+    @property
+    def hw(self):
+        return self.storage.hw
+
+    @property
+    def max_slots(self) -> int:
+        return self.decoder.buckets[-1]
+
+    # ------------------------------------------------------- admission ----
+    def submit(self, prompt, max_new: int = 32,
+               arrival_time: float = None) -> int:
+        """Enqueue one request (prompt: (S,) token ids). Returns uid."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.shape[0] == 0:
+            raise ValueError("empty prompt: at least one token required")
+        if arrival_time is None:
+            arrival_time = self.clock_s
+        need = prompt.shape[0] + max_new
+        if self.arena is not None and need > self.arena.max_len:
+            raise ValueError(
+                f"request needs {need} KV positions but the arena was "
+                f"sized for {self.arena.max_len}; raise ctx_budget")
+        req = self.sched.submit(prompt, max_new, arrival_time)
+        return req.uid
+
+    def _ensure_arena(self, n_slots: int, min_len: int):
+        cfg = self.cfg
+        dtype = dtype_of(cfg.param_dtype)
+        if self.arena is None:
+            T = max(self.ctx_budget or 0, min_len)
+            self.arena = KVSlotArena(cfg.num_layers, n_slots, T,
+                                     cfg.num_kv_heads, cfg.d_head, dtype)
+            self._last = jnp.zeros((n_slots, cfg.vocab_padded),
+                                   dtype_of(cfg.compute_dtype))
+        elif min_len > self.arena.max_len:
+            raise ValueError(
+                f"admitted request needs {min_len} KV positions but the "
+                f"arena was sized for {self.arena.max_len}; raise "
+                f"ctx_budget")
+        elif self.arena.n_slots != n_slots:
+            order = list(self.sched.running)
+            rows = self.arena.rows_for(order)
+            self.arena.resize(n_slots, order)
+            # gather the per-slot logits the same way
+            if rows:
+                gat = self._last.take(jnp.asarray(rows, jnp.int32), axis=0)
             else:
-                neuron_ids = np.arange(self.N)       # dense: everything
-            if spec.use_cache:
-                hits, misses = self.cache.lookup_cold(l, neuron_ids)
-                self.cache.admit_cold(l, misses)
-            else:
-                hits, misses = [], list(neuron_ids)
-            n_miss_clusters = max(len(misses) // cs, 0)
-            n_clusters = max(len(neuron_ids) // cs, 1)
-            if misses:
-                if spec.use_bundling:
-                    gate_active = np.random.default_rng(l).random(
-                        len(misses)) < 0.8 if spec.two_phase else None
-                    fr = self.coldstore.fetch(l, misses, gate_active)
-                    io_l = fr.io_time
-                else:
-                    # unbundled: R scattered 4KB-class reads per neuron
-                    # (paper §4.4 — this is what bundling removes)
-                    R = self.timing.rows
-                    per = self.bundle_bytes // R
-                    nbytes = int(per * len(misses) * R * self.neuron_scale)
-                    io_l = self.coldstore.storage.read_time(
-                        nbytes, min(4096, per), random=True)
-                    self.coldstore.total_bytes += nbytes
-                    self.coldstore.total_io_time += io_l
-            else:
-                io_l = 0.0
-            # price the trace's L_reduced layers at deployment depth
-            io_l *= self.layer_scale
-            io_raw += io_l
-            comp_c = comp_per_matrix / n_clusters
-            io_c = io_l / max(n_miss_clusters, 1) if io_l else 0.0
-            for c in range(n_clusters):
-                tasks.append(ClusterTask(l, c, comp_c,
-                                         io_c if c < n_miss_clusters else 0.0))
+                gat = self._last[:0]
+            pad = n_slots - len(rows)
+            if pad:
+                zeros = jnp.zeros((pad,) + self._last.shape[1:],
+                                  self._last.dtype)
+                gat = jnp.concatenate([gat, zeros], axis=0)
+            self._last = gat
 
-        if spec.pipeline == "none":
-            eff = comp_total + io_raw
-        else:
-            res = simulate_pipeline(tasks, n_compute=self.n_workers,
-                                    policy=spec.pipeline)
-            eff = res.makespan
-        d_hits = self.cache.stats.hits - h0
-        d_miss = self.cache.stats.misses - m0
-        seen = d_hits + d_miss
-        hr = 1.0 if seen == 0 else d_hits / seen
-        return TokenStats(compute_s=comp_total, io_s=io_raw,
-                          effective_s=eff, cache_hit_rate=float(hr),
-                          n_miss=d_miss, batch=batch)
+    def _prefill(self, tokens: np.ndarray):
+        """Jitted dense prefill padded to the arena length."""
+        B, S = tokens.shape
+        T = self.arena.max_len
+        key = (B, S, T)
+        if key not in self._prefill_fns:
+            self._prefill_fns[key] = jax.jit(
+                lambda p, b: self.model.prefill(p, b, max_len=T))
+        return self._prefill_fns[key](self.params, {"tokens": tokens})
 
+    def _admit(self, reqs: list):
+        """Prefill-on-admit: joint prefill per prompt-length group,
+        then write each request's KV row into a free slot."""
+        i = 0
+        while i < len(reqs):
+            group = [reqs[i]]
+            i += 1
+            while i < len(reqs) and reqs[i].prompt_len == group[0].prompt_len:
+                group.append(reqs[i])
+                i += 1
+            tokens = np.stack([r.prompt for r in group]).astype(np.int32)
+            logits, cache = self._prefill(tokens)
+            self.clock_s += self.storage.prefill_cost(group[0].prompt_len,
+                                                      len(group))
+            for j, req in enumerate(group):
+                self.sched.admit(req, self.clock_s)
+                self.arena.alloc(req.uid)
+                row = {
+                    "k": cache["k"][:, j:j + 1],
+                    "v": cache["v"][:, j:j + 1],
+                    "kv_pos": cache["kv_pos"][j:j + 1],
+                    "length": cache["length"][j:j + 1],
+                }
+                slot = self.arena.write(req.uid, row)
+                self._last = self._last.at[slot].set(logits[j, -1])
+
+    # ------------------------------------------------------ decode loop ----
+    def step(self) -> Optional[StepResult]:
+        """One continuous-batching step: admit -> (resize at bucket
+        boundary) -> sample+decode -> price -> complete."""
+        sched = self.sched
+        if not sched.has_work:
+            return None
+        # idle engine: jump the modeled clock to the next arrival
+        if not sched.running:
+            nxt = sched.next_arrival()
+            if nxt is not None and nxt > self.clock_s:
+                self.clock_s = nxt
+        room = self.max_slots - len(sched.running)
+        admits = sched.pop_admissible(self.clock_s, room)
+        n_active = len(sched.running) + len(admits)
+        if n_active == 0:
+            return None
+        # the KV arena tracks the decoder's bucket table: one resize
+        # (and at most one retrace) per boundary crossing. Its length is
+        # fixed at creation, so size it for everything already submitted
+        # (still-queued requests were never checked against an arena).
+        b = bucket_for(n_active, self.decoder.buckets)
+        need = [r.prompt_len + r.max_new for r in admits]
+        if self.arena is None:
+            need += [sched.sequences[u].prompt_len
+                     + sched.sequences[u].max_new for u in sched.queue]
+        self._ensure_arena(b, max(need, default=0))
+        if admits:
+            self._admit(admits)
+        n_slots = self.arena.n_slots
+
+        plan_b, step_fn = self.decoder.executable_for(n_active)
+        rows = self.arena.rows_for(sched.running)
+        idx = jnp.asarray(rows, jnp.int32)
+        self.key, sk = jax.random.split(self.key)
+        toks_active = sample_tokens(sk, self._last.take(idx, axis=0),
+                                    self._temperature)        # (n_active,)
+        feed = np.zeros((n_slots,), np.int32)
+        feed[rows] = np.asarray(toks_active)
+        mask = np.zeros((n_slots,), bool)
+        mask[rows] = True
+        logits, cache, cidx = step_fn(self.params, jnp.asarray(feed)[:, None],
+                                      self.arena.cache, jnp.asarray(mask))
+        self.arena.cache = cache
+        self._last = logits[:, 0]
+
+        ctx = float(np.mean([sched.sequences[u].prompt_len
+                             + sched.sequences[u].n_generated
+                             for u in sched.running]))
+        st = self.storage.step(np.asarray(cidx), plan_b, n_active, ctx)
+        self.clock_s += st.effective_s
+
+        tok_map = {u: int(feed[s])
+                   for u, s in zip(sched.running, rows)}
+        for u in sched.running:
+            req = sched.sequences[u]
+            if req.first_token_time is None:
+                req.first_token_time = self.clock_s
+        done = sched.step(tok_map)
+        for u in done:
+            sched.sequences[u].finish_time = self.clock_s
+            self.arena.release(u)
+        return StepResult(stats=st, tokens=tok_map,
+                          admitted=[r.uid for r in admits], finished=done)
+
+    def cancel(self, uids):
+        """Force-finish running requests (Best-of-N early stop); their
+        KV slots return to the free list immediately."""
+        for uid in list(uids):
+            if uid in self.sched.running:
+                self.sched.finish(uid, self.clock_s)
+                self.arena.release(uid)
+
+    def run_until_drained(self, max_steps: int = 100000) -> ServeReport:
+        """Step until queue and batch are empty. The report covers every
+        request finished so far (including cancellations and requests
+        completed by manual step() calls before the drain)."""
+        stats = []
+        for _ in range(max_steps):
+            r = self.step()
+            if r is None:
+                break
+            stats.append(r.stats)
+        return ServeReport(stats=stats,
+                           requests=[r for r in
+                                     self.sched.sequences.values()
+                                     if r.finished])
+
+    # ---------------------------------------------- compatibility API ----
     def generate(self, prompt_tokens, max_new: int = 32,
                  temperature: float = 0.8,
                  completion_schedule: Optional[dict] = None,
                  eos_id: Optional[int] = None) -> GenerationResult:
-        """prompt_tokens (B, S) -> greedy/temperature decode.
+        """Static-batch wrapper over the continuous loop: submit B
+        requests at the current clock, drain, return (B, max_new)
+        tokens. With the default integer bucket table this reproduces
+        the seed engine token-for-token (same executables, same
+        sampling-key sequence, same storage trace).
 
         completion_schedule: {step: n_finish} forces sequences to finish
         (reproduces Fig 13's Best-of-N batch decay deterministically).
         """
-        cfg = self.cfg
-        prompt = jnp.asarray(prompt_tokens)
+        prompt = np.asarray(prompt_tokens)
         B, S = prompt.shape
+        assert not self.sched.has_work, \
+            "generate() requires an idle engine (drain submitted work first)"
         t_wall = time.perf_counter()
-
-        sched = BatchScheduler(eos_id=eos_id)
-        for _ in range(B):
-            sched.add(S, max_new)
-
-        # prefill (dense, sequential I/O — §4.1.1): modeled as streaming
-        # every non-resident layer once at sequential bandwidth.
-        logits, cache = jax.jit(lambda p, b: self.model.prefill(
-            p, b, max_len=S + max_new))(self.params, {"tokens": prompt})
-
-        out_tokens = np.full((B, max_new), -1, np.int32)
-        uid_rows = {s.uid: i for i, s in enumerate(sched.sequences.values())}
-        active_uids = list(uid_rows)
+        old_temp, old_eos = self._temperature, self.sched.eos_id
+        self._temperature = temperature
+        self.sched.eos_id = eos_id
+        # static batch wants an exact-length arena (seed behavior)
+        if self.arena is not None and self.arena.max_len != S + max_new \
+                and self.ctx_budget is None:
+            self.arena = None
+        uids = [self.submit(prompt[i], max_new) for i in range(B)]
         stats = []
-        last = logits[:, -1]
-
-        for step in range(max_new):
-            batch = len(active_uids)
-            if batch == 0:
-                break
-            plan_b, step_fn = self.decoder.executable_for(batch)
-            # NOTE: the engine pins the hot prefix statically (fixed
-            # region); batch-driven hot/cold REGION resizing
-            # (NeuronCache.rebalance) applies when the hot region is
-            # LRU-managed — here adaptation happens through the per-batch
-            # plan bucket (n_hot grows with batch) instead.
-            self.key, sk = jax.random.split(self.key)
-            toks = sample_tokens(sk, last, temperature)     # (B_cur,)
-            logits, cache, cidx = step_fn(self.params, toks[:, None], cache)
-            last = logits[:, 0]
-            ctx = S + step
-            st = self._storage_step(np.asarray(cidx), plan_b,
-                                    batch, ctx)
-            stats.append(st)
-
-            finish_uids = []
-            tok_map = {}
-            for row, uid in enumerate(active_uids):
-                seq = sched.sequences[uid]
-                out_tokens[uid_rows[uid], seq.n_generated] = int(toks[row])
-                tok_map[uid] = int(toks[row])
-            done = sched.step(tok_map)
-            finish_uids.extend(done)
-            if completion_schedule and step in completion_schedule:
-                extra = [u for u in active_uids if u not in finish_uids][
-                    : completion_schedule[step]]
-                for u in extra:
-                    sched.sequences[u].finished = True
-                finish_uids.extend(extra)
-
-            if finish_uids:
-                keep_rows = [r for r, u in enumerate(active_uids)
-                             if u not in finish_uids]
-                active_uids = [u for u in active_uids if u not in finish_uids]
-                if keep_rows and len(keep_rows) < batch:
-                    rows = jnp.asarray(keep_rows)
-                    # explicit per-key batch axes: k/v are (L,B,T,KV,dh);
-                    # kv_pos (B,T); length (B,)
-                    cache = {
-                        "k": cache["k"].take(rows, axis=1),
-                        "v": cache["v"].take(rows, axis=1),
-                        "kv_pos": cache["kv_pos"].take(rows, axis=0),
-                        "length": cache["length"].take(rows, axis=0),
-                    }
-                    last = last.take(rows, axis=0)
-
-        return GenerationResult(tokens=out_tokens, stats=stats,
+        step_i = 0
+        try:
+            while self.sched.has_work:
+                r = self.step()
+                if r is None:
+                    break
+                stats.append(r.stats)
+                if completion_schedule and step_i in completion_schedule:
+                    still = [u for u in uids if u in self.sched.running]
+                    self.cancel(still[: completion_schedule[step_i]])
+                step_i += 1
+        finally:
+            self._temperature, self.sched.eos_id = old_temp, old_eos
+        tokens = np.full((B, max_new), -1, np.int32)
+        for i, u in enumerate(uids):
+            gen = self.sched.sequences[u].generated
+            tokens[i, :len(gen)] = gen
+        return GenerationResult(tokens=tokens, stats=stats,
                                 wall_s=time.perf_counter() - t_wall)

@@ -1,9 +1,19 @@
-"""Continuous-batching scheduler: tracks live sequences, their
-completion (EOS or length), and the resulting effective-batch-size
-timeline that drives the dynamic CPU/NPU adaptation (paper §4.1.3,
-Fig 13: Best-of-N batch shrinks as candidates finish)."""
+"""Request-level continuous-batching scheduler (DESIGN.md §3).
+
+Tracks the full request lifecycle — queued (submitted, not yet
+admitted), running (owns a KV slot, decoding), finished — and the
+resulting effective-batch-size timeline that drives the dynamic
+CPU/NPU adaptation (paper §4.1.3, Fig 13). Unlike the seed's passive
+bookkeeping, requests can now *join* a running batch: `submit()`
+enqueues, the engine admits per step up to the decoder's next bucket
+boundary, so `batch_history` traces both growth and decay.
+
+All times are in the engine's modeled clock (seconds of effective
+latency), not wall time.
+"""
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Optional
 
@@ -11,41 +21,111 @@ import numpy as np
 
 
 @dataclass
-class Sequence:
+class Request:
+    """One generation request through its whole lifecycle."""
     uid: int
     prompt_len: int
     max_new: int
+    prompt: Optional[np.ndarray] = None    # (S,) int32; None for legacy add()
+    arrival_time: float = 0.0
     generated: list = field(default_factory=list)
     finished: bool = False
+    # modeled-clock timestamps, filled by the engine
+    admit_time: Optional[float] = None
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
 
     @property
     def n_generated(self) -> int:
         return len(self.generated)
 
+    @property
+    def ttft(self) -> Optional[float]:
+        if self.first_token_time is None:
+            return None
+        return self.first_token_time - self.arrival_time
+
+
+# Backwards-compatible name: the seed called these Sequences.
+Sequence = Request
+
 
 class BatchScheduler:
-    """Keeps the active set; reports batch-size changes."""
+    """Admission queue + active set + batch-size timeline."""
 
     def __init__(self, eos_id: Optional[int] = None):
         self.eos_id = eos_id
-        self.sequences: dict[int, Sequence] = {}
+        self.sequences: dict[int, Request] = {}
+        self.queue: deque[int] = deque()        # submitted, not admitted
+        self.running: list[int] = []            # admission order
         self._next_uid = 0
         self.batch_history: list[int] = []
 
-    def add(self, prompt_len: int, max_new: int) -> Sequence:
-        seq = Sequence(self._next_uid, prompt_len, max_new)
+    # ------------------------------------------------------ lifecycle ----
+    def submit(self, prompt, max_new: int,
+               arrival_time: float = 0.0) -> Request:
+        """Enqueue a request for admission (continuous batching)."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        req = Request(self._next_uid, int(prompt.shape[0]), max_new,
+                      prompt=prompt, arrival_time=arrival_time)
         self._next_uid += 1
-        self.sequences[seq.uid] = seq
-        return seq
+        self.sequences[req.uid] = req
+        self.queue.append(req.uid)
+        return req
 
+    def add(self, prompt_len: int, max_new: int) -> Request:
+        """Legacy static-batch entry: immediately running, no prompt."""
+        req = Request(self._next_uid, prompt_len, max_new)
+        self._next_uid += 1
+        self.sequences[req.uid] = req
+        self.running.append(req.uid)
+        return req
+
+    def pop_admissible(self, now: float, limit: int) -> list:
+        """Dequeue up to `limit` requests that have arrived by `now`
+        (FIFO; no reordering past the head — arrival order is part of
+        the modeled workload)."""
+        out = []
+        while self.queue and len(out) < limit:
+            req = self.sequences[self.queue[0]]
+            if req.arrival_time > now:
+                break
+            self.queue.popleft()
+            out.append(req)
+        return out
+
+    def admit(self, req: Request, now: float = 0.0):
+        req.admit_time = now
+        self.running.append(req.uid)
+
+    def finish(self, uid: int, now: float = 0.0):
+        """Force-finish (cancellation / Best-of-N early stop)."""
+        req = self.sequences[uid]
+        if not req.finished:
+            req.finished = True
+            req.finish_time = now
+        if uid in self.running:
+            self.running.remove(uid)
+
+    def next_arrival(self) -> Optional[float]:
+        if not self.queue:
+            return None
+        return self.sequences[self.queue[0]].arrival_time
+
+    # ----------------------------------------------------- properties ----
     @property
     def active(self) -> list:
-        return [s for s in self.sequences.values() if not s.finished]
+        return [self.sequences[u] for u in self.running]
 
     @property
     def batch_size(self) -> int:
-        return len(self.active)
+        return len(self.running)
 
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue) or bool(self.running)
+
+    # ----------------------------------------------------------- step ----
     def step(self, tokens_by_uid: dict):
         """Record one generated token per active sequence; mark EOS /
         length completions. Returns uids that finished this step."""
@@ -57,5 +137,8 @@ class BatchScheduler:
                     or seq.n_generated >= seq.max_new):
                 seq.finished = True
                 done.append(uid)
+        for uid in done:
+            if uid in self.running:
+                self.running.remove(uid)
         self.batch_history.append(self.batch_size)
         return done

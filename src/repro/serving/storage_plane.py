@@ -1,0 +1,301 @@
+"""Storage plane of the serving stack (DESIGN.md §2).
+
+Everything below the activation trace lives here: the segmented
+NeuronCache, the bundled ColdStore, the analytic compute/I-O pricing at
+deployment-size constants (TimingProfile), the neuron-cluster pipeline
+simulator, and the single-I/O-thread PrefetchExecutor that overlaps
+next-layer miss fetches with current-layer pricing (paper §4.3: compute
+of one matrix overlaps I/O of the next).
+
+The plane's public surface is deliberately narrow:
+
+    plane.step(trace, plan, batch, ctx) -> TokenStats
+
+where `trace` is the real per-layer cold-cluster selection (L, G, kc)
+produced by the data plane. The orchestrator (serving/engine.py) never
+touches cache/coldstore internals.
+"""
+from __future__ import annotations
+
+import weakref
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.cache import NeuronCache
+from repro.core.clusters import HybridPlan
+from repro.core.coldstore import ColdStore
+from repro.core.io_model import StorageModel, UFS40
+from repro.core.pipeline import ClusterTask, PrefetchExecutor, \
+    simulate_pipeline
+from repro.core.planner import HardwareProfile
+
+
+@dataclass(frozen=True)
+class TimingProfile:
+    """Cost constants for the storage plane.
+
+    The engine's data plane runs the (reduced) model for real; the
+    storage plane prices compute and I/O at the *deployment-size*
+    model's constants so compute/I-O ratios land in the paper's regime
+    (e.g. bamboo-7b FP16: 24KB Gate-Up-Down bundles — exactly §4.4).
+    Defaults derive from the engine's own config.
+    """
+    d_model: int
+    d_ff: int
+    num_heads: int
+    num_kv_heads: int
+    d_head: int
+    num_layers: int
+    rows: int = 3
+    itemsize: int = 2
+
+    @classmethod
+    def from_config(cls, cfg, rows):
+        return cls(d_model=cfg.d_model, d_ff=cfg.d_ff,
+                   num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+                   d_head=cfg.d_head, num_layers=cfg.num_layers, rows=rows)
+
+    @property
+    def bundle_bytes(self):
+        return self.rows * self.d_model * self.itemsize
+
+
+@dataclass
+class TokenStats:
+    compute_s: float
+    io_s: float            # raw (unpipelined) I/O demand
+    effective_s: float     # after pipeline composition
+    cache_hit_rate: float
+    n_miss: int
+    batch: int
+
+
+class StoragePlane:
+    """Cache + cold store + pipeline pricing behind one `step()` call."""
+
+    def __init__(self, cfg, params, plan, *, spec, storage: StorageModel
+                 = UFS40, offload_ratio: float = 0.5,
+                 hw: HardwareProfile = None, timing: TimingProfile = None,
+                 n_compute_workers: int = 4, prefetch: bool = True):
+        self.cfg = cfg
+        self.spec = spec
+        self.hw = hw or plan.hardware
+        self.n_workers = n_compute_workers
+        self.offload_ratio = offload_ratio
+
+        sc = cfg.sparse_ffn
+        self.cs = sc.cluster_size
+        N = cfg.d_ff
+        self.N = N
+        from repro.core.sparse_ffn import ffn_rows
+        self.timing = timing or TimingProfile.from_config(
+            cfg, ffn_rows(cfg.activation))
+        # scale factors: storage-plane costs priced at deployment size
+        # while traces come from the (possibly reduced) data-plane model
+        self.neuron_scale = self.timing.d_ff / N
+        self.layer_scale = self.timing.num_layers / cfg.num_layers
+        bundles = [np.asarray(params["layers"]["ffn"]["w"][l])
+                   for l in range(cfg.num_layers)]
+        self.coldstore = ColdStore(bundles, storage=storage,
+                                   two_phase=spec.two_phase,
+                                   block_size=24576 if spec.use_bundling
+                                   else 4096,
+                                   bundle_bytes_override=self.timing.bundle_bytes,
+                                   count_scale=self.neuron_scale)
+        self.bundle_bytes = self.coldstore.bundle_bytes()
+
+        # memory budget: resident = (1-offload)*N neurons per layer.
+        # With a pinned hot region (§4.2, PowerInfer-2) the budget splits
+        # between hot prefix and cold LRU (hot may not starve cold below
+        # its per-token working set). Baseline systems stream *all*
+        # activated neurons (hot included) through one LRU cache, with
+        # bundling-redundancy derating (spec.cache_efficiency).
+        resident = int(N * (1.0 - offload_ratio))
+        plan1 = plan.plan_for_batch(1)
+        if spec.pinned_hot:
+            hot_cap = (resident // 2) // self.cs * self.cs
+            self.n_hot = min(plan1.n_hot, max(hot_cap, self.cs))
+            cold_capacity = max(resident - self.n_hot, self.cs) \
+                * cfg.num_layers
+        else:
+            self.n_hot = 0
+            cold_capacity = max(int(resident * spec.cache_efficiency),
+                                self.cs) * cfg.num_layers
+        # the per-token activated set always includes the plan's hot
+        # prefix; pinned systems never do I/O for it.
+        self.plan_hot = plan1.n_hot
+        # the hot prefix is pinned (fixed region); the LRU capacity below
+        # is entirely the cold region.
+        self.cache = NeuronCache(cfg.num_layers, N, self.cs,
+                                 capacity_neurons=cold_capacity,
+                                 hot_fraction=0.0,
+                                 bytes_per_neuron=self.bundle_bytes)
+        # warm the cold cache with the most-frequent cold neurons
+        per_layer = cold_capacity // cfg.num_layers
+        for l in range(cfg.num_layers):
+            ids = range(self.n_hot, min(self.n_hot + per_layer, N))
+            self.cache.admit_cold(l, list(ids))
+        self.cache.stats.reset()
+        self.coldstore.reset_stats()
+        # ONE I/O thread (single UFS command queue, §4.3): layer l+1's
+        # misses are fetched while layer l is being priced. The thread
+        # is non-daemon, so tie its shutdown to this plane's lifetime —
+        # engines are created freely in benchmarks and must not
+        # accumulate idle executors.
+        self.prefetcher = PrefetchExecutor() if prefetch else None
+        if self.prefetcher is not None:
+            self._finalizer = weakref.finalize(
+                self, PrefetchExecutor.shutdown, self.prefetcher)
+
+    # ---------------------------------------------------- timing model ----
+    def _ffn_flops_token(self, plan: HybridPlan):
+        t = self.timing
+        per_neuron = 2 * t.rows * t.d_model
+        hot = plan.n_hot * self.neuron_scale * per_neuron
+        cold = plan.total_cold * self.neuron_scale * per_neuron
+        return hot, cold
+
+    def _attn_flops_token(self, ctx_len: float):
+        t = self.timing
+        return 4 * t.num_heads * t.d_head * ctx_len \
+            + 4 * t.d_model * (t.num_heads + 2 * t.num_kv_heads) * t.d_head
+
+    def _compute_time(self, plan: HybridPlan, batch: int, ctx_len: float):
+        hot_f, cold_f = self._ffn_flops_token(plan)
+        L = self.timing.num_layers
+        attn = self._attn_flops_token(ctx_len) * L * batch
+        if self.spec.hybrid_engines:
+            # hot on the dense engine, cold on the sparse path, overlapped
+            t_ffn = max(hot_f / self.hw.dense_engine_flops,
+                        cold_f / self.hw.sparse_engine_flops) * L * batch
+        elif self.spec.use_predictor:
+            t_ffn = (hot_f + cold_f) / self.hw.sparse_engine_flops * L * batch
+        else:
+            # dense everything (llama.cpp): all N neurons on sparse engine
+            t_ffn = (self.timing.d_ff * 2 * self.timing.rows
+                     * self.timing.d_model) \
+                / self.hw.sparse_engine_flops * L * batch
+        return t_ffn + attn / self.hw.dense_engine_flops
+
+    def prefill_cost(self, prompt_len: int, batch: int = 1) -> float:
+        """Modeled prefill seconds (§4.1.1: NPU-centric dense prefill;
+        every non-resident layer slice streams once at sequential
+        bandwidth, overlapped with dense compute)."""
+        t = self.timing
+        n_off = int(t.d_ff * self.offload_ratio)
+        io = self.coldstore.storage.read_time(
+            n_off * t.bundle_bytes * t.num_layers, 524288, random=False)
+        ffn = t.d_ff * 2 * t.rows * t.d_model
+        attn = self._attn_flops_token(prompt_len / 2.0)
+        comp = (ffn + attn) * t.num_layers * prompt_len * batch \
+            / self.hw.dense_engine_flops
+        return max(io, comp)
+
+    # ------------------------------------------------------- pricing ----
+    def _fetch_layer(self, l: int, misses) -> float:
+        """Cold-store I/O for one layer's misses (runs on the I/O
+        thread when prefetch is enabled). Returns modeled seconds."""
+        spec = self.spec
+        if not misses:
+            return 0.0
+        if spec.use_bundling:
+            gate_active = np.random.default_rng(l).random(
+                len(misses)) < 0.8 if spec.two_phase else None
+            return self.coldstore.fetch(l, misses, gate_active).io_time
+        # unbundled: R scattered 4KB-class reads per neuron
+        # (paper §4.4 — this is what bundling removes)
+        R = self.timing.rows
+        per = self.bundle_bytes // R
+        nbytes = int(per * len(misses) * R * self.neuron_scale)
+        io_l = self.coldstore.storage.read_time(
+            nbytes, min(4096, per), random=True)
+        self.coldstore.total_bytes += nbytes
+        self.coldstore.total_io_time += io_l
+        return io_l
+
+    def step(self, trace, plan: HybridPlan, batch: int,
+             ctx_len: float) -> TokenStats:
+        """Price one decode step given the real cluster trace
+        `trace` (L, G, kc) from the data plane."""
+        cfg, spec = self.cfg, self.spec
+        L = cfg.num_layers
+        cs = self.cs
+        comp_total = self._compute_time(plan, batch, ctx_len)
+        h0, m0 = self.cache.stats.hits, self.cache.stats.misses
+
+        # Phase 1 — cache lookups, strictly in layer order (the LRU
+        # state sequence is part of the modeled behavior).
+        per_layer = []
+        for l in range(L):
+            if spec.use_predictor:
+                ids = np.unique(np.asarray(trace[l]).reshape(-1))
+                cold_ids = (self.plan_hot
+                            + (ids[:, None] * cs
+                               + np.arange(cs)[None]).reshape(-1))
+                cold_ids = cold_ids[cold_ids < self.N]
+                if spec.pinned_hot:
+                    neuron_ids = cold_ids       # hot prefix pinned: no I/O
+                else:
+                    # activated set = hot prefix + selected cold, all
+                    # streamed through the single cache
+                    neuron_ids = np.concatenate(
+                        [np.arange(self.plan_hot), cold_ids])
+            else:
+                neuron_ids = np.arange(self.N)       # dense: everything
+            if spec.use_cache:
+                hits, misses = self.cache.lookup_cold(l, neuron_ids)
+                self.cache.admit_cold(l, misses)
+            else:
+                hits, misses = [], list(neuron_ids)
+            per_layer.append((len(neuron_ids), misses))
+
+        # Phase 2 — fetch + price. With the prefetcher, layer l+1's
+        # misses are submitted to the I/O thread before layer l's fetch
+        # is consumed, so real data movement overlaps pricing; the
+        # modeled per-layer I/O times are identical either way.
+        futures = {}
+        if self.prefetcher is not None:
+            futures[0] = self.prefetcher.submit(
+                self._fetch_layer, 0, per_layer[0][1])
+        tasks = []
+        io_raw = 0.0
+        comp_per_matrix = comp_total / L
+        for l in range(L):
+            n_ids, misses = per_layer[l]
+            if self.prefetcher is not None:
+                if l + 1 < L:
+                    futures[l + 1] = self.prefetcher.submit(
+                        self._fetch_layer, l + 1, per_layer[l + 1][1])
+                io_l = futures.pop(l).result()
+            else:
+                io_l = self._fetch_layer(l, misses)
+            # price the trace's L_reduced layers at deployment depth
+            io_l *= self.layer_scale
+            io_raw += io_l
+            n_miss_clusters = max(len(misses) // cs, 0)
+            n_clusters = max(n_ids // cs, 1)
+            comp_c = comp_per_matrix / n_clusters
+            io_c = io_l / max(n_miss_clusters, 1) if io_l else 0.0
+            for c in range(n_clusters):
+                tasks.append(ClusterTask(l, c, comp_c,
+                                         io_c if c < n_miss_clusters else 0.0))
+
+        if spec.pipeline == "none":
+            eff = comp_total + io_raw
+        else:
+            res = simulate_pipeline(tasks, n_compute=self.n_workers,
+                                    policy=spec.pipeline)
+            eff = res.makespan
+        d_hits = self.cache.stats.hits - h0
+        d_miss = self.cache.stats.misses - m0
+        seen = d_hits + d_miss
+        hr = 1.0 if seen == 0 else d_hits / seen
+        return TokenStats(compute_s=comp_total, io_s=io_raw,
+                          effective_s=eff, cache_hit_rate=float(hr),
+                          n_miss=d_miss, batch=batch)
+
+    def close(self):
+        if self.prefetcher is not None:
+            self.prefetcher.shutdown()
+            self.prefetcher = None

@@ -2,7 +2,9 @@
 MoE dispatch, and I/O model invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.cache import LRUSet, NeuronCache
 from repro.core.io_model import UFS40, UFS31, HOST_DMA, with_core, \

@@ -1,0 +1,231 @@
+"""Layered serving stack: continuous batching (mid-stream admission,
+bucket-boundary retrace discipline), slot-based KV recycling, the
+generate() compatibility wrapper vs the seed decode loop, and
+StoragePlane.step determinism with/without the prefetch thread."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.adaptation import BucketedDecoder
+from repro.core.baselines import POWERINFER2
+from repro.core.planner import build_plan, permute_ffn_params
+from repro.models import dense
+from repro.serving.engine import ServeEngine
+from repro.serving.sampler import sample_tokens
+from repro.serving.scheduler import BatchScheduler
+from repro.serving.storage_plane import StoragePlane
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("smollm-135m").reduced()
+    model = dense.make_model(cfg)
+    params = model.init(jax.random.key(0))
+    plan = build_plan(cfg)
+    params = permute_ffn_params(params, plan.neuron_order)
+    prompt = np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (4, 16)).astype(np.int32)
+    return cfg, params, plan, prompt
+
+
+# ------------------------------------------------- continuous batching ----
+
+def test_midstream_admission_grows_then_decays(setup):
+    """A request admitted at step k>0 joins the running batch, crosses
+    a bucket boundary with at most one decoder retrace, and completes;
+    batch_history shows growth then decay."""
+    cfg, params, plan, _ = setup
+    eng = ServeEngine(cfg, params, plan, spec=POWERINFER2,
+                      offload_ratio=0.5, buckets=(1, 2, 4, 8),
+                      ctx_budget=40, temperature=0.8)
+    rng = np.random.default_rng(1)
+    for _ in range(2):
+        eng.submit(rng.integers(0, cfg.vocab_size, 16), max_new=8)
+    r = eng.step()
+    assert r.stats.batch == 2
+    eng.step()
+
+    # mid-stream admission: 2 -> 3 crosses the 2->4 bucket boundary
+    switches0 = eng.decoder.switches
+    traces0 = len(eng.decoder._cache)
+    resizes0 = eng.arena.resizes
+    uid = eng.submit(rng.integers(0, cfg.vocab_size, 16), max_new=4)
+    r = eng.step()
+    assert uid in r.admitted
+    assert r.stats.batch == 3
+    assert eng.arena.n_slots == 4                      # next bucket
+    assert eng.decoder.switches - switches0 == 1       # one swap
+    assert len(eng.decoder._cache) - traces0 == 1      # one new trace
+    assert eng.arena.resizes - resizes0 == 1           # one reshape
+
+    rep = eng.run_until_drained()
+    assert not eng.sched.has_work
+    assert eng.sched.sequences[uid].finished
+    hist = eng.sched.batch_history
+    assert max(hist) == 3 and hist[0] == 2 and hist[-1] == 0
+    grow = hist.index(3)
+    assert any(b < 3 for b in hist[grow:])             # decay after growth
+    # the joiner generated its full budget
+    assert len(eng.sched.sequences[uid].generated) == 4
+    assert rep.total_tokens == sum(s.batch for s in rep.stats)
+
+
+def test_kv_slots_recycled_after_completion(setup):
+    """A completed request's slot returns to the free list and is
+    reused by the next admission without any arena reshape."""
+    cfg, params, plan, _ = setup
+    eng = ServeEngine(cfg, params, plan, spec=POWERINFER2,
+                      offload_ratio=0.5, buckets=(1, 2, 4),
+                      ctx_budget=40, temperature=0.8)
+    rng = np.random.default_rng(2)
+    uids = [eng.submit(rng.integers(0, cfg.vocab_size, 16), max_new=n)
+            for n in (2, 6, 6, 6)]
+    eng.step()
+    r = eng.step()                                     # uid 0 completes here
+    assert uids[0] in r.finished
+    freed_slot = 0
+    assert freed_slot in eng.arena.free
+    resizes0 = eng.arena.resizes
+
+    new_uid = eng.submit(rng.integers(0, cfg.vocab_size, 16), max_new=2)
+    r = eng.step()
+    assert new_uid in r.admitted
+    assert eng.arena.slot_of[new_uid] == freed_slot    # recycled
+    assert eng.arena.resizes == resizes0               # no reshape
+    assert eng.arena.n_slots == 4
+    eng.run_until_drained()
+    assert not eng.sched.has_work
+    assert eng.arena.n_free == eng.arena.n_slots
+
+
+def test_scheduler_admission_queue_fifo():
+    sched = BatchScheduler()
+    r1 = sched.submit(np.arange(4), 8, arrival_time=0.0)
+    r2 = sched.submit(np.arange(4), 8, arrival_time=5.0)
+    r3 = sched.submit(np.arange(4), 8, arrival_time=1.0)
+    # r2 blocks the head at t=2 even though r3 has arrived (FIFO)
+    assert [r.uid for r in sched.pop_admissible(2.0, 10)] == [r1.uid]
+    assert sched.next_arrival() == 5.0
+    got = sched.pop_admissible(6.0, 10)
+    assert [r.uid for r in got] == [r2.uid, r3.uid]
+    assert sched.pop_admissible(100.0, 10) == []
+
+
+# -------------------------------------------------- compat wrapper ----
+
+def _reference_generate(cfg, params, plan, prompt, max_new, temperature,
+                        seed=0):
+    """The seed engine's decode loop (static batch, compaction-by-take),
+    data plane only — the behavioral contract generate() must keep."""
+    model = dense.make_model(cfg)
+    step_traced = dense.make_decode_step(cfg, collect_indices=True)
+    decoder = BucketedDecoder(
+        plan_source=plan,
+        make_step=lambda p: (lambda pr, t, c: step_traced(pr, t, c, p)),
+        buckets=tuple(range(1, 65)))
+    key = jax.random.key(seed)
+    prompt = jnp.asarray(prompt)
+    B, S = prompt.shape
+    logits, cache = jax.jit(lambda p, b: model.prefill(
+        p, b, max_len=S + max_new))(params, {"tokens": prompt})
+    out = np.full((B, max_new), -1, np.int32)
+    active = list(range(B))
+    n_gen = {i: 0 for i in active}
+    last = logits[:, -1]
+    for step in range(max_new):
+        if not active:
+            break
+        _, step_fn = decoder.executable_for(len(active))
+        key, sk = jax.random.split(key)
+        toks = sample_tokens(sk, last, temperature)
+        logits, cache, _ = step_fn(params, toks[:, None], cache)
+        last = logits[:, 0]
+        finish = []
+        for row, uid in enumerate(active):
+            out[uid, n_gen[uid]] = int(toks[row])
+            n_gen[uid] += 1
+            if n_gen[uid] >= max_new:
+                finish.append(uid)
+        if finish:
+            keep = [r for r, u in enumerate(active) if u not in finish]
+            active = [u for u in active if u not in finish]
+            if keep and len(keep) < len(n_gen):
+                rows = jnp.asarray(keep)
+                cache = {"k": cache["k"].take(rows, axis=1),
+                         "v": cache["v"].take(rows, axis=1),
+                         "kv_pos": cache["kv_pos"].take(rows, axis=0),
+                         "length": cache["length"].take(rows, axis=0)}
+                last = last.take(rows, axis=0)
+    return out
+
+
+def test_generate_matches_seed_loop(setup):
+    """generate() (continuous loop + slot arena + active-mask union)
+    reproduces the seed static-batch path token-for-token."""
+    cfg, params, plan, prompt = setup
+    ref = _reference_generate(cfg, params, plan, prompt, max_new=6,
+                              temperature=0.8, seed=0)
+    eng = ServeEngine(cfg, params, plan, spec=POWERINFER2,
+                      offload_ratio=0.5, seed=0)
+    res = eng.generate(prompt, max_new=6, temperature=0.8)
+    assert np.array_equal(res.tokens, ref)
+
+
+def test_generate_deterministic_and_stats_shape(setup):
+    cfg, params, plan, prompt = setup
+    r1 = ServeEngine(cfg, params, plan, spec=POWERINFER2,
+                     offload_ratio=0.5).generate(prompt, max_new=4,
+                                                 temperature=0.0)
+    r2 = ServeEngine(cfg, params, plan, spec=POWERINFER2,
+                     offload_ratio=0.5).generate(prompt, max_new=4,
+                                                 temperature=0.0)
+    assert np.array_equal(r1.tokens, r2.tokens)
+    assert [s.batch for s in r1.stats] == [4, 4, 4, 4]
+
+
+# ------------------------------------------------------ storage plane ----
+
+def test_storage_plane_stats_prefetch_invariant(setup):
+    """The prefetch thread moves real bytes but must not change any
+    modeled number: step() stats with the I/O thread on equal the
+    sequential (pre-refactor _storage_step) pricing exactly."""
+    cfg, params, plan, prompt = setup
+
+    def run(prefetch):
+        eng = ServeEngine(cfg, params, plan, spec=POWERINFER2,
+                          offload_ratio=0.5, prefetch=prefetch, seed=0)
+        res = eng.generate(prompt, max_new=5, temperature=0.0)
+        return eng, res
+
+    eng_p, res_p = run(True)
+    eng_s, res_s = run(False)
+    assert eng_p.storage.prefetcher is not None
+    assert eng_p.storage.prefetcher.submitted > 0
+    assert eng_s.storage.prefetcher is None
+    assert np.array_equal(res_p.tokens, res_s.tokens)
+    for a, b in zip(res_p.stats, res_s.stats):
+        assert a == b                      # dataclass field-wise equality
+    assert eng_p.coldstore.total_bytes == eng_s.coldstore.total_bytes
+    assert eng_p.coldstore.total_io_time == eng_s.coldstore.total_io_time
+    assert eng_p.cache.stats.hits == eng_s.cache.stats.hits
+    assert eng_p.cache.stats.misses == eng_s.cache.stats.misses
+
+
+def test_engine_has_no_storage_pricing(setup):
+    """Acceptance: the orchestrator no longer owns storage-plane
+    pricing; cache/coldstore construction lives in StoragePlane."""
+    cfg, params, plan, _ = setup
+    import inspect
+    from repro.serving import engine as engine_mod
+    src = inspect.getsource(engine_mod)
+    assert "_storage_step" not in src
+    assert "NeuronCache(" not in src
+    assert "ColdStore(" not in src
+    eng = ServeEngine(cfg, params, plan, spec=POWERINFER2,
+                      offload_ratio=0.5)
+    assert isinstance(eng.storage, StoragePlane)
+    # legacy read access still works
+    assert eng.cache is eng.storage.cache
+    assert eng.coldstore is eng.storage.coldstore

@@ -3,7 +3,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.models.ssm import causal_conv, segsum, ssd_chunked, ssd_step
 from repro.models.rglru import rglru_full, rglru_step
