@@ -1,23 +1,29 @@
 """Continuous-batching serving benchmark: throughput, TTFT and
-per-token latency percentiles under a request stream.
+per-token latency percentiles under a request stream — single-device
+spec comparison plus tensor-parallel mesh scaling.
 
 A deterministic arrival schedule (seeded exponential inter-arrivals —
 Poisson-like traffic on the modeled clock) drives the engine's
-submit/step loop for each SystemSpec. Requests join the running batch
-at decoder bucket boundaries (prefill-on-admit into free KV slots) and
-leave as they complete, so the batch-size timeline — the signal the
-paper's dynamic CPU/NPU adaptation consumes (§4.1.3) — moves both ways
-under load.
+submit/step loop. Part 1 compares SystemSpecs (llama.cpp-analogue vs
+PowerInfer-2) on one device; part 2 runs the PowerInfer-2 spec over
+1/2/4/...-device meshes (same grouped plan everywhere, so cluster
+selection — and the decoded tokens — are identical across mesh sizes)
+and reports per-device-count throughput/TTFT.
 
 All latencies are the storage plane's modeled effective seconds, so
-llama.cpp-analogue vs PowerInfer-2 differences reflect the paper's
-mechanisms, not host jit noise.
-"""
-import numpy as np
+differences reflect the paper's mechanisms (and the mesh split), not
+host jit noise.
 
-from benchmarks.common import emit, engine_setup, paper_timing
-from repro.core.baselines import LLAMACPP, POWERINFER2
-from repro.serving.engine import ServeEngine
+CLI (also runnable argless via benchmarks.run):
+  python -m benchmarks.bench_serving --devices 2 --tiny \
+      --json BENCH_serving_2dev.json
+--devices N forces N host platform devices when jax is not yet
+initialized (CI smoke); --json writes the machine-readable results.
+"""
+import argparse
+import json
+import os
+import sys
 
 N_REQUESTS = 10
 PROMPT_LEN = 16
@@ -25,49 +31,156 @@ MEAN_INTERARRIVAL_S = 2e-3
 BUCKETS = (1, 2, 4, 8)
 
 
-def run_spec(cfg, params, plan, spec, seed=0):
-    eng = ServeEngine(cfg, params, plan, spec=spec, offload_ratio=0.5,
-                      timing=paper_timing(), buckets=BUCKETS,
-                      ctx_budget=PROMPT_LEN + 16, temperature=0.8)
+def _scaled_plan(cfg, plan, groups: int):
+    """Copy `plan` with per-bucket plans regrouped `groups`-way (the
+    operating point benchmarks/common pins, cold region group-aligned
+    so every divisor mesh size owns whole groups)."""
+    import copy
+    from repro.core.clusters import make_plan, scale_plan_for_batch
+    cs = cfg.sparse_ffn.cluster_size
+    base = make_plan(cfg.d_ff, 0.125, 0.10, cs, groups=groups)
+    plan = copy.copy(plan)
+    plan.plans = {b: scale_plan_for_batch(base, cfg.d_ff, b, cs)
+                  for b in (1, 2, 4, 8, 16, 32)}
+    return plan
+
+
+def _request_stream(cfg, eng, n_requests, max_new_hi, seed=0):
+    import numpy as np
     rng = np.random.default_rng(seed)
-    arrivals = np.cumsum(rng.exponential(MEAN_INTERARRIVAL_S, N_REQUESTS))
+    arrivals = np.cumsum(rng.exponential(MEAN_INTERARRIVAL_S, n_requests))
     for t in arrivals:
         eng.submit(rng.integers(0, cfg.vocab_size, PROMPT_LEN),
-                   max_new=int(rng.integers(6, 14)), arrival_time=float(t))
+                   max_new=int(rng.integers(6, max_new_hi)),
+                   arrival_time=float(t))
+
+
+def run_spec(cfg, params, plan, spec, seed=0, mesh=None, n_requests=None,
+             max_new_hi=14):
+    from benchmarks.common import paper_timing
+    from repro.serving.engine import ServeEngine
+    eng = ServeEngine(cfg, params, plan, spec=spec, offload_ratio=0.5,
+                      timing=paper_timing(), buckets=BUCKETS,
+                      ctx_budget=PROMPT_LEN + 16, temperature=0.8,
+                      mesh=mesh)
+    _request_stream(cfg, eng, n_requests or N_REQUESTS, max_new_hi, seed)
     rep = eng.run_until_drained()
     assert not eng.sched.has_work
     return eng, rep
 
 
-def main():
-    rows = []
+def _summary(eng, rep):
+    pct = rep.latency_percentiles()
+    return {
+        "tok_s": round(rep.tokens_per_s, 2),
+        "ttft_ms": round(float(rep.ttft().mean()) * 1e3, 4),
+        "p50_ms": round(pct["p50"] * 1e3, 4),
+        "p90_ms": round(pct["p90"] * 1e3, 4),
+        "p99_ms": round(pct["p99"] * 1e3, 4),
+        "peak_batch": max(s.batch for s in rep.stats),
+        "n_shards": rep.stats[0].n_shards,
+        "tokens": {int(u): [int(t) for t in r.generated]
+                   for u, r in eng.sched.sequences.items()},
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force N host platform devices (pre-jax-init "
+                         "only); mesh sizes are the divisor chain up "
+                         "to N")
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: fewer/shorter requests")
+    ap.add_argument("--json", default=None,
+                    help="write results JSON (BENCH_*.json artifact)")
+    args = ap.parse_args(argv if argv is not None else sys.argv[1:]
+                         if __name__ == "__main__" else [])
+
+    if args.devices > 1 and "jax" not in sys.modules:
+        flags = os.environ.get("XLA_FLAGS", "")
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count="
+            f"{args.devices}").strip()
+
+    import jax
+    import numpy as np
+    from benchmarks.common import emit, engine_setup
+    from repro.core.baselines import LLAMACPP, POWERINFER2
+    from repro.launch.mesh import make_serving_mesh
+
+    n_req = 4 if args.tiny else N_REQUESTS
+    max_new_hi = 8 if args.tiny else 14
     cfg, model, params, plan, prompt = engine_setup(
-        "smollm-135m", activation="relu2", mode="relu")
-    print(f"{'system':16s} {'tok/s':>10s} {'ttft-ms':>9s} {'p50-ms':>8s} "
-          f"{'p90-ms':>8s} {'p99-ms':>8s} {'peak-batch':>10s}")
+        "smollm-135m", activation="relu2", mode="relu",
+        train_steps=10 if args.tiny else 40)
+    rows, out = [], {"bench": "serving", "tiny": bool(args.tiny),
+                     "device_count": jax.device_count(), "results": []}
+
+    # ---- part 1: spec comparison, single device --------------------------
+    print(f"{'system':16s} {'tp':>3s} {'tok/s':>10s} {'ttft-ms':>9s} "
+          f"{'p50-ms':>8s} {'p90-ms':>8s} {'p99-ms':>8s} {'peak':>5s}")
     for spec in (LLAMACPP, POWERINFER2):
-        eng, rep = run_spec(cfg, params, plan, spec)
-        pct = rep.latency_percentiles()
-        ttft = float(rep.ttft().mean())
-        peak = max(s.batch for s in rep.stats)
-        print(f"{spec.name:16s} {rep.tokens_per_s:10.1f} "
-              f"{ttft * 1e3:9.3f} {pct['p50'] * 1e3:8.3f} "
-              f"{pct['p90'] * 1e3:8.3f} {pct['p99'] * 1e3:8.3f} "
-              f"{peak:10d}")
+        eng, rep = run_spec(cfg, params, plan, spec, n_requests=n_req,
+                            max_new_hi=max_new_hi)
+        s = _summary(eng, rep)
+        eng.close()
+        print(f"{spec.name:16s} {1:3d} {s['tok_s']:10.1f} "
+              f"{s['ttft_ms']:9.3f} {s['p50_ms']:8.3f} "
+              f"{s['p90_ms']:8.3f} {s['p99_ms']:8.3f} "
+              f"{s['peak_batch']:5d}")
         tag = spec.name.replace(".", "").replace("-", "_")
-        rows.append((f"serving_tok_s_{tag}", round(rep.tokens_per_s, 2),
-                     f"{N_REQUESTS} reqs, Poisson-like arrivals, "
-                     f"50% offload"))
-        rows.append((f"serving_ttft_ms_{tag}", round(ttft * 1e3, 4),
+        rows.append((f"serving_tok_s_{tag}", s["tok_s"],
+                     f"{n_req} reqs, Poisson-like arrivals, 50% offload"))
+        rows.append((f"serving_ttft_ms_{tag}", s["ttft_ms"],
                      "mean time-to-first-token (modeled, incl prefill)"))
-        rows.append((f"serving_p99_ms_{tag}", round(pct['p99'] * 1e3, 4),
-                     f"p50 {pct['p50'] * 1e3:.4f} p90 "
-                     f"{pct['p90'] * 1e3:.4f}"))
+        rows.append((f"serving_p99_ms_{tag}", s["p99_ms"],
+                     f"p50 {s['p50_ms']} p90 {s['p90_ms']}"))
         rows.append((f"serving_batch_growth_{tag}",
-                     f"{eng.sched.batch_history[0]}->{peak}",
+                     f"{eng.sched.batch_history[0]}->{s['peak_batch']}",
                      "continuous batching: batch grew under load then "
                      "drained"))
+        out["results"].append(dict(s, system=spec.name, tp=1,
+                                   tokens=None))
+
+    # ---- part 2: tensor-parallel mesh scaling ----------------------------
+    tp_sizes = [n for n in (1, 2, 4, 8) if n <= jax.device_count()]
+    groups = max(tp_sizes)
+    tokens_ref = None
+    if groups > 1:
+        tp_plan = _scaled_plan(cfg, plan, groups)
+        for n in tp_sizes:
+            mesh = make_serving_mesh(n) if n > 1 else None
+            eng, rep = run_spec(cfg, params, tp_plan, POWERINFER2,
+                                mesh=mesh, n_requests=n_req,
+                                max_new_hi=max_new_hi)
+            s = _summary(eng, rep)
+            eng.close()
+            if tokens_ref is None:
+                tokens_ref = s["tokens"]
+            ident = s["tokens"] == tokens_ref
+            print(f"{'powerinfer-2':16s} {n:3d} {s['tok_s']:10.1f} "
+                  f"{s['ttft_ms']:9.3f} {s['p50_ms']:8.3f} "
+                  f"{s['p90_ms']:8.3f} {s['p99_ms']:8.3f} "
+                  f"{s['peak_batch']:5d}"
+                  + ("" if ident else "  [tokens diverged]"))
+            rows.append((f"serving_tok_s_tp{n}", s["tok_s"],
+                         f"{n}-device mesh, {groups}-group plan, "
+                         f"tokens {'identical' if ident else 'DIVERGED'}"))
+            rows.append((f"serving_ttft_ms_tp{n}", s["ttft_ms"],
+                         f"{n}-device mesh mean TTFT"))
+            out["results"].append(dict(s, system="powerinfer-2", tp=n,
+                                       tokens_identical=ident,
+                                       tokens=None))
+    else:
+        print("# single visible device: mesh scaling skipped "
+              "(set --devices N before jax init)")
+
     emit(rows)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=1)
+        print(f"# wrote {args.json}")
     return rows
 
 

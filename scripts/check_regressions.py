@@ -1,0 +1,133 @@
+"""Regression gate: fail CI only on *new* test failures.
+
+Runs the tier-1 suite (no -x, so the full failure set is visible),
+diffs the failed test ids against a recorded known-failure baseline,
+and exits nonzero iff a test outside the baseline failed. Baseline
+entries that now pass are "stale": the default (CI) mode fails on them
+too — the ratchet only moves forward, forcing a baseline prune commit —
+while `--update` rewrites the baseline to the current failure set
+(pruning fixed tests, recording triaged new ones).
+
+The baseline is keyed by jax major.minor so each CI matrix leg (oldest
+pin vs latest) carries its own failure set; a missing key means "no
+known failures" for that leg.
+
+  python scripts/check_regressions.py                 # gate (CI)
+  python scripts/check_regressions.py --update        # re-record
+  python scripts/check_regressions.py --allow-stale   # warn, don't fail
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import xml.etree.ElementTree as ET
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_BASELINE = os.path.join(REPO, "tests", "known_failures.json")
+
+
+def jax_series() -> str:
+    import jax
+    return ".".join(jax.__version__.split(".")[:2])
+
+
+def run_pytest(extra: list) -> tuple:
+    """Run the suite, return (failed_ids, n_collected). Uses junit xml
+    so collection errors surface as failures too."""
+    with tempfile.TemporaryDirectory() as td:
+        xml_path = os.path.join(td, "report.xml")
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+            os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+        cmd = [sys.executable, "-m", "pytest", "-q",
+               f"--junitxml={xml_path}"] + extra
+        r = subprocess.run(cmd, cwd=REPO, env=env)
+        if not os.path.exists(xml_path):
+            print(f"pytest produced no junit xml (exit {r.returncode})",
+                  file=sys.stderr)
+            sys.exit(2)
+        # 0 = all passed, 1 = some tests failed (the diff handles it).
+        # Anything else (interrupted / internal error / usage / no
+        # tests) means the junit xml may be partial — never treat a
+        # partially-run suite as green.
+        if r.returncode not in (0, 1):
+            print(f"pytest did not run to completion (exit "
+                  f"{r.returncode}); refusing to diff a partial suite",
+                  file=sys.stderr)
+            sys.exit(2)
+        root = ET.parse(xml_path).getroot()
+        failed, total = set(), 0
+        for case in root.iter("testcase"):
+            total += 1
+            nodeid = f"{case.get('classname', '')}::{case.get('name', '')}"
+            if case.find("failure") is not None \
+                    or case.find("error") is not None:
+                failed.add(nodeid)
+        return failed, total
+
+
+def load_baseline(path: str) -> dict:
+    if not os.path.exists(path):
+        return {}
+    with open(path) as f:
+        return json.load(f)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite this jax series' baseline to the "
+                         "current failure set")
+    ap.add_argument("--allow-stale", action="store_true",
+                    help="fixed baseline entries warn instead of fail")
+    ap.add_argument("pytest_args", nargs="*",
+                    help="extra args forwarded to pytest (after --)")
+    args = ap.parse_args()
+
+    series = jax_series()
+    failed, total = run_pytest(args.pytest_args)
+    baseline_all = load_baseline(args.baseline)
+    known = set(baseline_all.get(series, baseline_all.get("default", [])))
+
+    new = sorted(failed - known)
+    stale = sorted(known - failed)
+    print(f"\n[check_regressions] jax {series}: {total} tests, "
+          f"{len(failed)} failed ({len(known)} known)")
+
+    if args.update:
+        baseline_all[series] = sorted(failed)
+        if not baseline_all[series]:
+            baseline_all.pop(series)
+        with open(args.baseline, "w") as f:
+            json.dump(baseline_all, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"[check_regressions] baseline[{series}] <- "
+              f"{len(failed)} entries ({args.baseline})")
+        return 0
+
+    rc = 0
+    if new:
+        print(f"[check_regressions] {len(new)} NEW failure(s):")
+        for t in new:
+            print(f"  + {t}")
+        rc = 1
+    if stale:
+        print(f"[check_regressions] {len(stale)} baseline entr"
+              f"{'y is' if len(stale) == 1 else 'ies are'} now passing "
+              f"— prune with --update:")
+        for t in stale:
+            print(f"  - {t}")
+        if not args.allow_stale:
+            rc = 1
+    if rc == 0:
+        print("[check_regressions] OK: no new failures, baseline tight")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,145 @@
+"""JAX version-compatibility shims, centralized.
+
+The repo tracks the *current* jax API (explicit axis types, context
+meshes via `jax.set_mesh`, `jax.shard_map` with `axis_names`); older
+pins — including the oldest-supported CI leg — predate those names.
+Every renamed/moved symbol the codebase relies on is resolved here
+once, so the next upstream rename breaks one module (and a CI matrix
+leg), not the default branch.
+
+Shimmed surface:
+  * AxisType            — `jax.sharding.AxisType` (new) or a stand-in
+                          enum accepted (and ignored) by `make_mesh`.
+  * make_mesh           — accepts `axis_types` on every version.
+  * set_mesh            — context manager: `jax.set_mesh` when present,
+                          otherwise a thread-local context mesh + the
+                          classic `with mesh:` resource env.
+  * current_mesh        — the mesh set by `set_mesh` (abstract on new
+                          jax, concrete on old), or None.
+  * shard_map           — `jax.shard_map(..., axis_names=, check_vma=)`
+                          mapped onto `jax.experimental.shard_map`'s
+                          `auto=`/`check_rep=` on old versions.
+  * CompilerParams      — pallas TPU compiler params (renamed from
+                          TPUCompilerParams across releases).
+"""
+from __future__ import annotations
+
+import contextlib
+import enum
+import inspect
+import threading
+
+import jax
+
+
+# ------------------------------------------------------------ AxisType ----
+
+if hasattr(jax.sharding, "AxisType"):
+    AxisType = jax.sharding.AxisType
+else:
+    class AxisType(enum.Enum):          # type: ignore[no-redef]
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+
+_MAKE_MESH_TAKES_AXIS_TYPES = (
+    "axis_types" in inspect.signature(jax.make_mesh).parameters)
+
+
+def make_mesh(axis_shapes, axis_names, *, axis_types=None, devices=None):
+    """`jax.make_mesh` that tolerates `axis_types` on every version.
+
+    Old jax has no axis-type concept; dropping the argument is exact
+    because this repo only ever requests Auto axes."""
+    kw = {}
+    if devices is not None:
+        kw["devices"] = devices
+    if axis_types is not None and _MAKE_MESH_TAKES_AXIS_TYPES:
+        kw["axis_types"] = axis_types
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kw)
+
+
+# ------------------------------------------------------- context mesh ----
+
+_tls = threading.local()
+
+
+def _ctx_stack():
+    if not hasattr(_tls, "mesh_stack"):
+        _tls.mesh_stack = []
+    return _tls.mesh_stack
+
+
+# One probe decides both halves of the context-mesh shim: set_mesh and
+# current_mesh must agree on where the ambient mesh lives, or versions
+# in the gap (get_abstract_mesh exists, jax.set_mesh doesn't) would
+# push onto a stack that current_mesh never reads.
+_HAS_SET_MESH = hasattr(jax, "set_mesh")
+
+
+@contextlib.contextmanager
+def set_mesh(mesh):
+    """Enter `mesh` as the ambient mesh (`jax.set_mesh` analogue).
+
+    On old jax the concrete mesh goes on a thread-local stack (read by
+    `current_mesh`) and also enters the classic `with mesh:` resource
+    env so bare-PartitionSpec machinery keeps working."""
+    if _HAS_SET_MESH:
+        with jax.set_mesh(mesh):
+            yield mesh
+        return
+    _ctx_stack().append(mesh)
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        _ctx_stack().pop()
+
+
+def current_mesh():
+    """The ambient mesh set by `set_mesh`, or None outside any."""
+    if _HAS_SET_MESH:
+        m = jax.sharding.get_abstract_mesh()
+        if m is None or getattr(m, "empty", True):
+            return None
+        return m
+    stack = _ctx_stack()
+    return stack[-1] if stack else None
+
+
+# ---------------------------------------------------------- shard_map ----
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+              check_vma=True):
+    """`jax.shard_map` with the modern keyword surface on every version.
+
+    axis_names: the *manual* axes (new-jax semantics). Old jax takes the
+    complement as `auto=`; `check_vma` maps to `check_rep`."""
+    if hasattr(jax, "shard_map"):
+        kw = {"check_vma": check_vma}
+        if axis_names is not None:
+            kw["axis_names"] = set(axis_names)
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    # Old xla's spmd partitioner miscompiles partial-manual shard_map
+    # (auto=...) — go fully manual instead. Axes absent from the specs
+    # are per-device-replicated either way, and check_rep=False skips
+    # the replication check that partial-manual would have discharged.
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False if axis_names is not None
+                      else check_vma)
+
+
+# ------------------------------------------------------------- pallas ----
+
+def pallas_tpu_compiler_params():
+    """The pallas-TPU CompilerParams class under its current name."""
+    from jax.experimental.pallas import tpu as pltpu
+    cp = getattr(pltpu, "CompilerParams", None) \
+        or getattr(pltpu, "TPUCompilerParams", None)
+    if cp is None:
+        raise AttributeError(
+            "no pallas TPU CompilerParams class found in this jax")
+    return cp

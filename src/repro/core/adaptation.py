@@ -25,21 +25,32 @@ def bucket_for(batch: int, buckets=(1, 2, 4, 8, 16, 32)) -> int:
     return buckets[-1]
 
 
+def mesh_key(mesh):
+    """Hashable executable-table key for a device mesh (None = no mesh)."""
+    if mesh is None:
+        return None
+    return tuple(zip(mesh.axis_names, tuple(dict(mesh.shape).values())))
+
+
 @dataclass
 class BucketedDecoder:
-    """Pre-jitted decode executables per batch bucket.
+    """Pre-jitted decode executables per (batch bucket × mesh shape).
 
     make_step(plan) must return a decode callable
     (params, tokens, cache) -> (logits, cache) specialized to the plan;
-    it is jitted once per bucket and cached (the paper's pre-generated
-    NPU graph table, §5 Batch-Adaptive Planning).
+    it is jitted once per key and cached (the paper's pre-generated
+    NPU graph table, §5 Batch-Adaptive Planning). With a `mesh`, the
+    executable is traced and run inside that mesh context, so the
+    sparse-FFN shard_map path and all sharding constraints bind to it —
+    tensor-parallel and single-device executables coexist in the table.
     """
     plan_source: ExecutionPlan
     make_step: Callable[[HybridPlan], Callable]
     buckets: tuple = (1, 2, 4, 8, 16, 32)
-    _cache: Dict[int, tuple] = field(default_factory=dict)
+    mesh: object = None
+    _cache: Dict[tuple, tuple] = field(default_factory=dict)
     switches: int = 0
-    _last_bucket: int = -1
+    _last_key: tuple = ()
 
     def prewarm(self):
         for b in self.buckets:
@@ -47,16 +58,29 @@ class BucketedDecoder:
 
     def executable_for(self, batch: int):
         b = bucket_for(batch, self.buckets)
-        if b not in self._cache:
+        key = (b, mesh_key(self.mesh))
+        if key not in self._cache:
             plan = self.plan_source.plan_for_batch(b)
-            self._cache[b] = (plan, jax.jit(self.make_step(plan)))
-        if b != self._last_bucket:
+            fn = jax.jit(self.make_step(plan))
+            if self.mesh is not None:
+                fn = self._bind_mesh(fn, self.mesh)
+            self._cache[key] = (plan, fn)
+        if key != self._last_key:
             self.switches += 1
-            self._last_bucket = b
-        return self._cache[b]
+            self._last_key = key
+        return self._cache[key]
+
+    @staticmethod
+    def _bind_mesh(fn, mesh):
+        from repro.compat import set_mesh
+
+        def call(*args, **kwargs):
+            with set_mesh(mesh):
+                return fn(*args, **kwargs)
+        return call
 
     def live_plans(self):
-        return {b: p for b, (p, _) in self._cache.items()}
+        return {b: p for (b, _), (p, _) in self._cache.items()}
 
 
 @dataclass

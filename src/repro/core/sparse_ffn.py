@@ -90,25 +90,34 @@ def _use_shard_map(groups: int) -> bool:
     m = current_mesh()
     if m is None or "model" not in m.axis_names or groups <= 1:
         return False
-    return dict(m.shape).get("model") == groups
+    n = dict(m.shape).get("model", 1)
+    return n > 1 and groups % n == 0
 
 
 def _cold_path_shard_map(params, x, activation: str, mode: str,
                          plan: HybridPlan, n_hot: int, n_cold: int,
                          active_mask=None):
     """Shard-local cold path: each 'model' shard scores its own neuron
-    slice, picks its top clusters, gathers them locally, computes the
-    partial FFN output and psums. x (B, D) -> ((B, D), (G, kc)).
+    slice, picks each local group's top clusters, gathers them locally,
+    computes the partial FFN output and psums once per layer.
+    x (B, D) -> ((B, D), (G, kc)).
+
+    The mesh 'model' axis (size n) owns G/n whole groups per shard —
+    group-granular selection is therefore *exactly* the single-device
+    math, shard-decomposed: no cross-shard candidate ever competes in a
+    top-k, so 1-, 2-, 4- and 8-way runs pick identical clusters.
 
     active_mask (B,) bool: rows excluded from the batch-union predictor
     scoring (free KV-arena slots decode garbage lanes; they must not
     steer cluster selection for live requests)."""
-    import jax.experimental  # noqa: F401  (shard_map is jax.shard_map)
     from jax.sharding import PartitionSpec as PS
+    from repro.compat import shard_map
     from repro.sharding import current_mesh
 
     mesh = current_mesh()
     G, cs, kc = plan.groups, plan.cluster_size, plan.clusters_per_group
+    n_model = dict(mesh.shape)["model"]
+    g_loc = G // n_model                              # groups per shard
     nc_g = n_cold // G // cs
     w = params["w"]
     R, D = w.shape[1], w.shape[2]
@@ -118,16 +127,20 @@ def _cold_path_shard_map(params, x, activation: str, mode: str,
     Bp = params["pred"]["B"][:, n_hot:]               # (r, Nc) col-sharded
 
     def local(xl, wcl, Al, Bl, maskl):
-        # xl (B, D) replicated over model; wcl (nc_g, cs, R, D) local;
-        # Bl (r, Nc_local) local predictor columns.
+        # xl (B, D) replicated over model; wcl (g_loc*nc_g, cs, R, D)
+        # local clusters; Bl (r, Nc_local) local predictor columns.
         h = jnp.einsum("bd,dr->br", xl.astype(jnp.float32),
                        Al.astype(jnp.float32))
         scores = jnp.einsum("br,rn->bn", h, Bl.astype(jnp.float32))
         union = jnp.where(maskl[:, None], scores,
                           -jnp.inf).max(axis=0)       # (Nc_local,)
-        cscore = union.reshape(nc_g, cs).max(axis=-1)
-        _, idx = jax.lax.top_k(cscore, kc)            # (kc,) local clusters
-        gath = wcl[idx].reshape(kc * cs, R, D)        # local gather
+        cscore = union.reshape(g_loc * nc_g, cs).max(axis=-1)
+        _, idx = jax.lax.top_k(cscore.reshape(g_loc, nc_g),
+                               kc)                    # (g_loc, kc)
+        gath = jnp.take_along_axis(
+            wcl.reshape(g_loc, nc_g, cs, R, D),
+            idx[:, :, None, None, None], axis=1)      # (g_loc,kc,cs,R,D)
+        gath = gath.reshape(g_loc * kc * cs, R, D)
         g = jnp.einsum("bd,kd->bk", xl, gath[:, 0])
         if R == 3:
             u = jnp.einsum("bd,kd->bk", xl, gath[:, 1])
@@ -135,19 +148,19 @@ def _cold_path_shard_map(params, x, activation: str, mode: str,
         else:
             hh = act(g)
         if mode == "cats":
-            tok = scores.reshape(-1, nc_g, cs)
-            tok = jnp.take_along_axis(tok, idx[None, :, None], axis=1)
+            tok = scores.reshape(-1, g_loc, nc_g, cs)
+            tok = jnp.take_along_axis(tok, idx[None, :, :, None], axis=2)
             hh = hh * (tok.reshape(hh.shape) > 0.0).astype(hh.dtype)
         y = jnp.einsum("bk,kd->bd", hh.astype(w.dtype), gath[:, -1])
         # psum in f32: XLA:CPU's AllReducePromotion pass crashes on
         # bf16 all-reduce inside partial-manual shard_map (and f32
         # reduction is numerically better anyway).
         return (jax.lax.psum(y.astype(jnp.float32), "model"),
-                jax.lax.all_gather(idx, "model"))     # (G, kc)
+                jax.lax.all_gather(idx, "model").reshape(G, kc))
 
     if active_mask is None:
         active_mask = jnp.ones((x.shape[0],), bool)
-    fn = jax.shard_map(
+    fn = shard_map(
         local, mesh=mesh,
         in_specs=(PS(None, None), PS("model", None, None, None),
                   PS(None, None), PS(None, "model"), PS(None)),

@@ -26,10 +26,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-# JAX renamed TPUCompilerParams -> CompilerParams across releases; take
-# whichever this install provides so both versions lower the kernels.
-CompilerParams = getattr(pltpu, "CompilerParams", None) \
-    or pltpu.TPUCompilerParams
+from repro.compat import pallas_tpu_compiler_params
+
+# Renamed TPUCompilerParams -> CompilerParams across jax releases; the
+# compat module resolves whichever this install provides.
+CompilerParams = pallas_tpu_compiler_params()
 
 
 def _kernel(idx_ref, x_ref, w_ref, o_ref, *, activation: str, gated: bool):

@@ -24,6 +24,7 @@ import numpy as np      # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
 from repro.configs import get_config, ASSIGNED_ARCHS, INPUT_SHAPES  # noqa: E402
+from repro.compat import set_mesh                                   # noqa: E402
 from repro.launch.mesh import make_production_mesh                  # noqa: E402
 from repro.launch import input_specs as ispec                       # noqa: E402
 from repro.models.model import build_model                          # noqa: E402
@@ -105,7 +106,7 @@ def lower_target(arch: str, shape_name: str, multi_pod: bool,
         model = build_model(cfg)
         groups = mesh.shape["model"]
 
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             pspecs = ispec.param_specs(model, cfg, mesh,
                                        fsdp=fsdp and shape.kind == "train")
             batch = ispec.input_specs(cfg, shape, mesh)
@@ -201,7 +202,7 @@ def _cost_of(arch, shape_name, cfg, multi_pod):
     _blocks.UNROLL = True
     _attn.FLASH_FULL_BLOCKS = True
     try:
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             pspecs = ispec.param_specs(model, cfg, mesh,
                                        fsdp=shape.kind == "train"
                                        and cfg.param_count() > 5e10)

@@ -9,21 +9,37 @@ touch jax device state (the dry-run sets XLA_FLAGS before any init).
 """
 from __future__ import annotations
 
-import jax
+from repro.compat import AxisType, make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_host_mesh():
     """1-device mesh for CPU smoke runs of mesh-aware code paths."""
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((1, 1), ("data", "model"),
+                     axis_types=(AxisType.Auto,) * 2)
+
+
+def make_serving_mesh(n_model: int, n_data: int = 1):
+    """(data, model) mesh for the tensor-parallel serving plane.
+
+    Uses the first n_data*n_model visible devices (on CPU runs, force
+    them with XLA_FLAGS=--xla_force_host_platform_device_count=N before
+    the first jax call)."""
+    import jax
+    need = n_data * n_model
+    avail = jax.device_count()
+    if need > avail:
+        raise ValueError(
+            f"serving mesh ({n_data}, {n_model}) needs {need} devices "
+            f"but only {avail} are visible")
+    return make_mesh((n_data, n_model), ("data", "model"),
+                     axis_types=(AxisType.Auto,) * 2,
+                     devices=jax.devices()[:need])
 
 
 # v5e hardware constants for the roofline (per chip)

@@ -5,6 +5,10 @@ Plan (offline §5) -> permute weights hot-first -> ServeEngine (online
 
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m \
       --reduced --offload 0.5 --bon 4 --max-new 32
+
+Tensor-parallel serving (DESIGN.md §3): pass --tp N to run the engine
+over an (1, N) device mesh — on CPU hosts force the devices first with
+XLA_FLAGS=--xla_force_host_platform_device_count=N.
 """
 from __future__ import annotations
 
@@ -24,7 +28,7 @@ from repro.serving.engine import ServeEngine
 
 def build_engine(arch: str, reduced: bool = True, offload: float = 0.5,
                  spec=POWERINFER2, storage=UFS40, profile: bool = False,
-                 seed: int = 0, **engine_kwargs):
+                 seed: int = 0, tp: int = 1, **engine_kwargs):
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
@@ -40,6 +44,9 @@ def build_engine(arch: str, reduced: bool = True, offload: float = 0.5,
     else:
         plan = build_plan(cfg)
     params = permute_ffn_params(params, plan.neuron_order)
+    if tp > 1 and "mesh" not in engine_kwargs:
+        from repro.launch.mesh import make_serving_mesh
+        engine_kwargs["mesh"] = make_serving_mesh(tp)
     return ServeEngine(cfg, params, plan, spec=spec, storage=storage,
                        offload_ratio=offload, seed=seed,
                        **engine_kwargs), cfg
@@ -55,11 +62,13 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--host-dma", action="store_true",
                     help="use the TPU host-DMA tier instead of UFS 4.0")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel degree (mesh 'model' axis)")
     args = ap.parse_args()
 
     storage = HOST_DMA if args.host_dma else UFS40
     engine, cfg = build_engine(args.arch, args.reduced, args.offload,
-                               storage=storage, profile=True)
+                               storage=storage, profile=True, tp=args.tp)
     rng = np.random.default_rng(0)
     prompt = rng.integers(0, cfg.vocab_size,
                           (args.bon, args.prompt_len)).astype(np.int32)

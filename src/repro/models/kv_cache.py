@@ -9,7 +9,7 @@ Three kinds, all pure pytrees so they thread through jit / scan:
 `kv_pos` is materialized for both cache kinds so decode_attention masks
 uniformly (-1 = empty slot).
 
-`KVSlotArena` (DESIGN.md §4) wraps the full cache as a fixed-slot arena
+`KVSlotArena` (DESIGN.md §5) wraps the full cache as a fixed-slot arena
 for continuous batching: requests are admitted into free slots and
 freed on completion without reshaping live rows; the arena only changes
 shape at decoder bucket boundaries.
@@ -106,16 +106,35 @@ class KVSlotArena:
     decoder bucket-boundary crossings.
     """
 
-    def __init__(self, n_layers, n_slots, max_len, kv_heads, d_head, dtype):
+    def __init__(self, n_layers, n_slots, max_len, kv_heads, d_head, dtype,
+                 mesh=None):
         self.dims = (n_layers, kv_heads, d_head)
         self.max_len = max_len
         self.dtype = dtype
-        self.cache = init_full_cache(n_layers, n_slots, max_len,
-                                     kv_heads, d_head, dtype)
+        self.mesh = mesh
+        self.cache = self._shard(init_full_cache(
+            n_layers, n_slots, max_len, kv_heads, d_head, dtype))
         self.free = list(range(n_slots))
         self.slot_of: dict = {}          # uid -> slot
         self.writes = 0
         self.resizes = 0
+
+    def _shard(self, cache):
+        """Place the arena on the mesh, KV heads over 'model' (the
+        tensor-parallel head axis; per-device KV memory shrinks 1/n).
+        Non-dividing head counts fall back to replication via
+        _filter_spec, so any mesh is safe."""
+        if self.mesh is None:
+            return cache
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.sharding import _filter_spec
+        spec = {"k": P(None, None, None, "model", None),
+                "v": P(None, None, None, "model", None),
+                "kv_pos": P(None, None), "length": P(None)}
+        return {
+            k: jax.device_put(v, NamedSharding(
+                self.mesh, _filter_spec(spec[k], self.mesh, shape=v.shape)))
+            for k, v in cache.items()}
 
     @property
     def n_slots(self) -> int:
@@ -175,7 +194,7 @@ class KVSlotArena:
                 }
             else:
                 new = gat
-        self.cache = new
+        self.cache = self._shard(new)
         self.slot_of = {u: i for i, u in enumerate(uid_order)}
         self.free = list(range(k_live, new_n_slots))
         self.resizes += 1

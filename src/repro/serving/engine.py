@@ -21,6 +21,13 @@ This module only orchestrates: submit()/step()/run_until_drained()
 drive requests through slot-based KV management (models/kv_cache.
 KVSlotArena); generate() remains as a static-batch compatibility
 wrapper over the same loop.
+
+Tensor parallel (DESIGN.md §3): pass `mesh=` a (data, model) device
+mesh and all three layers shard over 'model' — params and the KV arena
+are placed on the mesh, decode executables are keyed on (bucket × mesh
+shape) and traced in the mesh context (the sparse-FFN cold path goes
+shard-local via shard_map), and the storage plane prices per-device
+cache slices and I/O channels, aggregating TokenStats across shards.
 """
 from __future__ import annotations
 
@@ -32,6 +39,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import set_mesh
 from repro.configs.base import ModelConfig
 from repro.core.adaptation import BucketedDecoder, bucket_for
 from repro.core.baselines import SystemSpec, POWERINFER2
@@ -131,28 +139,37 @@ class ServeEngine:
                  ctx_budget: int = None,
                  eos_id: int = None,
                  temperature: float = 0.8,
-                 prefetch: bool = True):
+                 prefetch: bool = True,
+                 mesh=None):
         assert cfg.family in ("dense", "vlm"), "engine demo targets dense family"
         self.cfg = cfg
-        self.params = params
         self.plan = plan
         self.spec = spec
         self.key = jax.random.key(seed)
+        # ---- device mesh (tensor parallel over 'model') ----
+        self.mesh = mesh
+        self.n_shards = dict(mesh.shape).get("model", 1) \
+            if mesh is not None else 1
 
         # ---- data plane ----
         self.model = dense.make_model(cfg)
+        if mesh is not None:
+            params = self._shard_params(params)
+        self.params = params
         self._step_traced = dense.make_decode_step(cfg, collect_indices=True)
         self.decoder = BucketedDecoder(
             plan_source=plan,
             make_step=lambda p: (lambda pr, t, c, m: self._step_traced(
                 pr, t, c, p, m)),
-            buckets=tuple(buckets) if buckets else tuple(range(1, 65)))
+            buckets=tuple(buckets) if buckets else tuple(range(1, 65)),
+            mesh=mesh)
 
         # ---- storage plane ----
         self.storage = StoragePlane(
             cfg, params, plan, spec=spec, storage=storage,
             offload_ratio=offload_ratio, hw=hw, timing=timing,
-            n_compute_workers=n_compute_workers, prefetch=prefetch)
+            n_compute_workers=n_compute_workers, prefetch=prefetch,
+            n_shards=self.n_shards)
 
         # ---- scheduler + KV slots ----
         self.sched = BatchScheduler(eos_id=eos_id)
@@ -166,6 +183,20 @@ class ServeEngine:
     def close(self):
         """Release the storage plane's I/O thread (also runs at GC)."""
         self.storage.close()
+
+    # --------------------------------------------------- mesh placement ----
+    def _shard_params(self, params):
+        """Place params on the mesh with the model's param sharding —
+        the bundled (L, N, R, D) FFN tensor and the predictor columns
+        row/col-split over 'model'; non-dividing dims replicate."""
+        from jax.sharding import NamedSharding
+        from repro.sharding import _filter_spec
+        mesh, specs = self.mesh, self.model.param_spec()
+
+        def put(a, s):
+            fs = _filter_spec(s, mesh, shape=a.shape)
+            return jax.device_put(a, NamedSharding(mesh, fs))
+        return jax.tree.map(put, params, specs)
 
     # ------------------------------------------------ legacy attributes ----
     # Storage-plane internals used to live on the engine; keep read
@@ -213,7 +244,8 @@ class ServeEngine:
         if self.arena is None:
             T = max(self.ctx_budget or 0, min_len)
             self.arena = KVSlotArena(cfg.num_layers, n_slots, T,
-                                     cfg.num_kv_heads, cfg.d_head, dtype)
+                                     cfg.num_kv_heads, cfg.d_head, dtype,
+                                     mesh=self.mesh)
             self._last = jnp.zeros((n_slots, cfg.vocab_padded),
                                    dtype_of(cfg.compute_dtype))
         elif min_len > self.arena.max_len:
@@ -238,13 +270,18 @@ class ServeEngine:
             self._last = gat
 
     def _prefill(self, tokens: np.ndarray):
-        """Jitted dense prefill padded to the arena length."""
+        """Jitted dense prefill padded to the arena length (traced and
+        run inside the serving mesh when tensor-parallel)."""
         B, S = tokens.shape
         T = self.arena.max_len
         key = (B, S, T)
         if key not in self._prefill_fns:
             self._prefill_fns[key] = jax.jit(
                 lambda p, b: self.model.prefill(p, b, max_len=T))
+        if self.mesh is not None:
+            with set_mesh(self.mesh):
+                return self._prefill_fns[key](self.params,
+                                              {"tokens": tokens})
         return self._prefill_fns[key](self.params, {"tokens": tokens})
 
     def _admit(self, reqs: list):

@@ -1,4 +1,4 @@
-"""Request-level continuous-batching scheduler (DESIGN.md §3).
+"""Request-level continuous-batching scheduler (DESIGN.md §4).
 
 Tracks the full request lifecycle — queued (submitted, not yet
 admitted), running (owns a KV slot, decoding), finished — and the

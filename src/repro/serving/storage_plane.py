@@ -62,13 +62,26 @@ class TimingProfile:
 
 
 @dataclass
-class TokenStats:
+class ShardStats:
+    """Per-device slice of one decode step's storage accounting."""
     compute_s: float
-    io_s: float            # raw (unpipelined) I/O demand
-    effective_s: float     # after pipeline composition
+    io_s: float
+    effective_s: float
     cache_hit_rate: float
     n_miss: int
+
+
+@dataclass
+class TokenStats:
+    compute_s: float       # critical-path (max-over-shards) compute
+    io_s: float            # raw (unpipelined) I/O demand, worst shard
+    effective_s: float     # after pipeline composition, max over shards
+    cache_hit_rate: float  # aggregate over every shard's cache
+    n_miss: int            # summed across shards
     batch: int
+    n_shards: int = 1
+    io_total_s: float = 0.0   # summed raw demand (aggregate traffic)
+    shards: list = None       # per-shard ShardStats when n_shards > 1
 
 
 class StoragePlane:
@@ -77,12 +90,18 @@ class StoragePlane:
     def __init__(self, cfg, params, plan, *, spec, storage: StorageModel
                  = UFS40, offload_ratio: float = 0.5,
                  hw: HardwareProfile = None, timing: TimingProfile = None,
-                 n_compute_workers: int = 4, prefetch: bool = True):
+                 n_compute_workers: int = 4, prefetch: bool = True,
+                 n_shards: int = 1):
         self.cfg = cfg
         self.spec = spec
         self.hw = hw or plan.hardware
         self.n_workers = n_compute_workers
         self.offload_ratio = offload_ratio
+        # Tensor-parallel accounting: device s owns the contiguous
+        # neuron slice [s*N/n, (s+1)*N/n) — the same row split the mesh
+        # 'model' axis applies to the bundled FFN tensor — with its own
+        # NeuronCache slice and its own storage channel.
+        self.n_shards = max(int(n_shards), 1)
 
         sc = cfg.sparse_ffn
         self.cs = sc.cluster_size
@@ -126,17 +145,28 @@ class StoragePlane:
         # prefix; pinned systems never do I/O for it.
         self.plan_hot = plan1.n_hot
         # the hot prefix is pinned (fixed region); the LRU capacity below
-        # is entirely the cold region.
-        self.cache = NeuronCache(cfg.num_layers, N, self.cs,
-                                 capacity_neurons=cold_capacity,
-                                 hot_fraction=0.0,
-                                 bytes_per_neuron=self.bundle_bytes)
-        # warm the cold cache with the most-frequent cold neurons
+        # is entirely the cold region. One segmented cache *per device
+        # shard*, each a 1/n miniature of the single-device cache:
+        # ownership follows the compute sharding (every device owns its
+        # share of the hot prefix plus its own cold groups — see
+        # _split_by_owner), so cold traffic splits uniformly and so
+        # does capacity. Per-device miss traffic shrinks with the mesh
+        # instead of replicating the whole LRU.
+        self.caches = [
+            NeuronCache(cfg.num_layers, N, self.cs,
+                        capacity_neurons=max(
+                            cold_capacity // self.n_shards, self.cs),
+                        hot_fraction=0.0,
+                        bytes_per_neuron=self.bundle_bytes)
+            for _ in range(self.n_shards)]
+        # warm each shard's cold cache with its most-frequent cold slice
         per_layer = cold_capacity // cfg.num_layers
         for l in range(cfg.num_layers):
-            ids = range(self.n_hot, min(self.n_hot + per_layer, N))
-            self.cache.admit_cold(l, list(ids))
-        self.cache.stats.reset()
+            ids = np.arange(self.n_hot, min(self.n_hot + per_layer, N))
+            for s, part in enumerate(self._split_by_owner(ids, plan1)):
+                self.caches[s].admit_cold(l, list(part))
+        for c in self.caches:
+            c.stats.reset()
         self.coldstore.reset_stats()
         # ONE I/O thread (single UFS command queue, §4.3): layer l+1's
         # misses are fetched while layer l is being priced. The thread
@@ -147,6 +177,39 @@ class StoragePlane:
         if self.prefetcher is not None:
             self._finalizer = weakref.finalize(
                 self, PrefetchExecutor.shutdown, self.prefetcher)
+
+    # ------------------------------------------------- shard ownership ----
+    @property
+    def cache(self):
+        """Shard 0's cache — the whole cache when n_shards == 1."""
+        return self.caches[0]
+
+    def _split_by_owner(self, neuron_ids, plan: HybridPlan = None):
+        """Partition global neuron ids by owning device shard,
+        following the compute sharding of the given plan: the plan's
+        cold region splits by *group* (each device owns G/n whole
+        groups — `_cold_path_shard_map`'s layout, so per-step cold
+        traffic is balanced by construction: every device selects
+        exactly kc*G/n clusters) and the plan's hot prefix splits
+        uniformly. Bucket switches move the hot/cold boundary, so a
+        neuron near it can migrate shards and miss once in its new
+        cache — the modeled cost of the resharding collective the mesh
+        pays on an executable swap. Without a plan (or when groups
+        don't divide), fall back to cluster-strided round-robin."""
+        ids = np.asarray(neuron_ids)
+        n = self.n_shards
+        if n == 1:
+            return [ids]
+        owner = (ids // self.cs) % n
+        if plan is not None and plan.groups >= n and plan.groups % n == 0:
+            G = plan.groups
+            width = max((self.N - plan.n_hot) // G, 1)
+            g_loc = G // n
+            owner = np.where(
+                ids >= plan.n_hot,
+                np.minimum((ids - plan.n_hot) // width, G - 1) // g_loc,
+                (ids * n) // max(plan.n_hot, 1))
+        return [ids[owner == s] for s in range(n)]
 
     # ---------------------------------------------------- timing model ----
     def _ffn_flops_token(self, plan: HybridPlan):
@@ -161,10 +224,23 @@ class StoragePlane:
         return 4 * t.num_heads * t.d_head * ctx_len \
             + 4 * t.d_model * (t.num_heads + 2 * t.num_kv_heads) * t.d_head
 
-    def _compute_time(self, plan: HybridPlan, batch: int, ctx_len: float):
+    def _attn_frac(self) -> float:
+        """Attention's per-device share: heads shard over 'model' when
+        they divide (the KV arena's layout); otherwise replicated."""
+        if self.n_shards > 1 and self.timing.num_heads % self.n_shards == 0 \
+                and self.timing.num_kv_heads % self.n_shards == 0:
+            return 1.0 / self.n_shards
+        return 1.0
+
+    def _compute_time(self, plan: HybridPlan, batch: int, ctx_len: float,
+                      shard_frac: float = 1.0):
+        """Per-device compute seconds: FFN flops scale with the device's
+        neuron-slice fraction, attention with the head split."""
         hot_f, cold_f = self._ffn_flops_token(plan)
+        hot_f, cold_f = hot_f * shard_frac, cold_f * shard_frac
         L = self.timing.num_layers
-        attn = self._attn_flops_token(ctx_len) * L * batch
+        attn = self._attn_flops_token(ctx_len) * L * batch \
+            * (self._attn_frac() if shard_frac < 1.0 else 1.0)
         if self.spec.hybrid_engines:
             # hot on the dense engine, cold on the sparse path, overlapped
             t_ffn = max(hot_f / self.hw.dense_engine_flops,
@@ -173,7 +249,7 @@ class StoragePlane:
             t_ffn = (hot_f + cold_f) / self.hw.sparse_engine_flops * L * batch
         else:
             # dense everything (llama.cpp): all N neurons on sparse engine
-            t_ffn = (self.timing.d_ff * 2 * self.timing.rows
+            t_ffn = (self.timing.d_ff * shard_frac * 2 * self.timing.rows
                      * self.timing.d_model) \
                 / self.hw.sparse_engine_flops * L * batch
         return t_ffn + attn / self.hw.dense_engine_flops
@@ -181,24 +257,26 @@ class StoragePlane:
     def prefill_cost(self, prompt_len: int, batch: int = 1) -> float:
         """Modeled prefill seconds (§4.1.1: NPU-centric dense prefill;
         every non-resident layer slice streams once at sequential
-        bandwidth, overlapped with dense compute)."""
+        bandwidth, overlapped with dense compute). Each device streams
+        and computes only its neuron slice."""
         t = self.timing
-        n_off = int(t.d_ff * self.offload_ratio)
+        n_off = int(t.d_ff * self.offload_ratio) // self.n_shards
         io = self.coldstore.storage.read_time(
             n_off * t.bundle_bytes * t.num_layers, 524288, random=False)
-        ffn = t.d_ff * 2 * t.rows * t.d_model
-        attn = self._attn_flops_token(prompt_len / 2.0)
+        ffn = t.d_ff * 2 * t.rows * t.d_model / self.n_shards
+        attn = self._attn_flops_token(prompt_len / 2.0) * self._attn_frac()
         comp = (ffn + attn) * t.num_layers * prompt_len * batch \
             / self.hw.dense_engine_flops
         return max(io, comp)
 
     # ------------------------------------------------------- pricing ----
-    def _fetch_layer(self, l: int, misses) -> float:
-        """Cold-store I/O for one layer's misses (runs on the I/O
-        thread when prefetch is enabled). Returns modeled seconds."""
+    def _fetch_shard(self, l: int, misses) -> float:
+        """Cold-store I/O for one shard's misses in one layer. Returns
+        modeled seconds on that shard's storage channel."""
         spec = self.spec
-        if not misses:
+        if not len(misses):
             return 0.0
+        misses = list(misses)
         if spec.use_bundling:
             gate_active = np.random.default_rng(l).random(
                 len(misses)) < 0.8 if spec.two_phase else None
@@ -214,41 +292,75 @@ class StoragePlane:
         self.coldstore.total_io_time += io_l
         return io_l
 
+    def _fetch_layer(self, l: int, misses_per_shard) -> list:
+        """One layer's miss fetches, every shard (runs as one job on
+        the I/O thread when prefetch is on). Returns per-shard modeled
+        seconds — each device has its own storage channel, so the times
+        are independent even though the modeled fetches run serially."""
+        return [self._fetch_shard(l, m) for m in misses_per_shard]
+
+    def _trace_neuron_ids(self, trace_l, n_hot: int):
+        """Map one layer's (G, kc) group-relative cluster trace to
+        global cold neuron ids (hot-first permuted space). `n_hot` is
+        the *stepped* plan's hot prefix — the trace's cluster ids are
+        relative to it, not to the batch-1 plan's."""
+        cs = self.cs
+        tr = np.asarray(trace_l)
+        if tr.ndim < 2:
+            tr = tr.reshape(1, -1)
+        G = tr.shape[0]
+        nc_g = max((self.N - n_hot) // cs // G, 1)
+        glob = tr.reshape(G, -1) + np.arange(G)[:, None] * nc_g
+        ids = np.unique(glob.reshape(-1))
+        cold = (n_hot
+                + (ids[:, None] * cs + np.arange(cs)[None]).reshape(-1))
+        return cold[cold < self.N]
+
     def step(self, trace, plan: HybridPlan, batch: int,
              ctx_len: float) -> TokenStats:
         """Price one decode step given the real cluster trace
-        `trace` (L, G, kc) from the data plane."""
+        `trace` (L, G, kc) from the data plane.
+
+        With n_shards > 1 every phase is per-device: each shard looks
+        up its own cache slice, fetches its own misses on its own
+        channel, and runs its own cluster pipeline over its share of
+        the compute; the step's effective time is the slowest shard
+        (the psum barrier at each layer's output keeps devices in
+        lock-step at layer granularity)."""
         cfg, spec = self.cfg, self.spec
         L = cfg.num_layers
         cs = self.cs
-        comp_total = self._compute_time(plan, batch, ctx_len)
-        h0, m0 = self.cache.stats.hits, self.cache.stats.misses
+        S = self.n_shards
+        comp_shard = self._compute_time(plan, batch, ctx_len,
+                                        shard_frac=1.0 / S)
+        base = [(c.stats.hits, c.stats.misses) for c in self.caches]
 
         # Phase 1 — cache lookups, strictly in layer order (the LRU
-        # state sequence is part of the modeled behavior).
+        # state sequence is part of the modeled behavior), shard-split.
         per_layer = []
         for l in range(L):
             if spec.use_predictor:
-                ids = np.unique(np.asarray(trace[l]).reshape(-1))
-                cold_ids = (self.plan_hot
-                            + (ids[:, None] * cs
-                               + np.arange(cs)[None]).reshape(-1))
-                cold_ids = cold_ids[cold_ids < self.N]
+                cold_ids = self._trace_neuron_ids(trace[l], plan.n_hot)
                 if spec.pinned_hot:
                     neuron_ids = cold_ids       # hot prefix pinned: no I/O
                 else:
                     # activated set = hot prefix + selected cold, all
                     # streamed through the single cache
                     neuron_ids = np.concatenate(
-                        [np.arange(self.plan_hot), cold_ids])
+                        [np.arange(plan.n_hot), cold_ids])
             else:
                 neuron_ids = np.arange(self.N)       # dense: everything
-            if spec.use_cache:
-                hits, misses = self.cache.lookup_cold(l, neuron_ids)
-                self.cache.admit_cold(l, misses)
-            else:
-                hits, misses = [], list(neuron_ids)
-            per_layer.append((len(neuron_ids), misses))
+            parts = self._split_by_owner(neuron_ids, plan)
+            misses_ps, n_ids_ps = [], []
+            for s, part in enumerate(parts):
+                if spec.use_cache:
+                    _, misses = self.caches[s].lookup_cold(l, part)
+                    self.caches[s].admit_cold(l, misses)
+                else:
+                    misses = list(part)
+                misses_ps.append(misses)
+                n_ids_ps.append(len(part))
+            per_layer.append((n_ids_ps, misses_ps))
 
         # Phase 2 — fetch + price. With the prefetcher, layer l+1's
         # misses are submitted to the I/O thread before layer l's fetch
@@ -258,42 +370,57 @@ class StoragePlane:
         if self.prefetcher is not None:
             futures[0] = self.prefetcher.submit(
                 self._fetch_layer, 0, per_layer[0][1])
-        tasks = []
-        io_raw = 0.0
-        comp_per_matrix = comp_total / L
+        tasks = [[] for _ in range(S)]
+        io_raw = [0.0] * S
+        comp_per_matrix = comp_shard / L
         for l in range(L):
-            n_ids, misses = per_layer[l]
+            n_ids_ps, misses_ps = per_layer[l]
             if self.prefetcher is not None:
                 if l + 1 < L:
                     futures[l + 1] = self.prefetcher.submit(
                         self._fetch_layer, l + 1, per_layer[l + 1][1])
-                io_l = futures.pop(l).result()
+                io_ps = futures.pop(l).result()
             else:
-                io_l = self._fetch_layer(l, misses)
-            # price the trace's L_reduced layers at deployment depth
-            io_l *= self.layer_scale
-            io_raw += io_l
-            n_miss_clusters = max(len(misses) // cs, 0)
-            n_clusters = max(n_ids // cs, 1)
-            comp_c = comp_per_matrix / n_clusters
-            io_c = io_l / max(n_miss_clusters, 1) if io_l else 0.0
-            for c in range(n_clusters):
-                tasks.append(ClusterTask(l, c, comp_c,
-                                         io_c if c < n_miss_clusters else 0.0))
+                io_ps = self._fetch_layer(l, misses_ps)
+            for s in range(S):
+                # price the trace's L_reduced layers at deployment depth
+                io_l = io_ps[s] * self.layer_scale
+                io_raw[s] += io_l
+                n_miss_clusters = max(len(misses_ps[s]) // cs, 0)
+                n_clusters = max(n_ids_ps[s] // cs, 1)
+                comp_c = comp_per_matrix / n_clusters
+                io_c = io_l / max(n_miss_clusters, 1) if io_l else 0.0
+                for c in range(n_clusters):
+                    tasks[s].append(ClusterTask(
+                        l, c, comp_c,
+                        io_c if c < n_miss_clusters else 0.0))
 
-        if spec.pipeline == "none":
-            eff = comp_total + io_raw
-        else:
-            res = simulate_pipeline(tasks, n_compute=self.n_workers,
-                                    policy=spec.pipeline)
-            eff = res.makespan
-        d_hits = self.cache.stats.hits - h0
-        d_miss = self.cache.stats.misses - m0
-        seen = d_hits + d_miss
-        hr = 1.0 if seen == 0 else d_hits / seen
-        return TokenStats(compute_s=comp_total, io_s=io_raw,
-                          effective_s=eff, cache_hit_rate=float(hr),
-                          n_miss=d_miss, batch=batch)
+        shards = []
+        for s in range(S):
+            if spec.pipeline == "none":
+                eff_s = comp_shard + io_raw[s]
+            else:
+                eff_s = simulate_pipeline(tasks[s], n_compute=self.n_workers,
+                                          policy=spec.pipeline).makespan
+            d_hits = self.caches[s].stats.hits - base[s][0]
+            d_miss = self.caches[s].stats.misses - base[s][1]
+            seen = d_hits + d_miss
+            shards.append(ShardStats(
+                compute_s=comp_shard, io_s=io_raw[s], effective_s=eff_s,
+                cache_hit_rate=1.0 if seen == 0 else d_hits / seen,
+                n_miss=d_miss))
+        tot_hits = sum(self.caches[s].stats.hits - base[s][0]
+                       for s in range(S))
+        tot_miss = sum(sh.n_miss for sh in shards)
+        seen = tot_hits + tot_miss
+        return TokenStats(
+            compute_s=comp_shard,
+            io_s=max(sh.io_s for sh in shards),
+            effective_s=max(sh.effective_s for sh in shards),
+            cache_hit_rate=1.0 if seen == 0 else float(tot_hits / seen),
+            n_miss=tot_miss, batch=batch, n_shards=S,
+            io_total_s=float(sum(sh.io_s for sh in shards)),
+            shards=shards if S > 1 else None)
 
     def close(self):
         if self.prefetcher is not None:

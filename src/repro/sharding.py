@@ -1,24 +1,20 @@
 """Sharding-constraint helpers usable from model code without a mesh.
 
 All model code calls `constrain(x, spec)`; outside a mesh context (CPU
-smoke tests) it is a no-op, inside `jax.set_mesh(...)` it becomes a
-`with_sharding_constraint`. Axis names: 'pod' (outer replica/data),
-'data' (batch), 'model' (tensor/expert/neuron/seq shards).
+smoke tests) it is a no-op, inside `repro.compat.set_mesh(...)` (the
+`jax.set_mesh` shim) it becomes a `with_sharding_constraint`. Axis
+names: 'pod' (outer replica/data), 'data' (batch), 'model'
+(tensor/expert/neuron/seq shards).
 """
 from __future__ import annotations
 
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import current_mesh
 
-def current_mesh():
-    try:
-        m = jax.sharding.get_abstract_mesh()
-    except Exception:
-        return None
-    if m is None or getattr(m, "empty", True):
-        return None
-    return m
+__all__ = ["current_mesh", "batch_axes", "constrain", "constrain_batch",
+           "BATCH"]
 
 
 def batch_axes(mesh=None):

@@ -1,0 +1,177 @@
+"""NeuronCache.rebalance() batch-growth/shrink edge cases, and the
+storage plane's per-shard cache accounting (which slices the same
+NeuronCache per mesh device — no mesh needed to test the pricing)."""
+import numpy as np
+import pytest
+
+from repro.core.cache import NeuronCache
+
+
+CAP, CS, LAYERS, N = 1024, 32, 2, 4096
+
+
+def make_cache():
+    return NeuronCache(LAYERS, N, CS, capacity_neurons=CAP,
+                       hot_fraction=0.5, bytes_per_neuron=96)
+
+
+def hot_neuron_capacity(c: NeuronCache) -> int:
+    return c.hot.capacity * c.cluster_size
+
+
+def test_hot_region_grows_monotonically_with_batch():
+    caps = []
+    for b in (1, 2, 4, 8, 16, 32, 64):
+        c = make_cache()
+        c.rebalance(b)
+        caps.append(hot_neuron_capacity(c))
+    assert caps == sorted(caps)
+    assert caps[-1] > caps[0]
+    # ramp saturates at batch 32: hot share 0.8 of capacity
+    assert caps[-2] == caps[-1] == int(CAP * 0.8) // CS * CS
+
+
+def test_rebalance_extremes_and_degenerate_batches():
+    c = make_cache()
+    c.rebalance(0)          # clamps: log2(max(0,1)) = 0 -> base split
+    assert hot_neuron_capacity(c) == int(CAP * 0.5) // CS * CS
+    assert c.cold.capacity == CAP - int(CAP * 0.5)
+    c.rebalance(10 ** 9)    # far beyond the ramp: capped at 0.8
+    assert hot_neuron_capacity(c) == int(CAP * 0.8) // CS * CS
+    assert c.cold.capacity == CAP - int(CAP * 0.8)
+
+
+def test_capacity_never_exceeded_through_grow_shrink_cycle():
+    c = make_cache()
+    rng = np.random.default_rng(0)
+    for b in (1, 8, 32, 4, 1, 64, 2):
+        c.rebalance(b)
+        # saturate both regions with traffic at the new split
+        for l in range(LAYERS):
+            c.admit_cold(l, rng.integers(0, N, 600))
+            for cl in range(40):
+                c.admit_hot_cluster(l, int(rng.integers(0, N // CS)))
+        assert len(c.cold) <= c.cold.capacity
+        assert len(c.hot) <= c.hot.capacity
+        assert c.resident_neurons <= CAP + CS  # cluster-rounding slack
+        assert c.hot.capacity * CS + c.cold.capacity <= CAP + CS
+
+
+def test_shrinking_cold_region_counts_evictions():
+    c = make_cache()
+    for l in range(LAYERS):
+        c.admit_cold(l, range(512))     # fill cold to its base capacity
+    filled = len(c.cold)
+    ev0 = c.stats.evictions
+    c.rebalance(32)                     # hot 0.8 -> cold capacity shrinks
+    assert c.cold.capacity == CAP - int(CAP * 0.8)
+    assert len(c.cold) == c.cold.capacity < filled
+    # every overflow entry was discarded and counted, exactly once
+    assert c.stats.evictions - ev0 == filled - c.cold.capacity
+
+
+def test_shrinking_hot_region_counts_cluster_evictions():
+    c = make_cache()
+    c.rebalance(32)                     # grow hot to 0.8
+    for cl in range(c.hot.capacity):
+        c.admit_hot_cluster(0, cl)      # fill hot completely
+    ev0 = c.stats.evictions
+    c.rebalance(1)                      # shrink back to the base split
+    dropped_clusters = int(CAP * 0.8) // CS - int(CAP * 0.5) // CS
+    assert c.stats.evictions - ev0 == dropped_clusters * CS
+    assert len(c.hot) <= c.hot.capacity
+
+
+def test_grow_shrink_preserves_lru_recency_order():
+    c = make_cache()
+    c.admit_cold(0, range(400))
+    c.lookup_cold(0, range(200, 400))   # touch the upper half (recent)
+    c.rebalance(64)                     # cold capacity shrinks below 400
+    cap = c.cold.capacity
+    assert cap < 400
+    kept = {k[1] for k in c.cold.keys()}
+    # LRU keeps the `cap` most recent: the touched 200..399 plus the
+    # newest untouched admissions right before them
+    assert kept == set(range(400 - cap, 400))
+
+
+# ------------------------------------------------- per-shard accounting ----
+
+def _tiny_plane(n_shards):
+    import dataclasses
+    import jax
+    from repro.configs import get_config
+    from repro.core.baselines import POWERINFER2
+    from repro.core.planner import build_plan
+    from repro.models.model import build_model
+    cfg = get_config("smollm-135m").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    plan = build_plan(cfg)
+    from repro.serving.storage_plane import StoragePlane
+    return cfg, plan, StoragePlane(
+        cfg, params, plan, spec=POWERINFER2, offload_ratio=0.5,
+        prefetch=False, n_shards=n_shards)
+
+
+def test_storage_plane_shard_split_partitions_neurons():
+    from repro.core.clusters import make_plan
+    cfg, plan, plane = _tiny_plane(4)
+    try:
+        ids = np.arange(plane.N)
+        # plan-aware split (what step() uses): the plan's cold region
+        # splits by group — each shard owns G/n whole groups, an exact
+        # quarter of the cold traffic — and the hot prefix uniformly
+        p4 = make_plan(plane.N, 0.25, 0.25, plane.cs, groups=4)
+        parts = plane._split_by_owner(ids, p4)
+        assert len(parts) == 4
+        assert sorted(np.concatenate(parts).tolist()) == ids.tolist()
+        cold_sizes = [int((p >= p4.n_hot).sum()) for p in parts]
+        assert max(cold_sizes) == min(cold_sizes)
+        hot_sizes = [int((p < p4.n_hot).sum()) for p in parts]
+        assert max(hot_sizes) - min(hot_sizes) <= 1
+        # plan-less fallback (strided): still a true partition
+        parts = plane._split_by_owner(ids)
+        assert sorted(np.concatenate(parts).tolist()) == ids.tolist()
+    finally:
+        plane.close()
+
+
+def test_storage_plane_aggregates_across_shards():
+    cfg, plan, plane1 = _tiny_plane(1)
+    cfg4, plan4, plane4 = _tiny_plane(4)
+    try:
+        p1 = plan.plan_for_batch(1)
+        nc_g = max((plane1.N - p1.n_hot)
+                   // plane1.cs // max(p1.groups, 1), 1)
+        rng = np.random.default_rng(0)
+        trace = rng.integers(
+            0, nc_g, (cfg.num_layers, max(p1.groups, 1),
+                      max(p1.clusters_per_group, 1)))
+        s1 = plane1.step(trace, p1, batch=1, ctx_len=16.0)
+        s4 = plane4.step(trace, p1, batch=1, ctx_len=16.0)
+        assert s1.n_shards == 1 and s1.shards is None
+        assert s4.n_shards == 4 and len(s4.shards) == 4
+        # headline io is the worst shard; totals sum the shards
+        assert abs(s4.io_total_s
+                   - sum(sh.io_s for sh in s4.shards)) < 1e-12
+        assert abs(s4.io_s - max(sh.io_s for sh in s4.shards)) < 1e-12
+        assert s4.n_miss == sum(sh.n_miss for sh in s4.shards)
+        assert abs(s4.effective_s
+                   - max(sh.effective_s for sh in s4.shards)) < 1e-12
+        # sharded compute (FFN split 4-way) beats the single device
+        assert s4.compute_s < s1.compute_s
+        # per-shard miss traffic shrank vs the whole-cache plane
+        assert s4.io_s <= s1.io_s + 1e-12
+    finally:
+        plane1.close()
+        plane4.close()
+
+
+def test_storage_plane_single_shard_unchanged_alias():
+    cfg, plan, plane = _tiny_plane(1)
+    try:
+        assert plane.cache is plane.caches[0]
+        assert len(plane.caches) == 1
+    finally:
+        plane.close()

@@ -1,6 +1,7 @@
 """Distribution tests in a subprocess with 8 forced host devices
 (device count locks at first jax init, so the main test process stays
-single-device)."""
+single-device). Mesh/axis-type/shard_map API drift is absorbed by
+repro.compat, so these run on every supported jax."""
 import os
 import subprocess
 import sys
@@ -11,15 +12,17 @@ import pytest
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
-def run_in_subprocess(body: str, timeout=420):
+def run_in_subprocess(body: str, timeout=420, ndev=8):
     prog = textwrap.dedent("""
         import os
-        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        os.environ["XLA_FLAGS"] = \
+            "--xla_force_host_platform_device_count=%d"
         import jax
         import jax.numpy as jnp
         import numpy as np
         from jax.sharding import NamedSharding, PartitionSpec as P
-    """) + textwrap.dedent(body)
+        from repro.compat import AxisType, make_mesh, set_mesh
+    """ % ndev) + textwrap.dedent(body)
     env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
     r = subprocess.run([sys.executable, "-c", prog], capture_output=True,
                        text=True, timeout=timeout, env=env)
@@ -28,6 +31,9 @@ def run_in_subprocess(body: str, timeout=420):
 
 
 def test_shard_map_cold_path_matches_local_8dev():
+    """The shard-local cold path must reproduce the single-device math
+    — output within tolerance, selected cluster ids identical — for
+    every mesh whose 'model' size divides the plan's groups."""
     out = run_in_subprocess("""
         from repro.core.sparse_ffn import init_ffn, ffn_hybrid
         from repro.core.clusters import HybridPlan
@@ -36,18 +42,25 @@ def test_shard_map_cold_path_matches_local_8dev():
                           predictor_rank=16)
         x = jax.random.normal(jax.random.key(1), (2, D)) * 0.5
         plan = HybridPlan(n_hot=128, k_cold=64, groups=G, cluster_size=cs)
-        y_local = ffn_hybrid(params, x, "relu2", "relu", plan)
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
-        with jax.set_mesh(mesh):
-            spec = {"w": NamedSharding(mesh, P("model", None, None)),
-                    "pred": {"A": NamedSharding(mesh, P(None, None)),
-                             "B": NamedSharding(mesh, P(None, "model"))}}
-            ps = jax.tree.map(jax.device_put, params, spec)
-            y_sm = jax.jit(lambda p, xx: ffn_hybrid(
-                p, xx, "relu2", "relu", plan))(ps, x)
-        np.testing.assert_allclose(np.asarray(y_sm), np.asarray(y_local),
-                                   atol=1e-3, rtol=1e-3)
+        y_local, cidx_local = ffn_hybrid(params, x, "relu2", "relu", plan,
+                                         return_indices=True)
+        for nd, nm in ((2, 4), (2, 2), (1, 4)):
+            mesh = make_mesh((nd, nm), ("data", "model"),
+                             axis_types=(AxisType.Auto,) * 2,
+                             devices=jax.devices()[:nd * nm])
+            with set_mesh(mesh):
+                spec = {"w": NamedSharding(mesh, P("model", None, None)),
+                        "pred": {"A": NamedSharding(mesh, P(None, None)),
+                                 "B": NamedSharding(mesh, P(None, "model"))}}
+                ps = jax.tree.map(jax.device_put, params, spec)
+                y_sm, cidx = jax.jit(lambda p, xx: ffn_hybrid(
+                    p, xx, "relu2", "relu", plan,
+                    return_indices=True))(ps, x)
+            np.testing.assert_allclose(np.asarray(y_sm),
+                                       np.asarray(y_local),
+                                       atol=1e-3, rtol=1e-3)
+            np.testing.assert_array_equal(np.asarray(cidx),
+                                          np.asarray(cidx_local))
         print("OK shard_map")
     """)
     assert "OK shard_map" in out
@@ -72,9 +85,9 @@ def test_sharded_train_step_matches_single_device():
         step = make_train_step(model, opt)
         _, _, m1 = jax.jit(step)(params, state, batch)
 
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
-        with jax.set_mesh(mesh):
+        mesh = make_mesh((2, 4), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+        with set_mesh(mesh):
             specs = param_specs(model, cfg, mesh)
             ps = jax.tree.map(lambda a, s: jax.device_put(a, s.sharding),
                               params, specs)
@@ -104,9 +117,9 @@ def test_sharded_moe_forward_matches_single_device():
                                         (4, 32)).astype(np.int32)}
         y1 = jax.jit(lambda p, b: model.forward(p, b))(params, batch)
 
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
-        with jax.set_mesh(mesh):
+        mesh = make_mesh((2, 4), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+        with set_mesh(mesh):
             specs = param_specs(model, cfg, mesh)
             ps = jax.tree.map(lambda a, s: jax.device_put(a, s.sharding),
                               params, specs)
@@ -118,3 +131,74 @@ def test_sharded_moe_forward_matches_single_device():
         print("OK sharded moe")
     """)
     assert "OK sharded moe" in out
+
+
+def test_tensor_parallel_decode_token_identical_4dev():
+    """The tentpole guarantee (golden comparison): the serving engine
+    over a forced 4-host-device mesh decodes token-for-token what the
+    single-device engine decodes — same grouped plan, same sampling-key
+    sequence, cluster selection shard-local — while the storage plane
+    reports per-shard accounting."""
+    out = run_in_subprocess("""
+        from repro.configs import get_config
+        from repro.core.planner import build_plan, permute_ffn_params
+        from repro.core.clusters import make_plan, scale_plan_for_batch
+        from repro.data.pipeline import DataConfig, SyntheticTokens
+        from repro.models.model import build_model
+        from repro.optim.adamw import AdamW
+        from repro.train.steps import make_train_step
+        from repro.launch.mesh import make_serving_mesh
+        from repro.serving.engine import ServeEngine
+
+        cfg = get_config("smollm-135m").reduced()
+        model = build_model(cfg)
+        params = model.init(jax.random.key(0))
+        # brief training: real logit margins so greedy decode is
+        # robust to the mesh's fp reassociation noise (~1e-5)
+        opt = AdamW(lr=2e-3)
+        step = jax.jit(make_train_step(model, opt), donate_argnums=(0, 1))
+        state = opt.init(params)
+        data = SyntheticTokens(DataConfig(cfg.vocab_size, 64, 4, seed=0))
+        for _ in range(30):
+            params, state, _ = step(params, state, data.batch())
+
+        plan = build_plan(cfg)
+        base = make_plan(cfg.d_ff, 0.25, 0.25, cfg.sparse_ffn.cluster_size,
+                         groups=4)
+        plan.plans = {b: scale_plan_for_batch(base, cfg.d_ff, b,
+                                              cfg.sparse_ffn.cluster_size)
+                      for b in (1, 2, 4, 8)}
+        params = permute_ffn_params(params, plan.neuron_order)
+
+        def run(mesh):
+            eng = ServeEngine(cfg, params, plan, buckets=(1, 2, 4),
+                              ctx_budget=48, temperature=0.0, seed=0,
+                              mesh=mesh)
+            rng = np.random.default_rng(0)
+            for i in range(3):
+                eng.submit(rng.integers(0, cfg.vocab_size, 16), max_new=8,
+                           arrival_time=i * 1e-3)
+            rep = eng.run_until_drained()
+            toks = {u: list(r.generated)
+                    for u, r in eng.sched.sequences.items()}
+            eng.close()
+            return rep, toks
+
+        rep1, toks1 = run(None)
+        rep4, toks4 = run(make_serving_mesh(4))
+        assert toks1 == toks4, (toks1, toks4)
+        assert all(len(t) == 8 for t in toks1.values())
+        s1, s4 = rep1.stats[0], rep4.stats[0]
+        assert s1.n_shards == 1 and s1.shards is None
+        assert s4.n_shards == 4 and len(s4.shards) == 4
+        # per-shard raw I/O demand shrinks vs the single-device plane
+        assert s4.io_s <= s1.io_s + 1e-12
+        assert abs(s4.io_total_s
+                   - sum(sh.io_s for sh in s4.shards)) < 1e-12
+        # modeled per-step time must not regress under the mesh split
+        e1 = sum(s.effective_s for s in rep1.stats)
+        e4 = sum(s.effective_s for s in rep4.stats)
+        assert e4 <= e1 * 1.01, (e1, e4)
+        print("OK tp golden", len(rep4.stats), round(e1 / e4, 3))
+    """, ndev=4)
+    assert "OK tp golden" in out

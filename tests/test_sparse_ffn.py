@@ -143,14 +143,15 @@ def test_shard_map_cold_path_matches_local():
 
     import jax.numpy as jnp
     from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.compat import AxisType, make_mesh, set_mesh
     D, N, cs, G = 64, 512, 32, 4
     params = _params(D, N)
     x = jax.random.normal(jax.random.key(1), (2, D)) * 0.5
     plan = HybridPlan(n_hot=128, k_cold=64, groups=G, cluster_size=cs)
     y_local = ffn_hybrid(params, x, "relu2", "relu", plan)
-    mesh = jax.make_mesh((1, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
-    with jax.set_mesh(mesh):
+    mesh = make_mesh((1, 4), ("data", "model"),
+                     axis_types=(AxisType.Auto,) * 2)
+    with set_mesh(mesh):
         pspec = {"w": NamedSharding(mesh, P("model", None, None)),
                  "pred": {"A": NamedSharding(mesh, P(None, None)),
                           "B": NamedSharding(mesh, P(None, "model"))}}
