@@ -1,24 +1,33 @@
 """Continuous-batching serving benchmark: throughput, TTFT and
 per-token latency percentiles under a request stream — single-device
-spec comparison plus tensor-parallel mesh scaling.
+spec comparison plus mesh scaling over both axes.
 
 A deterministic arrival schedule (seeded exponential inter-arrivals —
 Poisson-like traffic on the modeled clock) drives the engine's
 submit/step loop. Part 1 compares SystemSpecs (llama.cpp-analogue vs
-PowerInfer-2) on one device; part 2 runs the PowerInfer-2 spec over
-1/2/4/...-device meshes (same grouped plan everywhere, so cluster
-selection — and the decoded tokens — are identical across mesh sizes)
-and reports per-device-count throughput/TTFT.
+PowerInfer-2) on one device; part 2 runs the PowerInfer-2 spec over a
+dp×tp grid of (data, model) meshes — tensor-parallel shards per
+replica, replica routing over the 'data' axis — and reports
+per-configuration throughput/TTFT. Tokens are checked identical across
+tp at fixed dp (cluster selection is shard-local, so the mesh's
+'model' size never changes decode); the dp axis re-batches the stream,
+so its throughput column is the scaling lever, not token identity.
+
+Scaling metric: `span_tok_s` = total tokens / drained span on the
+shared modeled timeline. Replicas decode concurrently, so the span
+shrinks with dp while the legacy per-pipeline rate (`tok_s`,
+sum-of-step-latency) does not — both are reported.
 
 All latencies are the storage plane's modeled effective seconds, so
 differences reflect the paper's mechanisms (and the mesh split), not
 host jit noise.
 
 CLI (also runnable argless via benchmarks.run):
-  python -m benchmarks.bench_serving --devices 2 --tiny \
-      --json BENCH_serving_2dev.json
+  python -m benchmarks.bench_serving --devices 4 --tiny \
+      --json BENCH_serving_4dev.json
 --devices N forces N host platform devices when jax is not yet
-initialized (CI smoke); --json writes the machine-readable results.
+initialized (CI smoke) and sweeps every (dp, tp) with dp*tp <= N;
+--json writes the machine-readable results.
 """
 import argparse
 import json
@@ -29,6 +38,11 @@ N_REQUESTS = 10
 PROMPT_LEN = 16
 MEAN_INTERARRIVAL_S = 2e-3
 BUCKETS = (1, 2, 4, 8)
+
+
+def dp_tp_grid(n_devices: int, sizes=(1, 2, 4, 8)):
+    """Every (dp, tp) with dp*tp <= n_devices, dp-major order."""
+    return [(d, t) for d in sizes for t in sizes if d * t <= n_devices]
 
 
 def _scaled_plan(cfg, plan, groups: int):
@@ -56,13 +70,13 @@ def _request_stream(cfg, eng, n_requests, max_new_hi, seed=0):
 
 
 def run_spec(cfg, params, plan, spec, seed=0, mesh=None, n_requests=None,
-             max_new_hi=14):
+             max_new_hi=14, dp=None):
     from benchmarks.common import paper_timing
     from repro.serving.engine import ServeEngine
     eng = ServeEngine(cfg, params, plan, spec=spec, offload_ratio=0.5,
                       timing=paper_timing(), buckets=BUCKETS,
                       ctx_budget=PROMPT_LEN + 16, temperature=0.8,
-                      mesh=mesh)
+                      mesh=mesh, dp=dp)
     _request_stream(cfg, eng, n_requests or N_REQUESTS, max_new_hi, seed)
     rep = eng.run_until_drained()
     assert not eng.sched.has_work
@@ -73,6 +87,8 @@ def _summary(eng, rep):
     pct = rep.latency_percentiles()
     return {
         "tok_s": round(rep.tokens_per_s, 2),
+        "span_tok_s": round(rep.throughput_tok_s, 2),
+        "span_s": round(rep.span_s, 6),
         "ttft_ms": round(float(rep.ttft().mean()) * 1e3, 4),
         "p50_ms": round(pct["p50"] * 1e3, 4),
         "p90_ms": round(pct["p90"] * 1e3, 4),
@@ -88,8 +104,7 @@ def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--devices", type=int, default=0,
                     help="force N host platform devices (pre-jax-init "
-                         "only); mesh sizes are the divisor chain up "
-                         "to N")
+                         "only); part 2 sweeps every dp*tp <= N")
     ap.add_argument("--tiny", action="store_true",
                     help="CI smoke: fewer/shorter requests")
     ap.add_argument("--json", default=None,
@@ -118,16 +133,16 @@ def main(argv=None):
                      "device_count": jax.device_count(), "results": []}
 
     # ---- part 1: spec comparison, single device --------------------------
-    print(f"{'system':16s} {'tp':>3s} {'tok/s':>10s} {'ttft-ms':>9s} "
-          f"{'p50-ms':>8s} {'p90-ms':>8s} {'p99-ms':>8s} {'peak':>5s}")
+    print(f"{'system':16s} {'dp':>3s} {'tp':>3s} {'tok/s':>10s} "
+          f"{'span-tok/s':>10s} {'ttft-ms':>9s} {'p50-ms':>8s} "
+          f"{'p90-ms':>8s} {'p99-ms':>8s} {'peak':>5s}")
     for spec in (LLAMACPP, POWERINFER2):
         eng, rep = run_spec(cfg, params, plan, spec, n_requests=n_req,
                             max_new_hi=max_new_hi)
         s = _summary(eng, rep)
-        eng.close()
-        print(f"{spec.name:16s} {1:3d} {s['tok_s']:10.1f} "
-              f"{s['ttft_ms']:9.3f} {s['p50_ms']:8.3f} "
-              f"{s['p90_ms']:8.3f} {s['p99_ms']:8.3f} "
+        print(f"{spec.name:16s} {1:3d} {1:3d} {s['tok_s']:10.1f} "
+              f"{s['span_tok_s']:10.1f} {s['ttft_ms']:9.3f} "
+              f"{s['p50_ms']:8.3f} {s['p90_ms']:8.3f} {s['p99_ms']:8.3f} "
               f"{s['peak_batch']:5d}")
         tag = spec.name.replace(".", "").replace("-", "_")
         rows.append((f"serving_tok_s_{tag}", s["tok_s"],
@@ -140,38 +155,61 @@ def main(argv=None):
                      f"{eng.sched.batch_history[0]}->{s['peak_batch']}",
                      "continuous batching: batch grew under load then "
                      "drained"))
-        out["results"].append(dict(s, system=spec.name, tp=1,
+        out["results"].append(dict(s, system=spec.name, dp=1, tp=1,
                                    tokens=None))
+        eng.close()
 
-    # ---- part 2: tensor-parallel mesh scaling ----------------------------
-    tp_sizes = [n for n in (1, 2, 4, 8) if n <= jax.device_count()]
-    groups = max(tp_sizes)
-    tokens_ref = None
-    if groups > 1:
-        tp_plan = _scaled_plan(cfg, plan, groups)
-        for n in tp_sizes:
-            mesh = make_serving_mesh(n) if n > 1 else None
-            eng, rep = run_spec(cfg, params, tp_plan, POWERINFER2,
-                                mesh=mesh, n_requests=n_req,
+    # ---- part 2: dp×tp mesh-scaling grid ---------------------------------
+    # The 'data' axis is a load-scaling lever: replicas only pay off
+    # once a single engine's batch bucket saturates and requests
+    # queue, so the grid serves a 3x heavier stream than part 1
+    # (under-loaded, one replica batches everything and dp buys
+    # nothing — the modeled numbers honestly say so).
+    n_grid = 3 * n_req
+    grid = dp_tp_grid(jax.device_count())
+    if len(grid) > 1:
+        groups = max(t for _, t in grid)
+        grid_plan = _scaled_plan(cfg, plan, groups)
+        tokens_ref = {}                      # dp -> token dict at lowest tp
+        span_by_dp = {}                      # dp -> span_tok_s at tp=1
+        for d, t in grid:
+            mesh = make_serving_mesh(t, d) if d * t > 1 else None
+            eng, rep = run_spec(cfg, params, grid_plan, POWERINFER2,
+                                mesh=mesh, n_requests=n_grid,
                                 max_new_hi=max_new_hi)
             s = _summary(eng, rep)
             eng.close()
-            if tokens_ref is None:
-                tokens_ref = s["tokens"]
-            ident = s["tokens"] == tokens_ref
-            print(f"{'powerinfer-2':16s} {n:3d} {s['tok_s']:10.1f} "
-                  f"{s['ttft_ms']:9.3f} {s['p50_ms']:8.3f} "
-                  f"{s['p90_ms']:8.3f} {s['p99_ms']:8.3f} "
-                  f"{s['peak_batch']:5d}"
+            ident = s["tokens"] == tokens_ref.setdefault(d, s["tokens"])
+            print(f"{'powerinfer-2':16s} {d:3d} {t:3d} {s['tok_s']:10.1f} "
+                  f"{s['span_tok_s']:10.1f} {s['ttft_ms']:9.3f} "
+                  f"{s['p50_ms']:8.3f} {s['p90_ms']:8.3f} "
+                  f"{s['p99_ms']:8.3f} {s['peak_batch']:5d}"
                   + ("" if ident else "  [tokens diverged]"))
-            rows.append((f"serving_tok_s_tp{n}", s["tok_s"],
-                         f"{n}-device mesh, {groups}-group plan, "
-                         f"tokens {'identical' if ident else 'DIVERGED'}"))
-            rows.append((f"serving_ttft_ms_tp{n}", s["ttft_ms"],
-                         f"{n}-device mesh mean TTFT"))
-            out["results"].append(dict(s, system="powerinfer-2", tp=n,
-                                       tokens_identical=ident,
+            # span-prefixed name: these rows hold the span rate, not
+            # part 1's per-pipeline tokens_per_s — don't let the two
+            # semantics share a metric prefix in the trajectory
+            rows.append((f"serving_span_tok_s_dp{d}_tp{t}",
+                         s["span_tok_s"],
+                         f"({d},{t}) mesh span throughput; per-pipeline "
+                         f"{s['tok_s']}; tokens vs dp={d} ref "
+                         f"{'identical' if ident else 'DIVERGED'}"))
+            rows.append((f"serving_ttft_ms_dp{d}_tp{t}", s["ttft_ms"],
+                         f"({d},{t}) mesh mean TTFT"))
+            if t == 1:
+                span_by_dp[d] = s["span_tok_s"]
+            out["results"].append(dict(s, system="powerinfer-2", dp=d,
+                                       tp=t, tokens_identical=ident,
                                        tokens=None))
+        if len(span_by_dp) > 1:
+            base = span_by_dp[1]
+            scaling = {f"dp{d}": round(v / base, 3)
+                       for d, v in sorted(span_by_dp.items())}
+            out["dp_scaling"] = scaling
+            rows.append(("serving_dp_scaling",
+                         "|".join(f"{k}={v}x" for k, v in scaling.items()),
+                         "span throughput vs dp=1, tp=1 (replica "
+                         "routing over the 'data' axis)"))
+            print(f"# dp-axis span-throughput scaling: {scaling}")
     else:
         print("# single visible device: mesh scaling skipped "
               "(set --devices N before jax init)")

@@ -1,0 +1,96 @@
+"""CI guard for the engine_setup disk cache (benchmarks/common.py).
+
+The bench-smoke job points REPRO_BENCH_CACHE at a workspace directory
+so every bench process on the runner reuses one training run. This
+script is the trust anchor for that reuse: it materializes the cache
+(training at most once), then retrains from scratch with the disk
+layer bypassed and asserts the cached and fresh setups are
+bit-identical — same param leaves, same plan, and, end to end, the
+same greedily decoded tokens through a ServeEngine. A stale or corrupt
+cache (e.g. restored across a source change the cache key missed)
+fails here instead of silently skewing every bench number downstream.
+
+  REPRO_BENCH_CACHE=.bench-cache PYTHONPATH=src \
+      python scripts/check_param_cache.py --train-steps 10
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+sys.path.insert(0, REPO)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--activation", default="relu2")
+    ap.add_argument("--mode", default="relu")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--train-steps", type=int, default=10,
+                    help="must match the bench invocations sharing the "
+                         "cache (tiny CI smoke trains 10 steps)")
+    ap.add_argument("--max-new", type=int, default=8)
+    args = ap.parse_args()
+
+    if not os.environ.get("REPRO_BENCH_CACHE"):
+        print("REPRO_BENCH_CACHE is not set; nothing to verify",
+              file=sys.stderr)
+        return 2
+
+    import numpy as np
+    from benchmarks.common import engine_setup, _setup_cache_path
+    import jax
+
+    key = (args.arch, args.activation, args.mode, args.seed,
+           args.train_steps)
+    path = _setup_cache_path(*key)
+
+    # Pass 1 — through the cache: loads if the restored cache already
+    # has this key, trains and writes it otherwise. Either way the
+    # bench processes that follow will hit disk.
+    cfg, model, params_c, plan_c, prompt = engine_setup(
+        args.arch, activation=args.activation, mode=args.mode,
+        seed=args.seed, train_steps=args.train_steps, cache=True)
+    assert os.path.exists(path), f"cache file not written: {path}"
+
+    # Pass 2 — fresh: disk layer bypassed, full retrain in-process.
+    _, _, params_f, plan_f, _ = engine_setup(
+        args.arch, activation=args.activation, mode=args.mode,
+        seed=args.seed, train_steps=args.train_steps, cache=False)
+
+    leaves_c = jax.tree.leaves(params_c)
+    leaves_f = jax.tree.leaves(params_f)
+    assert len(leaves_c) == len(leaves_f)
+    for i, (a, b) in enumerate(zip(leaves_c, leaves_f)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"param leaf {i} differs "
+                                              f"between cache and fresh")
+    np.testing.assert_array_equal(plan_c.neuron_order, plan_f.neuron_order)
+
+    # End-to-end: both param sets must decode identically (greedy).
+    from repro.core.baselines import POWERINFER2
+    from repro.serving.engine import ServeEngine
+
+    def decode(params, plan):
+        eng = ServeEngine(cfg, params, plan, spec=POWERINFER2,
+                          offload_ratio=0.5, seed=args.seed)
+        res = eng.generate(prompt, max_new=args.max_new, temperature=0.0)
+        eng.close()
+        return res.tokens
+
+    tok_c = decode(params_c, plan_c)
+    tok_f = decode(params_f, plan_f)
+    assert np.array_equal(tok_c, tok_f), \
+        f"cached vs fresh decode diverged:\n{tok_c}\n{tok_f}"
+    print(f"OK param cache: {len(leaves_c)} leaves identical, "
+          f"{tok_c.shape[0]}x{tok_c.shape[1]} greedy tokens identical "
+          f"({path})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -25,7 +25,9 @@ def make_host_mesh():
 
 
 def make_serving_mesh(n_model: int, n_data: int = 1):
-    """(data, model) mesh for the tensor-parallel serving plane.
+    """(data, model) mesh for the serving plane: 'model' is the
+    tensor-parallel axis, 'data' the replica-routing axis
+    (DESIGN.md §3/§5).
 
     Uses the first n_data*n_model visible devices (on CPU runs, force
     them with XLA_FLAGS=--xla_force_host_platform_device_count=N before
@@ -40,6 +42,22 @@ def make_serving_mesh(n_model: int, n_data: int = 1):
     return make_mesh((n_data, n_model), ("data", "model"),
                      axis_types=(AxisType.Auto,) * 2,
                      devices=jax.devices()[:need])
+
+
+def replica_submeshes(mesh):
+    """One (1, n_model) tensor-parallel submesh per 'data'-axis row of
+    `mesh` — replica r keeps exactly the devices of row r, so a
+    replica-routed engine places each serving stack on its own slice
+    of the parent mesh."""
+    import numpy as np
+    shape = dict(mesh.shape)
+    n_data = shape.get("data", 1)
+    n_model = shape.get("model", 1)
+    devs = np.asarray(mesh.devices).reshape(n_data, n_model)
+    return [make_mesh((1, n_model), ("data", "model"),
+                      axis_types=(AxisType.Auto,) * 2,
+                      devices=list(devs[r]))
+            for r in range(n_data)]
 
 
 # v5e hardware constants for the roofline (per chip)

@@ -9,6 +9,13 @@ Plan (offline §5) -> permute weights hot-first -> ServeEngine (online
 Tensor-parallel serving (DESIGN.md §3): pass --tp N to run the engine
 over an (1, N) device mesh — on CPU hosts force the devices first with
 XLA_FLAGS=--xla_force_host_platform_device_count=N.
+
+Data-parallel serving (DESIGN.md §5): pass --dp N to route requests
+over N replicas (the mesh's 'data' axis). With --tp 1 the replicas are
+scheduler-level and need no extra devices; with --tp > 1 each replica
+owns its own (1, tp) row of a (dp, tp) mesh, so dp*tp devices must be
+visible. A --dp run serves the Best-of-N prompts as a request stream
+(submit/run_until_drained) instead of the static-batch generate().
 """
 from __future__ import annotations
 
@@ -28,7 +35,7 @@ from repro.serving.engine import ServeEngine
 
 def build_engine(arch: str, reduced: bool = True, offload: float = 0.5,
                  spec=POWERINFER2, storage=UFS40, profile: bool = False,
-                 seed: int = 0, tp: int = 1, **engine_kwargs):
+                 seed: int = 0, tp: int = 1, dp: int = 1, **engine_kwargs):
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
@@ -46,7 +53,12 @@ def build_engine(arch: str, reduced: bool = True, offload: float = 0.5,
     params = permute_ffn_params(params, plan.neuron_order)
     if tp > 1 and "mesh" not in engine_kwargs:
         from repro.launch.mesh import make_serving_mesh
-        engine_kwargs["mesh"] = make_serving_mesh(tp)
+        engine_kwargs["mesh"] = make_serving_mesh(tp, dp)
+    if dp > 1:
+        # always forward dp (tp=1 replicas are meshless — replica
+        # routing is scheduler-level and needs no devices); with a
+        # mesh, the engine verifies dp against the 'data' axis
+        engine_kwargs.setdefault("dp", dp)
     return ServeEngine(cfg, params, plan, spec=spec, storage=storage,
                        offload_ratio=offload, seed=seed,
                        **engine_kwargs), cfg
@@ -64,14 +76,43 @@ def main():
                     help="use the TPU host-DMA tier instead of UFS 4.0")
     ap.add_argument("--tp", type=int, default=1,
                     help="tensor-parallel degree (mesh 'model' axis)")
+    ap.add_argument("--dp", type=int, default=1,
+                    help="data-parallel replicas (mesh 'data' axis)")
     args = ap.parse_args()
 
     storage = HOST_DMA if args.host_dma else UFS40
     engine, cfg = build_engine(args.arch, args.reduced, args.offload,
-                               storage=storage, profile=True, tp=args.tp)
+                               storage=storage, profile=True, tp=args.tp,
+                               dp=args.dp)
     rng = np.random.default_rng(0)
     prompt = rng.integers(0, cfg.vocab_size,
                           (args.bon, args.prompt_len)).astype(np.int32)
+    if args.dp > 1:
+        # replica-routed engines serve a stream, not a static batch
+        import time
+        t0 = time.perf_counter()
+        for i in range(args.bon):
+            engine.submit(prompt[i], max_new=args.max_new,
+                          arrival_time=0.0)
+        rep = engine.run_until_drained()
+        wall = time.perf_counter() - t0
+        pct = rep.latency_percentiles()
+        hit = float(np.mean([s.cache_hit_rate for s in rep.stats]))
+        io = sum(s.io_s for s in rep.stats)
+        eff = sum(s.effective_s for s in rep.stats)
+        print(f"arch={cfg.name} spec=powerinfer-2 storage={storage.name} "
+              f"dp={args.dp} tp={args.tp}")
+        print(f"modeled serve: {rep.throughput_tok_s:.2f} tok/s over the "
+              f"{rep.span_s:.2f}s span ({rep.tokens_per_s:.2f} tok/s "
+              f"per-replica pipeline rate) | cache hit {hit:.1%} | "
+              f"I/O share {io/max(eff,1e-12):.1%}")
+        print(f"ttft ms: mean {float(rep.ttft().mean())*1e3:.2f} | "
+              f"latency ms: p50 {pct['p50']*1e3:.2f} "
+              f"p90 {pct['p90']*1e3:.2f} p99 {pct['p99']*1e3:.2f}")
+        print(f"wall time {wall:.1f}s for {rep.total_tokens} tokens "
+              f"(CPU jit)")
+        engine.close()
+        return
     res = engine.generate(prompt, max_new=args.max_new)
     pct = res.latency_percentiles()
     hit = float(np.mean([s.cache_hit_rate for s in res.stats]))

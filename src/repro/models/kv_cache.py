@@ -9,10 +9,12 @@ Three kinds, all pure pytrees so they thread through jit / scan:
 `kv_pos` is materialized for both cache kinds so decode_attention masks
 uniformly (-1 = empty slot).
 
-`KVSlotArena` (DESIGN.md §5) wraps the full cache as a fixed-slot arena
+`KVSlotArena` (DESIGN.md §6) wraps the full cache as a fixed-slot arena
 for continuous batching: requests are admitted into free slots and
 freed on completion without reshaping live rows; the arena only changes
-shape at decoder bucket boundaries.
+shape at decoder bucket boundaries. A replica-routed engine
+(DESIGN.md §5) owns one arena per 'data'-axis replica, each placed on
+that replica's (1, n_model) submesh.
 """
 from __future__ import annotations
 
@@ -145,6 +147,14 @@ class KVSlotArena:
         return len(self.free)
 
     def alloc(self, uid) -> int:
+        if not self.free:
+            raise RuntimeError(
+                f"KV arena exhausted: {len(self.slot_of)} live requests "
+                f"hold all {self.n_slots} slots (admission must stay "
+                f"within the decoder bucket)")
+        if uid in self.slot_of:
+            raise ValueError(f"request {uid} already owns slot "
+                             f"{self.slot_of[uid]}")
         slot = self.free.pop(0)
         self.slot_of[uid] = slot
         return slot

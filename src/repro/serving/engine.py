@@ -28,6 +28,17 @@ are placed on the mesh, decode executables are keyed on (bucket × mesh
 shape) and traced in the mesh context (the sparse-FFN cold path goes
 shard-local via shard_map), and the storage plane prices per-device
 cache slices and I/O channels, aggregating TokenStats across shards.
+
+Data parallel (DESIGN.md §5): with the mesh's 'data' axis > 1 (or an
+explicit `dp=N` on meshless hosts) the engine becomes a replica
+router: one full serving stack — BatchScheduler, KVSlotArena,
+StoragePlane, BucketedDecoder, modeled clock — per 'data'-axis row,
+each replica running over its own (1, n_model) tensor-parallel
+submesh. Submits route least-loaded with a FIFO tiebreak
+(serving/scheduler.py::ReplicaRouter); each replica admits at its own
+decoder bucket boundary and advances its own clock; run_until_drained
+merges the per-replica TokenStats onto the shared timeline and
+reports span-based throughput.
 """
 from __future__ import annotations
 
@@ -57,6 +68,18 @@ __all__ = ["ServeEngine", "GenerationResult", "ServeReport", "StepResult",
            "TimingProfile", "TokenStats"]
 
 
+def _percentiles(lat: np.ndarray) -> dict:
+    """Latency percentile summary; empty input (a stream cancelled
+    before any step, a zero-token generation) yields zeros instead of
+    np.percentile's IndexError / nan-mean."""
+    if lat.size == 0:
+        return {"mean": 0.0, "p50": 0.0, "p90": 0.0, "p99": 0.0}
+    return {"mean": float(lat.mean()),
+            "p50": float(np.percentile(lat, 50)),
+            "p90": float(np.percentile(lat, 90)),
+            "p99": float(np.percentile(lat, 99))}
+
+
 @dataclass
 class GenerationResult:
     tokens: np.ndarray                 # (B, new)
@@ -67,14 +90,10 @@ class GenerationResult:
     def tokens_per_s(self) -> float:
         total = sum(s.effective_s for s in self.stats)
         n = sum(s.batch for s in self.stats)
-        return n / total if total else float("inf")
+        return n / total if total else 0.0
 
     def latency_percentiles(self):
-        lat = np.array([s.effective_s for s in self.stats])
-        return {"mean": float(lat.mean()),
-                "p50": float(np.percentile(lat, 50)),
-                "p90": float(np.percentile(lat, 90)),
-                "p99": float(np.percentile(lat, 99))}
+        return _percentiles(np.array([s.effective_s for s in self.stats]))
 
 
 @dataclass
@@ -84,13 +103,23 @@ class StepResult:
     tokens: dict                       # uid -> generated token
     admitted: list = field(default_factory=list)
     finished: list = field(default_factory=list)
+    replica: int = 0                   # 'data'-axis row that stepped
+    t_s: float = 0.0                   # that replica's clock after the step
 
 
 @dataclass
 class ServeReport:
-    """Aggregate serving metrics over a drained request stream."""
+    """Aggregate serving metrics over a drained request stream.
+
+    With replica routing the stats list merges every replica's steps
+    ordered by completion time on the shared modeled timeline, and
+    `span_s` is the drained makespan (slowest replica clock) —
+    `throughput_tok_s` is the span-based rate that actually scales
+    with the 'data' axis, while `tokens_per_s` keeps the legacy
+    sum-of-step-latency semantics (per-engine pipeline rate)."""
     stats: list                        # TokenStats per step
     requests: list                     # finished Requests
+    span_s: float = 0.0                # drained span on the shared timeline
 
     @property
     def total_tokens(self) -> int:
@@ -99,9 +128,16 @@ class ServeReport:
     @property
     def tokens_per_s(self) -> float:
         total = sum(s.effective_s for s in self.stats)
-        return self.total_tokens / total if total else float("inf")
+        return self.total_tokens / total if total else 0.0
+
+    @property
+    def throughput_tok_s(self) -> float:
+        return self.total_tokens / self.span_s if self.span_s else 0.0
 
     def ttft(self) -> np.ndarray:
+        """TTFT over requests that produced a first token — requests
+        cancelled before their first token have `first_token_time is
+        None` and are filtered, never coerced into the array."""
         return np.array([r.ttft for r in self.requests
                          if r.ttft is not None])
 
@@ -114,18 +150,18 @@ class ServeReport:
         return np.array(out)
 
     def latency_percentiles(self):
-        lat = self.token_latencies()
-        return {"mean": float(lat.mean()),
-                "p50": float(np.percentile(lat, 50)),
-                "p90": float(np.percentile(lat, 90)),
-                "p99": float(np.percentile(lat, 99))}
+        return _percentiles(self.token_latencies())
 
 
 class ServeEngine:
     """Single-host continuous-batching engine for dense sparse-FFN
     models. Orchestrates the data plane (BucketedDecoder), the storage
     plane (StoragePlane) and the scheduler (BatchScheduler) over a
-    slot-based KV arena."""
+    slot-based KV arena.
+
+    With a mesh whose 'data' axis is > 1 (or an explicit dp=N) the
+    engine instead owns one single-replica engine per 'data'-axis row
+    and routes requests across them (DESIGN.md §5)."""
 
     def __init__(self, cfg: ModelConfig, params, plan: ExecutionPlan,
                  spec: SystemSpec = POWERINFER2,
@@ -140,7 +176,8 @@ class ServeEngine:
                  eos_id: int = None,
                  temperature: float = 0.8,
                  prefetch: bool = True,
-                 mesh=None):
+                 mesh=None,
+                 dp: int = None):
         assert cfg.family in ("dense", "vlm"), "engine demo targets dense family"
         self.cfg = cfg
         self.plan = plan
@@ -148,8 +185,56 @@ class ServeEngine:
         self.key = jax.random.key(seed)
         # ---- device mesh (tensor parallel over 'model') ----
         self.mesh = mesh
-        self.n_shards = dict(mesh.shape).get("model", 1) \
-            if mesh is not None else 1
+        mesh_shape = dict(mesh.shape) if mesh is not None else {}
+        self.n_shards = mesh_shape.get("model", 1)
+        # ---- replica routing over the 'data' axis (DESIGN.md §5) ----
+        self.replicas = None
+        self.router = None
+        n_data = int(dp) if dp is not None else mesh_shape.get("data", 1)
+        if mesh is not None and dp is not None \
+                and n_data != mesh_shape.get("data", 1):
+            raise ValueError(
+                f"dp={dp} disagrees with the mesh's 'data' axis "
+                f"({mesh_shape.get('data', 1)})")
+        if n_data > 1:
+            # One full serving stack per replica, each an ordinary
+            # dp=1 engine: same seed (so its sampling-key chain is the
+            # one an independent engine would use), its own scheduler /
+            # KV arena / storage plane / modeled clock, and — when
+            # tensor-parallel — its own (1, n_model) row of the mesh.
+            if mesh is not None and self.n_shards > 1:
+                from repro.launch.mesh import replica_submeshes
+                subs = replica_submeshes(mesh)
+            else:
+                subs = [None] * n_data
+            self.replicas = [
+                ServeEngine(cfg, params, plan, spec=spec, storage=storage,
+                            offload_ratio=offload_ratio, hw=hw,
+                            timing=timing,
+                            n_compute_workers=n_compute_workers, seed=seed,
+                            buckets=buckets, ctx_budget=ctx_budget,
+                            eos_id=eos_id, temperature=temperature,
+                            prefetch=prefetch, mesh=subs[r])
+                for r in range(n_data)]
+            if subs[0] is None:
+                # meshless replicas run identical executables on the
+                # same params object: share the jit caches so dp
+                # doesn't multiply trace time (replica state that must
+                # stay independent — scheduler, arena, key chain,
+                # clock — lives outside them). Meshed replicas keep
+                # their own: executables bind to their submesh.
+                for rep in self.replicas[1:]:
+                    rep.decoder._cache = self.replicas[0].decoder._cache
+                    rep._prefill_fns = self.replicas[0]._prefill_fns
+            from repro.serving.scheduler import ReplicaRouter
+            self.router = ReplicaRouter([r.sched for r in self.replicas])
+            self.sched = self.router
+            self.arena = None
+            self.decoder = None
+            self.storage = None
+            self.ctx_budget = ctx_budget
+            self.clock_s = 0.0         # max over replica clocks
+            return
 
         # ---- data plane ----
         self.model = dense.make_model(cfg)
@@ -182,6 +267,10 @@ class ServeEngine:
 
     def close(self):
         """Release the storage plane's I/O thread (also runs at GC)."""
+        if self.replicas is not None:
+            for r in self.replicas:
+                r.close()
+            return
         self.storage.close()
 
     # --------------------------------------------------- mesh placement ----
@@ -201,30 +290,49 @@ class ServeEngine:
     # ------------------------------------------------ legacy attributes ----
     # Storage-plane internals used to live on the engine; keep read
     # access for benchmarks/examples without re-exposing the wiring.
+    # Replica-routed engines delegate to replica 0 (every replica is
+    # configured identically).
+    @property
+    def _plane_owner(self):
+        return self.replicas[0] if self.replicas is not None else self
+
     @property
     def cache(self):
-        return self.storage.cache
+        return self._plane_owner.storage.cache
 
     @property
     def coldstore(self):
-        return self.storage.coldstore
+        return self._plane_owner.storage.coldstore
 
     @property
     def timing(self):
-        return self.storage.timing
+        return self._plane_owner.storage.timing
 
     @property
     def hw(self):
-        return self.storage.hw
+        return self._plane_owner.storage.hw
 
     @property
     def max_slots(self) -> int:
-        return self.decoder.buckets[-1]
+        return self._plane_owner.decoder.buckets[-1]
 
     # ------------------------------------------------------- admission ----
     def submit(self, prompt, max_new: int = 32,
                arrival_time: float = None) -> int:
-        """Enqueue one request (prompt: (S,) token ids). Returns uid."""
+        """Enqueue one request (prompt: (S,) token ids). Returns uid.
+
+        Replica-routed engines pick the least-loaded replica (FIFO
+        tiebreak) and return a router-global uid."""
+        if self.replicas is not None:
+            r = self.router.pick_replica()
+            # default "now" is the engine's shared clock (max over
+            # replicas), not the routed replica's possibly-lagging
+            # one — a submit must never arrive before steps that had
+            # already completed elsewhere on the merged timeline
+            local = self.replicas[r].submit(
+                prompt, max_new,
+                self.clock_s if arrival_time is None else arrival_time)
+            return self.router.bind(r, local)
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.shape[0] == 0:
             raise ValueError("empty prompt: at least one token required")
@@ -311,9 +419,49 @@ class ServeEngine:
                 self._last = self._last.at[slot].set(logits[j, -1])
 
     # ------------------------------------------------------ decode loop ----
+    def _next_replica(self) -> Optional[int]:
+        """Earliest-next-event replica with work: its clock, or the
+        head arrival it would jump to when idle (ties -> lowest row).
+        This is the event-driven interleaving of clocks that advance
+        independently in parallel on real hardware."""
+        best, best_t = None, None
+        for i, rep in enumerate(self.replicas):
+            if not rep.sched.has_work:
+                continue
+            t = rep.clock_s
+            if not rep.sched.running:
+                nxt = rep.sched.next_arrival()
+                if nxt is not None and nxt > t:
+                    t = nxt
+            if best is None or t < best_t:
+                best, best_t = i, t
+        return best
+
     def step(self) -> Optional[StepResult]:
         """One continuous-batching step: admit -> (resize at bucket
-        boundary) -> sample+decode -> price -> complete."""
+        boundary) -> sample+decode -> price -> complete.
+
+        Replica-routed engines step the replica whose next event is
+        earliest on the shared timeline; each replica admits at its
+        own decoder bucket boundary and advances its own clock."""
+        if self.replicas is not None:
+            i = self._next_replica()
+            if i is None:
+                return None
+            rep = self.replicas[i]
+            r = rep.step()
+            if r is None:
+                return None
+            self.clock_s = max(e.clock_s for e in self.replicas)
+            self.router.batch_history.append(self.router.batch_size)
+            r.stats.replica = i
+            g = self.router.to_global
+            return StepResult(
+                stats=r.stats,
+                tokens={g(i, u): t for u, t in r.tokens.items()},
+                admitted=[g(i, u) for u in r.admitted],
+                finished=[g(i, u) for u in r.finished],
+                replica=i, t_s=rep.clock_s)
         sched = self.sched
         if not sched.has_work:
             return None
@@ -373,20 +521,55 @@ class ServeEngine:
             sched.sequences[u].finish_time = self.clock_s
             self.arena.release(u)
         return StepResult(stats=st, tokens=tok_map,
-                          admitted=[r.uid for r in admits], finished=done)
+                          admitted=[r.uid for r in admits], finished=done,
+                          t_s=self.clock_s)
 
     def cancel(self, uids):
-        """Force-finish running requests (Best-of-N early stop); their
-        KV slots return to the free list immediately."""
+        """Force-finish requests (Best-of-N early stop / client
+        cancel). Running requests release their KV slot immediately;
+        still-queued requests are dequeued before ever being admitted
+        — they finish with no tokens and `first_token_time` stays
+        None, so reports must (and do) filter them from TTFT."""
+        if self.replicas is not None:
+            for uid in list(uids):
+                r, local = self.router.locate(uid)
+                was_running = local in self.replicas[r].sched.running
+                self.replicas[r].cancel([local])
+                if was_running:
+                    # mirror BatchScheduler.finish: a between-step
+                    # cancel is a decay event on the merged timeline
+                    self.router.batch_history.append(
+                        self.router.batch_size)
+            return
         for uid in list(uids):
             if uid in self.sched.running:
                 self.sched.finish(uid, self.clock_s)
                 self.arena.release(uid)
+            elif not self.sched.sequences[uid].finished:
+                self.sched.finish(uid, self.clock_s)   # queued: no slot yet
 
     def run_until_drained(self, max_steps: int = 100000) -> ServeReport:
         """Step until queue and batch are empty. The report covers every
         request finished so far (including cancellations and requests
-        completed by manual step() calls before the drain)."""
+        completed by manual step() calls before the drain).
+
+        Replica-routed engines merge every replica's TokenStats onto
+        the shared timeline (ordered by each step's completion time)
+        and report the drained makespan as `span_s`; requests come
+        back in global-uid (submission) order."""
+        if self.replicas is not None:
+            log = []
+            for _ in range(max_steps):
+                r = self.step()
+                if r is None:
+                    break
+                log.append((r.t_s, r.replica, r.stats))
+            log.sort(key=lambda e: (e[0], e[1]))
+            reqs = [self.router.request(u) for u in self.router.assignment]
+            return ServeReport(
+                stats=[s for _, _, s in log],
+                requests=[q for q in reqs if q.finished],
+                span_s=max(r.clock_s for r in self.replicas))
         stats = []
         for _ in range(max_steps):
             r = self.step()
@@ -396,7 +579,8 @@ class ServeEngine:
         return ServeReport(stats=stats,
                            requests=[r for r in
                                      self.sched.sequences.values()
-                                     if r.finished])
+                                     if r.finished],
+                           span_s=self.clock_s)
 
     # ---------------------------------------------- compatibility API ----
     def generate(self, prompt_tokens, max_new: int = 32,
@@ -414,6 +598,11 @@ class ServeEngine:
         """
         prompt = np.asarray(prompt_tokens)
         B, S = prompt.shape
+        if self.replicas is not None:
+            raise ValueError(
+                "generate() is the static-batch compat path; a "
+                "replica-routed engine serves via submit()/"
+                "run_until_drained()")
         assert not self.sched.has_work, \
             "generate() requires an idle engine (drain submitted work first)"
         t_wall = time.perf_counter()

@@ -1,12 +1,19 @@
-"""Request-level continuous-batching scheduler (DESIGN.md §4).
+"""Request-level continuous-batching scheduler (DESIGN.md §4) and the
+data-parallel replica router above it (DESIGN.md §5).
 
-Tracks the full request lifecycle — queued (submitted, not yet
-admitted), running (owns a KV slot, decoding), finished — and the
-resulting effective-batch-size timeline that drives the dynamic
+`BatchScheduler` tracks the full request lifecycle — queued (submitted,
+not yet admitted), running (owns a KV slot, decoding), finished — and
+the resulting effective-batch-size timeline that drives the dynamic
 CPU/NPU adaptation (paper §4.1.3, Fig 13). Unlike the seed's passive
 bookkeeping, requests can now *join* a running batch: `submit()`
 enqueues, the engine admits per step up to the decoder's next bucket
 boundary, so `batch_history` traces both growth and decay.
+
+`ReplicaRouter` shards a request stream over the mesh's 'data' axis:
+one `BatchScheduler` per replica, submits routed least-loaded with a
+FIFO tiebreak, global uids mapped onto per-replica local uids. FIFO
+head-of-line blocking is *per replica*: a not-yet-arrived head on one
+replica never starves an arrived request on another.
 
 All times are in the engine's modeled clock (seconds of effective
 latency), not wall time.
@@ -99,13 +106,24 @@ class BatchScheduler:
         self.running.append(req.uid)
 
     def finish(self, uid: int, now: float = 0.0):
-        """Force-finish (cancellation / Best-of-N early stop)."""
+        """Force-finish (cancellation / Best-of-N early stop).
+
+        Removing a *running* request is a batch-decay event that
+        happens between step() calls, so it must land on the
+        batch-size timeline the CPU/NPU adaptation consumes —
+        otherwise the recorded history skips straight from the
+        pre-cancel size to whatever the next step() appends. Dequeuing
+        a still-queued request changes no live batch, so it records
+        nothing."""
         req = self.sequences[uid]
         if not req.finished:
             req.finished = True
             req.finish_time = now
         if uid in self.running:
             self.running.remove(uid)
+            self.batch_history.append(self.batch_size)
+        elif uid in self.queue:
+            self.queue.remove(uid)
 
     def next_arrival(self) -> Optional[float]:
         if not self.queue:
@@ -142,3 +160,97 @@ class BatchScheduler:
                 self.running.remove(uid)
         self.batch_history.append(self.batch_size)
         return done
+
+
+# ----------------------------------------------------- replica routing ----
+
+class ReplicaRouter:
+    """Routes a request stream over per-replica BatchSchedulers
+    (DESIGN.md §5 — the mesh's 'data' axis made real).
+
+    Policy: least outstanding load (queued + running), ties broken
+    FIFO over replicas (the replica assigned least recently wins), so
+    an empty stream round-robins deterministically. The router owns
+    the global-uid namespace — per-replica schedulers keep minting
+    their own local uids, exactly as an independent single-replica
+    engine would, which is what makes the dp=N engine token-identical
+    to N independent dp=1 engines fed the routed sub-streams.
+
+    It also quacks enough like a BatchScheduler (`sequences`,
+    `has_work`, `batch_size`, `batch_history`) for report/benchmark
+    consumers to stay replica-agnostic; `batch_history` is the merged
+    timeline the owning engine appends to after every replica step
+    (total running across replicas, on the shared modeled clock).
+    """
+
+    def __init__(self, schedulers):
+        self.scheds: list[BatchScheduler] = list(schedulers)
+        if not self.scheds:
+            raise ValueError("ReplicaRouter needs at least one scheduler")
+        self.assignment: dict[int, tuple] = {}   # global uid -> (r, local)
+        self._global_of: dict[tuple, int] = {}   # (r, local) -> global uid
+        self._next_uid = 0
+        self._fifo = deque(range(len(self.scheds)))
+        self.batch_history: list[int] = []
+
+    # ------------------------------------------------------- routing ----
+    def load_of(self, r: int) -> int:
+        """Outstanding load: submitted-but-unfinished requests."""
+        s = self.scheds[r]
+        return len(s.queue) + len(s.running)
+
+    def pick_replica(self) -> int:
+        """Least-loaded replica; FIFO tiebreak (least recently
+        assigned). Pure read — the tiebreak queue rotates only when
+        the routed submit actually lands (`bind`), so a submit that
+        fails validation downstream leaves the deterministic routing
+        order untouched."""
+        best, best_load = None, None
+        for r in self._fifo:
+            load = self.load_of(r)
+            if best is None or load < best_load:
+                best, best_load = r, load
+        return best
+
+    def bind(self, replica: int, local_uid: int) -> int:
+        """Register a routed submit; returns the global uid. Moves the
+        replica to the back of the FIFO tiebreak queue."""
+        uid = self._next_uid
+        self._next_uid += 1
+        self.assignment[uid] = (replica, local_uid)
+        self._global_of[(replica, local_uid)] = uid
+        self._fifo.remove(replica)
+        self._fifo.append(replica)
+        return uid
+
+    def locate(self, uid: int) -> tuple:
+        """Global uid -> (replica index, replica-local uid)."""
+        return self.assignment[uid]
+
+    def to_global(self, replica: int, local_uid: int) -> int:
+        return self._global_of[(replica, local_uid)]
+
+    def request(self, uid: int) -> Request:
+        r, local = self.assignment[uid]
+        return self.scheds[r].sequences[local]
+
+    # ------------------------------------- scheduler-compatible views ----
+    @property
+    def sequences(self) -> dict:
+        """Global-uid view of every routed request (submission order)."""
+        return {uid: self.scheds[r].sequences[local]
+                for uid, (r, local) in self.assignment.items()}
+
+    @property
+    def has_work(self) -> bool:
+        return any(s.has_work for s in self.scheds)
+
+    @property
+    def batch_size(self) -> int:
+        return sum(len(s.running) for s in self.scheds)
+
+    @property
+    def running(self) -> list:
+        """Global uids currently decoding, replica-major order."""
+        return [self._global_of[(r, u)]
+                for r, s in enumerate(self.scheds) for u in s.running]

@@ -82,6 +82,12 @@ class TokenStats:
     n_shards: int = 1
     io_total_s: float = 0.0   # summed raw demand (aggregate traffic)
     shards: list = None       # per-shard ShardStats when n_shards > 1
+    # 'data'-axis row that produced this step. Each replica owns a
+    # whole StoragePlane (per-replica caches/channels are the same
+    # per-shard machinery at dp granularity), so the plane itself
+    # never sets this; the routing engine annotates it when merging
+    # per-replica timelines into one ServeReport (DESIGN.md §5).
+    replica: int = 0
 
 
 class StoragePlane:
@@ -141,9 +147,6 @@ class StoragePlane:
             self.n_hot = 0
             cold_capacity = max(int(resident * spec.cache_efficiency),
                                 self.cs) * cfg.num_layers
-        # the per-token activated set always includes the plan's hot
-        # prefix; pinned systems never do I/O for it.
-        self.plan_hot = plan1.n_hot
         # the hot prefix is pinned (fixed region); the LRU capacity below
         # is entirely the cold region. One segmented cache *per device
         # shard*, each a 1/n miniature of the single-device cache:

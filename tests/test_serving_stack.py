@@ -1,7 +1,9 @@
 """Layered serving stack: continuous batching (mid-stream admission,
 bucket-boundary retrace discipline), slot-based KV recycling, the
-generate() compatibility wrapper vs the seed decode loop, and
-StoragePlane.step determinism with/without the prefetch thread."""
+generate() compatibility wrapper vs the seed decode loop,
+StoragePlane.step determinism with/without the prefetch thread, and
+data-parallel replica routing (meshless dp — the scheduler-level
+mechanism; the meshed goldens live in test_distributed.py)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -12,9 +14,9 @@ from repro.core.adaptation import BucketedDecoder
 from repro.core.baselines import POWERINFER2
 from repro.core.planner import build_plan, permute_ffn_params
 from repro.models import dense
-from repro.serving.engine import ServeEngine
+from repro.serving.engine import GenerationResult, ServeEngine, ServeReport
 from repro.serving.sampler import sample_tokens
-from repro.serving.scheduler import BatchScheduler
+from repro.serving.scheduler import BatchScheduler, ReplicaRouter
 from repro.serving.storage_plane import StoragePlane
 
 
@@ -98,6 +100,24 @@ def test_kv_slots_recycled_after_completion(setup):
     eng.run_until_drained()
     assert not eng.sched.has_work
     assert eng.arena.n_free == eng.arena.n_slots
+
+
+def test_finish_records_batch_decay_on_timeline():
+    """Force-finishing a running request between step() calls is a
+    batch-decay event the adaptation timeline must see; dequeuing a
+    still-queued request is not (no live batch changed)."""
+    sched = BatchScheduler()
+    r1 = sched.add(4, 8)
+    r2 = sched.add(4, 8)
+    sched.step({r1.uid: 1, r2.uid: 2})
+    assert sched.batch_history == [2]
+    sched.finish(r1.uid, now=1.0)                      # running -> decay
+    assert sched.batch_history == [2, 1]
+    assert r1.finished and r1.finish_time == 1.0
+    r3 = sched.submit(np.arange(4), 8, arrival_time=9.0)
+    sched.finish(r3.uid)                               # queued -> no entry
+    assert sched.batch_history == [2, 1]
+    assert r3.finished and r3.uid not in sched.queue
 
 
 def test_scheduler_admission_queue_fifo():
@@ -229,3 +249,223 @@ def test_engine_has_no_storage_pricing(setup):
     # legacy read access still works
     assert eng.cache is eng.storage.cache
     assert eng.coldstore is eng.storage.coldstore
+
+
+# ------------------------------------------------- replica routing (dp) ----
+
+def _dp_engine(cfg, params, plan, dp=None, seed=0):
+    return ServeEngine(cfg, params, plan, spec=POWERINFER2,
+                       offload_ratio=0.5, buckets=(1, 2, 4),
+                       ctx_budget=40, temperature=0.8, seed=seed, dp=dp)
+
+
+def test_replica_router_least_loaded_fifo_tiebreak():
+    """Equal loads round-robin (FIFO over replicas); an unbalanced
+    replica is skipped until loads equalize."""
+    scheds = [BatchScheduler(), BatchScheduler()]
+    router = ReplicaRouter(scheds)
+    picks = []
+    for i in range(4):
+        r = router.pick_replica()
+        picks.append(r)
+        local = scheds[r].submit(np.arange(4), 8).uid
+        assert router.locate(router.bind(r, local)) == (r, local)
+    assert picks == [0, 1, 0, 1]
+    # load replica 1 twice more: next two picks must go to replica 0
+    for _ in range(2):
+        scheds[1].submit(np.arange(4), 8)
+    assert router.pick_replica() == 0
+    scheds[0].submit(np.arange(4), 8)
+    assert router.pick_replica() == 0
+    # global-uid view covers every routed request in submission order
+    assert list(router.sequences) == [0, 1, 2, 3]
+    assert router.has_work
+
+
+def test_fifo_head_of_line_is_per_replica():
+    """Satellite regression: FIFO admission blocks behind the queue
+    head *within* a replica only — a not-yet-arrived head routed to
+    one replica must not starve an already-arrived request on the
+    other (pop_admissible is per-scheduler under the router)."""
+    scheds = [BatchScheduler(), BatchScheduler()]
+    router = ReplicaRouter(scheds)
+    ra = router.pick_replica()                 # A -> replica 0 (far future)
+    a = scheds[ra].submit(np.arange(4), 8, arrival_time=50.0)
+    router.bind(ra, a.uid)
+    rb = router.pick_replica()                 # B -> replica 1 (arrived)
+    assert rb != ra
+    b = scheds[rb].submit(np.arange(4), 8, arrival_time=0.0)
+    router.bind(rb, b.uid)
+    # at t=1: A's replica is head-blocked, B's replica admits B
+    assert scheds[ra].pop_admissible(1.0, 10) == []
+    assert [r.uid for r in scheds[rb].pop_admissible(1.0, 10)] == [b.uid]
+
+
+def test_dp_head_of_line_engine_vs_single(setup):
+    """End to end: the same two-request stream head-blocks a dp=1
+    engine until the late head arrives, while a dp=2 engine serves the
+    early request immediately on the other replica."""
+    cfg, params, plan, _ = setup
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab_size, 16) for _ in range(2)]
+
+    eng1 = ServeEngine(cfg, params, plan, spec=POWERINFER2,
+                       offload_ratio=0.5, buckets=(1, 2),
+                       ctx_budget=40, temperature=0.8)
+    a1 = eng1.submit(prompts[0], max_new=4, arrival_time=50.0)
+    b1 = eng1.submit(prompts[1], max_new=4, arrival_time=0.0)
+    eng1.run_until_drained()
+    # single replica: FIFO head A blocks B past A's arrival
+    assert eng1.sched.sequences[b1].first_token_time > 50.0
+
+    eng2 = _dp_engine(cfg, params, plan, dp=2)
+    a2 = eng2.submit(prompts[0], max_new=4, arrival_time=50.0)
+    b2 = eng2.submit(prompts[1], max_new=4, arrival_time=0.0)
+    rep = eng2.run_until_drained()
+    reqs = eng2.sched.sequences
+    assert reqs[b2].finish_time < 50.0         # served while A in flight
+    assert reqs[a2].first_token_time > 50.0
+    assert len(rep.requests) == 2
+    eng1.close(), eng2.close()
+
+
+def test_dp_engine_token_identical_to_routed_dp1(setup):
+    """Tentpole golden (meshless): a dp=2 engine decodes
+    token-identical to two independent dp=1 engines fed the routed
+    sub-streams, and the merged report aggregates both replica
+    timelines."""
+    cfg, params, plan, _ = setup
+    rng = np.random.default_rng(0)
+    reqs = [(rng.integers(0, cfg.vocab_size, 16),
+             int(rng.integers(3, 7)), i * 1e-3) for i in range(5)]
+
+    eng = _dp_engine(cfg, params, plan, dp=2)
+    # meshless replicas share jit caches (identical executables on the
+    # same params) — dp must not multiply trace time
+    assert eng.replicas[1].decoder._cache is eng.replicas[0].decoder._cache
+    for p, m, t in reqs:
+        eng.submit(p, m, arrival_time=t)
+    rep = eng.run_until_drained()
+    assert not eng.sched.has_work
+    toks_dp = {u: list(r.generated) for u, r in eng.sched.sequences.items()}
+    assignment = dict(eng.router.assignment)
+    # merged report: every replica contributed, span is the slowest
+    # replica's clock, timeline length covers every step
+    assert {s.replica for s in rep.stats} == {0, 1}
+    assert rep.span_s == max(r.clock_s for r in eng.replicas)
+    assert rep.span_s == eng.clock_s
+    # one merged entry per replica step (no cancels -> batch_history
+    # is exactly one append per step)
+    assert len(rep.stats) == sum(len(r.sched.batch_history)
+                                 for r in eng.replicas)
+    assert rep.throughput_tok_s > 0 and rep.total_tokens == \
+        sum(len(t) for t in toks_dp.values())
+    assert len(eng.sched.batch_history) == len(rep.stats)
+    eng.close()
+
+    toks_ref = {}
+    for r in (0, 1):
+        sub = ServeEngine(cfg, params, plan, spec=POWERINFER2,
+                          offload_ratio=0.5, buckets=(1, 2, 4),
+                          ctx_budget=40, temperature=0.8, seed=0)
+        local_to_global = {}
+        for g, (rep_idx, _) in assignment.items():
+            if rep_idx != r:
+                continue
+            p, m, t = reqs[g]
+            local_to_global[sub.submit(p, m, arrival_time=t)] = g
+        sub.run_until_drained()
+        for lu, g in local_to_global.items():
+            toks_ref[g] = list(sub.sched.sequences[lu].generated)
+        sub.close()
+    assert toks_dp == toks_ref
+
+
+def test_dp_cancel_routes_and_report_survives(setup):
+    """Satellite regression via ServeEngine.cancel(): requests
+    cancelled before their first token (still queued, or the whole
+    stream) must neither crash the report nor leak into TTFT."""
+    cfg, params, plan, _ = setup
+    rng = np.random.default_rng(4)
+
+    # whole stream cancelled before any step: empty-report edge
+    eng = ServeEngine(cfg, params, plan, spec=POWERINFER2,
+                      offload_ratio=0.5, buckets=(1, 2),
+                      ctx_budget=40, temperature=0.8)
+    uids = [eng.submit(rng.integers(0, cfg.vocab_size, 16), max_new=4)
+            for _ in range(2)]
+    eng.cancel(uids)
+    rep = eng.run_until_drained()
+    assert rep.stats == [] and len(rep.requests) == 2
+    assert rep.ttft().size == 0                        # None never coerced
+    assert rep.tokens_per_s == 0.0 and rep.throughput_tok_s == 0.0
+    pct = rep.latency_percentiles()                    # must not raise
+    assert pct["p99"] == 0.0
+    eng.close()
+
+    # dp engine: cancel routes to the owning replica; a queued cancel
+    # finishes tokenless while the rest of the stream completes
+    eng = _dp_engine(cfg, params, plan, dp=2)
+    keep, drop = [], None
+    for i in range(3):
+        u = eng.submit(rng.integers(0, cfg.vocab_size, 16), max_new=3,
+                       arrival_time=0.0)
+        (keep.append(u) if i < 2 else (drop := u))
+    eng.cancel([drop])
+    rep = eng.run_until_drained()
+    reqs = eng.sched.sequences
+    assert reqs[drop].finished and reqs[drop].generated == []
+    assert reqs[drop].first_token_time is None
+    assert all(len(reqs[u].generated) == 3 for u in keep)
+    assert rep.ttft().size == 2                        # cancelled filtered
+    rep.latency_percentiles()
+    eng.close()
+
+
+def test_dp_failed_submit_does_not_perturb_routing(setup):
+    """A submit that fails validation must leave the FIFO tiebreak
+    order untouched — the deterministic round-robin resumes as if the
+    bad call never happened."""
+    cfg, params, plan, _ = setup
+    eng = _dp_engine(cfg, params, plan, dp=2)
+    with pytest.raises(ValueError):
+        eng.submit(np.array([], np.int32), max_new=2)
+    u0 = eng.submit(np.arange(4), 2, arrival_time=0.0)
+    u1 = eng.submit(np.arange(4), 2, arrival_time=0.0)
+    assert eng.router.locate(u0)[0] == 0
+    assert eng.router.locate(u1)[0] == 1
+    eng.run_until_drained()
+    eng.close()
+
+
+def test_dp_cancel_running_records_merged_decay(setup):
+    """A between-step cancel of a running request is a decay event on
+    the *merged* batch timeline too, mirroring the per-scheduler
+    BatchScheduler.finish fix."""
+    cfg, params, plan, _ = setup
+    rng = np.random.default_rng(5)
+    eng = _dp_engine(cfg, params, plan, dp=2)
+    uids = [eng.submit(rng.integers(0, cfg.vocab_size, 16), max_new=6,
+                       arrival_time=0.0) for _ in range(2)]
+    eng.step(), eng.step()                     # both replicas running
+    total0 = eng.sched.batch_size
+    assert total0 == 2
+    hist0 = len(eng.sched.batch_history)
+    eng.cancel([uids[0]])
+    assert eng.sched.batch_history[hist0:] == [total0 - 1]
+    eng.run_until_drained()
+    eng.close()
+
+
+def test_zero_token_reports_return_zero():
+    """Satellite: empty stats must read as 0.0 tok/s (was inf) in both
+    report classes, and percentile summaries must not crash."""
+    g = GenerationResult(tokens=np.zeros((1, 0), np.int32), stats=[])
+    assert g.tokens_per_s == 0.0
+    assert g.latency_percentiles()["mean"] == 0.0
+    r = ServeReport(stats=[], requests=[])
+    assert r.tokens_per_s == 0.0
+    assert r.throughput_tok_s == 0.0
+    assert r.total_tokens == 0
+    assert r.ttft().size == 0
+    assert r.latency_percentiles()["p50"] == 0.0
