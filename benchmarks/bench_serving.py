@@ -25,9 +25,14 @@ host jit noise.
 CLI (also runnable argless via benchmarks.run):
   python -m benchmarks.bench_serving --devices 4 --tiny \
       --json BENCH_serving_4dev.json
+  python -m benchmarks.bench_serving --family moe --devices 4 --tiny \
+      --json BENCH_serving_moe.json
 --devices N forces N host platform devices when jax is not yet
 initialized (CI smoke) and sweeps every (dp, tp) with dp*tp <= N;
---json writes the machine-readable results.
+--family moe serves DeepSeekMoE through the family registry — the
+mesh 'model' axis becomes the expert-parallel axis (tp == ep, E/n
+experts per shard) and the storage plane prices per-device expert
+slices; --json writes the machine-readable results.
 """
 import argparse
 import json
@@ -74,7 +79,7 @@ def run_spec(cfg, params, plan, spec, seed=0, mesh=None, n_requests=None,
     from benchmarks.common import paper_timing
     from repro.serving.engine import ServeEngine
     eng = ServeEngine(cfg, params, plan, spec=spec, offload_ratio=0.5,
-                      timing=paper_timing(), buckets=BUCKETS,
+                      timing=paper_timing(cfg.family), buckets=BUCKETS,
                       ctx_budget=PROMPT_LEN + 16, temperature=0.8,
                       mesh=mesh, dp=dp)
     _request_stream(cfg, eng, n_requests or N_REQUESTS, max_new_hi, seed)
@@ -107,6 +112,9 @@ def main(argv=None):
                          "only); part 2 sweeps every dp*tp <= N")
     ap.add_argument("--tiny", action="store_true",
                     help="CI smoke: fewer/shorter requests")
+    ap.add_argument("--family", choices=("dense", "moe"), default="dense",
+                    help="serving family: dense (smollm) or moe "
+                         "(deepseek — tp is the expert-parallel axis)")
     ap.add_argument("--json", default=None,
                     help="write results JSON (BENCH_*.json artifact)")
     args = ap.parse_args(argv if argv is not None else sys.argv[1:]
@@ -126,10 +134,16 @@ def main(argv=None):
 
     n_req = 4 if args.tiny else N_REQUESTS
     max_new_hi = 8 if args.tiny else 14
-    cfg, model, params, plan, prompt = engine_setup(
-        "smollm-135m", activation="relu2", mode="relu",
-        train_steps=10 if args.tiny else 40)
+    if args.family == "moe":
+        cfg, model, params, plan, prompt = engine_setup(
+            "deepseek-moe-16b", train_steps=10 if args.tiny else 40)
+    else:
+        cfg, model, params, plan, prompt = engine_setup(
+            "smollm-135m", activation="relu2", mode="relu",
+            train_steps=10 if args.tiny else 40)
+    fam_tag = "" if args.family == "dense" else f"{args.family}_"
     rows, out = [], {"bench": "serving", "tiny": bool(args.tiny),
+                     "family": args.family,
                      "device_count": jax.device_count(), "results": []}
 
     # ---- part 1: spec comparison, single device --------------------------
@@ -144,7 +158,7 @@ def main(argv=None):
               f"{s['span_tok_s']:10.1f} {s['ttft_ms']:9.3f} "
               f"{s['p50_ms']:8.3f} {s['p90_ms']:8.3f} {s['p99_ms']:8.3f} "
               f"{s['peak_batch']:5d}")
-        tag = spec.name.replace(".", "").replace("-", "_")
+        tag = fam_tag + spec.name.replace(".", "").replace("-", "_")
         rows.append((f"serving_tok_s_{tag}", s["tok_s"],
                      f"{n_req} reqs, Poisson-like arrivals, 50% offload"))
         rows.append((f"serving_ttft_ms_{tag}", s["ttft_ms"],
@@ -168,8 +182,13 @@ def main(argv=None):
     n_grid = 3 * n_req
     grid = dp_tp_grid(jax.device_count())
     if len(grid) > 1:
-        groups = max(t for _, t in grid)
-        grid_plan = _scaled_plan(cfg, plan, groups)
+        if args.family == "moe":
+            # experts shard as-is over every divisor mesh (tp == ep);
+            # the moe plan is already bucket-scaled by build_moe_plan
+            grid_plan = plan
+        else:
+            groups = max(t for _, t in grid)
+            grid_plan = _scaled_plan(cfg, plan, groups)
         tokens_ref = {}                      # dp -> token dict at lowest tp
         span_by_dp = {}                      # dp -> span_tok_s at tp=1
         for d, t in grid:
@@ -188,13 +207,13 @@ def main(argv=None):
             # span-prefixed name: these rows hold the span rate, not
             # part 1's per-pipeline tokens_per_s — don't let the two
             # semantics share a metric prefix in the trajectory
-            rows.append((f"serving_span_tok_s_dp{d}_tp{t}",
+            rows.append((f"serving_{fam_tag}span_tok_s_dp{d}_tp{t}",
                          s["span_tok_s"],
                          f"({d},{t}) mesh span throughput; per-pipeline "
                          f"{s['tok_s']}; tokens vs dp={d} ref "
                          f"{'identical' if ident else 'DIVERGED'}"))
-            rows.append((f"serving_ttft_ms_dp{d}_tp{t}", s["ttft_ms"],
-                         f"({d},{t}) mesh mean TTFT"))
+            rows.append((f"serving_{fam_tag}ttft_ms_dp{d}_tp{t}",
+                         s["ttft_ms"], f"({d},{t}) mesh mean TTFT"))
             if t == 1:
                 span_by_dp[d] = s["span_tok_s"]
             out["results"].append(dict(s, system="powerinfer-2", dp=d,
@@ -205,7 +224,7 @@ def main(argv=None):
             scaling = {f"dp{d}": round(v / base, 3)
                        for d, v in sorted(span_by_dp.items())}
             out["dp_scaling"] = scaling
-            rows.append(("serving_dp_scaling",
+            rows.append((f"serving_{fam_tag}dp_scaling",
                          "|".join(f"{k}={v}x" for k, v in scaling.items()),
                          "span throughput vs dp=1, tp=1 (replica "
                          "routing over the 'data' axis)"))

@@ -15,8 +15,9 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.core.planner import build_plan, permute_ffn_params
-from repro.models.dense import make_model
+from repro.core.planner import build_moe_plan, build_plan, \
+    permute_ffn_params
+from repro.serving.families import serving_family
 
 
 @functools.lru_cache(maxsize=1)
@@ -95,7 +96,12 @@ def engine_setup(arch: str = "smollm-135m", activation: str = None,
     and activation counts, and everything downstream (plan, permute)
     recomputes deterministically from them. `cache=False` bypasses the
     disk layer (scripts/check_param_cache.py uses it to prove the
-    cached and fresh params decode identically)."""
+    cached and fresh params decode identically).
+
+    Family-generic through the serving registry: MoE archs skip
+    predictor calibration / activation profiling / hot-first
+    permutation (the router is the predictor, experts are the
+    clusters) and get the experts-as-clusters build_moe_plan."""
     import dataclasses
     from repro.core.planner import PHONE, profile_activations
     cfg = get_config(arch).reduced()
@@ -104,7 +110,7 @@ def engine_setup(arch: str = "smollm-135m", activation: str = None,
     if mode:
         cfg = cfg.replace(sparse_ffn=dataclasses.replace(cfg.sparse_ffn,
                                                          mode=mode))
-    model = make_model(cfg)
+    model = serving_family(cfg).make_model(cfg)
     params = model.init(jax.random.key(seed))
     path = _setup_cache_path(arch, activation, mode, seed, train_steps) \
         if cache else None
@@ -119,14 +125,22 @@ def engine_setup(arch: str = "smollm-135m", activation: str = None,
     else:
         if train_steps:
             params, _ = _train_with_cfg(cfg, params, train_steps, seed)
-        batches = [jax.random.randint(jax.random.key(seed * 13 + i),
-                                      (4, 64), 0, cfg.vocab_size)
-                   for i in range(4)]
-        from repro.core.planner import calibrate_predictor
-        params = calibrate_predictor(params, cfg, batches)
-        counts, n_tok = profile_activations(params, cfg, batches)
+        if cfg.num_experts:
+            counts, n_tok = np.zeros((1,), np.int64), 1     # moe: unused
+        else:
+            batches = [jax.random.randint(jax.random.key(seed * 13 + i),
+                                          (4, 64), 0, cfg.vocab_size)
+                       for i in range(4)]
+            from repro.core.planner import calibrate_predictor
+            params = calibrate_predictor(params, cfg, batches)
+            counts, n_tok = profile_activations(params, cfg, batches)
         if path:
             _save_trained(path, jax.tree.leaves(params), counts, n_tok)
+    if cfg.num_experts:
+        plan = build_moe_plan(cfg, hw=PHONE)
+        prompt = np.random.default_rng(seed).integers(
+            0, cfg.vocab_size, (4, 16)).astype(np.int32)
+        return cfg, model, params, plan, prompt
     plan = build_plan(cfg, (counts / n_tok).astype(np.float32), hw=PHONE)
     # Operating-point calibration: a briefly-trained reduced model is
     # far denser (~70% active) than the paper's trained 7Bs (~15%).
@@ -162,11 +176,15 @@ def _train_with_cfg(cfg, params, steps, seed):
     return params, losses
 
 
-def paper_timing():
-    """Storage-plane cost constants at the paper's deployment size
-    (Bamboo-7B FP16: 24KB Gate-Up-Down bundles, 32 layers)."""
-    from repro.configs.paper_models import BAMBOO_7B
+def paper_timing(family: str = "dense"):
+    """Storage-plane cost constants at the paper's deployment size —
+    dense: Bamboo-7B FP16 (24KB Gate-Up-Down bundles, 32 layers); moe:
+    DeepSeekMoE-16B (per-expert d_ff=1408, 28 layers — the storage
+    view multiplies widths by the expert count)."""
     from repro.serving.engine import TimingProfile
+    if family == "moe":
+        return TimingProfile.from_config(get_config("deepseek-moe-16b"), 3)
+    from repro.configs.paper_models import BAMBOO_7B
     return TimingProfile.from_config(BAMBOO_7B, 3)
 
 

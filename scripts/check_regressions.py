@@ -10,7 +10,14 @@ while `--update` rewrites the baseline to the current failure set
 
 The baseline is keyed by jax major.minor so each CI matrix leg (oldest
 pin vs latest) carries its own failure set; a missing key means "no
-known failures" for that leg.
+known failures" for that leg. The special `_min_collected` key maps
+each jax series to its collected-test floor (per leg, like the
+failure sets — import guards can legitimately collect different
+counts per jax): the gate fails when fewer tests are collected than
+that leg's floor, so a whole test file silently dropping out of
+collection (an import-guard skip, a renamed module) is a gated
+regression too — new suites join the ratchet by re-recording the
+floor with --update.
 
   python scripts/check_regressions.py                 # gate (CI)
   python scripts/check_regressions.py --update        # re-record
@@ -93,24 +100,41 @@ def main() -> int:
     failed, total = run_pytest(args.pytest_args)
     baseline_all = load_baseline(args.baseline)
     known = set(baseline_all.get(series, baseline_all.get("default", [])))
+    # the collected floor only means anything for a full-suite run:
+    # forwarded pytest args select a subset, which must neither trip
+    # the shrink gate nor re-record a tiny floor
+    full_suite = not args.pytest_args
+    floors = baseline_all.get("_min_collected", {})
+    floor = int(floors.get(series, min(floors.values(), default=0))) \
+        if full_suite else 0
 
     new = sorted(failed - known)
     stale = sorted(known - failed)
     print(f"\n[check_regressions] jax {series}: {total} tests, "
-          f"{len(failed)} failed ({len(known)} known)")
+          f"{len(failed)} failed ({len(known)} known, "
+          f"collected floor {floor})")
 
     if args.update:
         baseline_all[series] = sorted(failed)
         if not baseline_all[series]:
             baseline_all.pop(series)
+        if full_suite:
+            baseline_all.setdefault("_min_collected", {})[series] = total
         with open(args.baseline, "w") as f:
             json.dump(baseline_all, f, indent=1, sort_keys=True)
             f.write("\n")
         print(f"[check_regressions] baseline[{series}] <- "
-              f"{len(failed)} entries ({args.baseline})")
+              f"{len(failed)} entries, _min_collected <- {total} "
+              f"({args.baseline})")
         return 0
 
     rc = 0
+    if total < floor:
+        print(f"[check_regressions] suite SHRANK: {total} collected < "
+              f"recorded floor {floor} — a test file stopped being "
+              f"collected (import error, renamed module?); re-record "
+              f"with --update only if intentional")
+        rc = 1
     if new:
         print(f"[check_regressions] {len(new)} NEW failure(s):")
         for t in new:

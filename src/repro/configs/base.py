@@ -121,6 +121,15 @@ class ModelConfig:
         return self.family in ("ssm", "hybrid") or self.sliding_window > 0
 
     @property
+    def moe_flat_neurons(self) -> int:
+        """Flat serving neuron space of a MoE layer: shared experts
+        first (the pinned hot prefix — always-dense clusters), then the
+        routed experts (cold clusters of d_ff neurons each). This is
+        the experts-as-clusters mapping the storage plane prices
+        (DESIGN.md §8)."""
+        return (self.num_shared_experts + self.num_experts) * self.d_ff
+
+    @property
     def ssm_d_inner(self) -> int:
         return self.ssm_expand * self.d_model
 

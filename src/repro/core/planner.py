@@ -349,3 +349,39 @@ def build_plan(cfg: ModelConfig, freqs: np.ndarray = None,
         arch=cfg.name, n_neurons=freqs.shape[1],
         cluster_size=cfg.sparse_ffn.cluster_size,
         neuron_order=order, frequencies=sorted_f, plans=plans, hardware=hw)
+
+
+def build_moe_plan(cfg: ModelConfig, hw: HardwareProfile = None,
+                   batch_buckets=(1, 2, 4, 8, 16, 32)) -> ExecutionPlan:
+    """Experts-as-clusters execution plan for the MoE family
+    (DESIGN.md §8): the flat serving neuron space is
+    [shared experts | routed experts] with one cluster per routed
+    expert (cluster_size = d_ff), so the storage plane prices expert
+    residency exactly like dense cold-cluster residency.
+
+    Per batch bucket, the cold budget is the *expected batch union* of
+    routed experts — 1-(1-k/E)^b per expert, the Fig 2 union effect at
+    expert granularity — clamped to [k, E] experts. No neuron
+    permutation is needed: the architecture already makes the clusters
+    explicit, so `neuron_order` is the identity."""
+    hw = hw or HardwareProfile()
+    f, E, k = cfg.d_ff, cfg.num_experts, cfg.experts_per_token
+    if not E or not k:
+        raise ValueError(f"{cfg.name} is not a MoE config "
+                         f"(num_experts={E}, experts_per_token={k})")
+    n_hot = cfg.num_shared_experts * f
+    N = cfg.moe_flat_neurons
+    plans = {}
+    for b in batch_buckets:
+        union = 1.0 - (1.0 - k / E) ** b
+        n_act = min(max(int(round(E * union)), min(k, E)), E)
+        plans[b] = HybridPlan(n_hot=n_hot, k_cold=n_act * f, groups=1,
+                              cluster_size=f)
+    # shared experts always fire; each routed expert at rate ~k/E
+    freqs = np.concatenate([np.ones((n_hot,), np.float32),
+                            np.full((E * f,), k / E, np.float32)])
+    freqs = np.tile(freqs, (cfg.num_layers, 1))
+    order = np.tile(np.arange(N, dtype=np.int32), (cfg.num_layers, 1))
+    return ExecutionPlan(
+        arch=cfg.name, n_neurons=N, cluster_size=f,
+        neuron_order=order, frequencies=freqs, plans=plans, hardware=hw)

@@ -20,7 +20,6 @@ import time              # noqa: E402
 import traceback         # noqa: E402
 
 import jax               # noqa: E402
-import numpy as np      # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
 from repro.configs import get_config, ASSIGNED_ARCHS, INPUT_SHAPES  # noqa: E402
@@ -83,6 +82,17 @@ def decode_plan_for(cfg, groups: int):
     return plan
 
 
+def adapt_moe_groups(cfg, mesh):
+    """MoE configs dispatch within data-local token groups: retie
+    `moe_dispatch_groups` to the mesh's replica rows
+    (launch.mesh.dispatch_groups — the shared helper both dry-run
+    paths and the serving engine use). Non-MoE configs pass through."""
+    if not cfg.num_experts:
+        return cfg
+    from repro.launch.mesh import dispatch_groups
+    return cfg.replace(moe_dispatch_groups=dispatch_groups(mesh))
+
+
 def lower_target(arch: str, shape_name: str, multi_pod: bool,
                  verbose: bool = True) -> dict:
     rec = {"arch": arch, "shape": shape_name,
@@ -99,10 +109,7 @@ def lower_target(arch: str, shape_name: str, multi_pod: bool,
             opt = AdamW()
             fsdp = False
         mesh = make_production_mesh(multi_pod=multi_pod)
-        if cfg.num_experts:
-            nb = int(np.prod([v for k, v in dict(mesh.shape).items()
-                              if k in ("pod", "data")]))
-            cfg = cfg.replace(moe_dispatch_groups=nb)
+        cfg = adapt_moe_groups(cfg, mesh)
         model = build_model(cfg)
         groups = mesh.shape["model"]
 
@@ -191,10 +198,7 @@ def _cost_of(arch, shape_name, cfg, multi_pod):
     from repro.models import attention as _attn
     shape = INPUT_SHAPES[shape_name]
     mesh = make_production_mesh(multi_pod=multi_pod)
-    if cfg.num_experts:
-        nb = int(np.prod([v for k, v in dict(mesh.shape).items()
-                          if k in ("pod", "data")]))
-        cfg = cfg.replace(moe_dispatch_groups=nb)
+    cfg = adapt_moe_groups(cfg, mesh)
     model = build_model(cfg)
     groups = mesh.shape["model"]
     opt = AdamW(moment_dtype="bfloat16" if cfg.param_count() > 5e10

@@ -44,6 +44,24 @@ def make_serving_mesh(n_model: int, n_data: int = 1):
                      devices=jax.devices()[:need])
 
 
+def dispatch_groups(mesh) -> int:
+    """Data-local MoE dispatch groups for a mesh: one token group per
+    (pod x data) row, so the dispatch buffer shards over the batch
+    axes while the expert dim shards over 'model' (EP). This is the
+    single source of truth for `cfg.moe_dispatch_groups` — the dry-run
+    derives the launcher-global group count from the production mesh,
+    and each serving replica derives its own (its submesh has
+    data == 1, so replica dispatch is one local group and dp x tp x ep
+    composes). Meshless hosts dispatch in one group."""
+    if mesh is None:
+        return 1
+    shape = dict(mesh.shape)
+    n = 1
+    for ax in ("pod", "data"):
+        n *= shape.get(ax, 1)
+    return int(n)
+
+
 def replica_submeshes(mesh):
     """One (1, n_model) tensor-parallel submesh per 'data'-axis row of
     `mesh` — replica r keeps exactly the devices of row r, so a

@@ -16,6 +16,13 @@ scheduler-level and need no extra devices; with --tp > 1 each replica
 owns its own (1, tp) row of a (dp, tp) mesh, so dp*tp devices must be
 visible. A --dp run serves the Best-of-N prompts as a request stream
 (submit/run_until_drained) instead of the static-batch generate().
+
+Families (DESIGN.md §8): --family {dense,vlm,moe} serves that family's
+default arch through the registry; for moe, --ep N is the
+expert-parallel degree — the same mesh 'model' axis --tp sets for the
+dense families (each shard owns E/N experts), so
+
+  PYTHONPATH=src python -m repro.launch.serve --family moe --ep 2 --dp 2
 """
 from __future__ import annotations
 
@@ -27,10 +34,13 @@ import numpy as np
 from repro.configs import get_config
 from repro.core.baselines import ALL_SYSTEMS, POWERINFER2
 from repro.core.io_model import UFS40, HOST_DMA
-from repro.core.planner import build_plan, permute_ffn_params, \
-    profile_activations
-from repro.models.model import build_model
+from repro.core.planner import profile_activations
 from repro.serving.engine import ServeEngine
+from repro.serving.families import default_archs, serving_family
+
+# default arch per servable family (--family shorthand), straight
+# from the registry so a newly registered family appears here for free
+FAMILY_ARCHS = default_archs()
 
 
 def build_engine(arch: str, reduced: bool = True, offload: float = 0.5,
@@ -39,18 +49,19 @@ def build_engine(arch: str, reduced: bool = True, offload: float = 0.5,
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
-    model = build_model(cfg)
+    fam = serving_family(cfg)
+    model = fam.make_model(cfg)
     params = model.init(jax.random.key(seed))
-    if profile:
-        import jax.numpy as jnp
+    freqs = None
+    if profile and not cfg.num_experts:
+        # dense-layer activation profiling; the MoE router needs none
+        # (routing is the predictor, experts are the clusters)
         batches = [jax.random.randint(jax.random.key(i), (4, 64), 0,
                                       cfg.vocab_size) for i in range(4)]
         counts, n_tok = profile_activations(params, cfg, batches)
         freqs = (counts / n_tok).astype(np.float32)
-        plan = build_plan(cfg, freqs)
-    else:
-        plan = build_plan(cfg)
-    params = permute_ffn_params(params, plan.neuron_order)
+    plan = fam.build_plan(cfg, freqs)
+    params = fam.prepare_params(params, plan)
     if tp > 1 and "mesh" not in engine_kwargs:
         from repro.launch.mesh import make_serving_mesh
         engine_kwargs["mesh"] = make_serving_mesh(tp, dp)
@@ -66,7 +77,12 @@ def build_engine(arch: str, reduced: bool = True, offload: float = 0.5,
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--arch", default=None,
+                    help="architecture id (default: the --family arch)")
+    ap.add_argument("--family", choices=sorted(FAMILY_ARCHS),
+                    default="dense",
+                    help="serving family; picks the default arch "
+                         "unless --arch is given")
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--offload", type=float, default=0.5)
     ap.add_argument("--bon", type=int, default=1)
@@ -76,13 +92,27 @@ def main():
                     help="use the TPU host-DMA tier instead of UFS 4.0")
     ap.add_argument("--tp", type=int, default=1,
                     help="tensor-parallel degree (mesh 'model' axis)")
+    ap.add_argument("--ep", type=int, default=0,
+                    help="expert-parallel degree for the moe family — "
+                         "the same mesh 'model' axis as --tp (each "
+                         "shard owns E/ep experts)")
     ap.add_argument("--dp", type=int, default=1,
                     help="data-parallel replicas (mesh 'data' axis)")
     args = ap.parse_args()
 
+    arch = args.arch or FAMILY_ARCHS[args.family]
+    tp = args.tp
+    if args.ep:
+        if not get_config(arch).num_experts:
+            ap.error(f"--ep is expert parallelism but {arch} has no "
+                     f"experts; use --tp for tensor parallelism")
+        if tp > 1 and tp != args.ep:
+            ap.error(f"--tp {tp} and --ep {args.ep} both size the mesh "
+                     f"'model' axis; pass one")
+        tp = args.ep
     storage = HOST_DMA if args.host_dma else UFS40
-    engine, cfg = build_engine(args.arch, args.reduced, args.offload,
-                               storage=storage, profile=True, tp=args.tp,
+    engine, cfg = build_engine(arch, args.reduced, args.offload,
+                               storage=storage, profile=True, tp=tp,
                                dp=args.dp)
     rng = np.random.default_rng(0)
     prompt = rng.integers(0, cfg.vocab_size,
@@ -101,7 +131,7 @@ def main():
         io = sum(s.io_s for s in rep.stats)
         eff = sum(s.effective_s for s in rep.stats)
         print(f"arch={cfg.name} spec=powerinfer-2 storage={storage.name} "
-              f"dp={args.dp} tp={args.tp}")
+              f"dp={args.dp} {'ep' if args.ep else 'tp'}={tp}")
         print(f"modeled serve: {rep.throughput_tok_s:.2f} tok/s over the "
               f"{rep.span_s:.2f}s span ({rep.tokens_per_s:.2f} tok/s "
               f"per-replica pipeline rate) | cache hit {hit:.1%} | "

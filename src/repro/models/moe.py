@@ -14,9 +14,20 @@ tokens -> top-k experts -> rank within expert via stable argsort ->
 (E, C, D) dispatch buffer -> batched expert GEMMs -> weighted combine.
 
 Sharding: 'ep' shards the expert dim over the mesh 'model' axis
-(deepseek: 64/16 = 4 per shard; routing crosses shards via XLA-inserted
-all-to-alls); 'tp' shards d_ff inside every expert (grok: 8 experts < 16
-shards). Both selectable per config; roofline hillclimb compares.
+(deepseek: 64/16 = 4 per shard); 'tp' shards d_ff inside every expert
+(grok: 8 experts < 16 shards). Both selectable per config; roofline
+hillclimb compares. For grouped training dispatch the pjit/constrain
+formulation below lets XLA insert the all-to-alls; the serving decode
+shape (one replica-local group) takes `_moe_ep_shard_map` instead —
+replicated routing, strictly shard-local dispatch/combine, one psum
+per layer — which is what makes ep=N decode token-identical to ep=1
+(DESIGN.md §8).
+
+Serving (DESIGN.md §8): `make_decode_step(cfg, collect_indices=True)`
+is the family registry's traced decode — it accepts the engine's
+`active_mask` (freed KV-arena lanes never consume expert capacity)
+and returns the per-layer kept-dispatch counts (L, E), the expert
+activation trace the storage plane prices as cold-cluster residency.
 """
 from __future__ import annotations
 
@@ -69,36 +80,47 @@ def _capacity(T: int, k: int, E: int, factor: float) -> int:
     return max(8, ((c + 7) // 8) * 8)
 
 
-def moe_dispatch(gates, k: int, capacity: int):
+def moe_dispatch(gates, k: int, capacity: int, active=None):
     """gates (T, E) router probs -> dispatch metadata.
 
     Returns (expert_idx (T,k), combine_w (T,k), slot (T,k), keep (T,k))
     where slot indexes a flat (E*C) buffer.
+
+    active (T,) bool, optional: rows excluded from dispatch entirely —
+    they never occupy a capacity slot, so a dead row (a freed KV-arena
+    lane decoding garbage) can neither evict a live token past capacity
+    nor shift any live token's slot. Inactive entries route to a
+    sentinel expert bucket E that sorts after every real expert, which
+    keeps capacity ranking for the live tokens *identical* to a
+    dispatch over the live tokens alone.
     """
     T, E = gates.shape
     topv, tope = jax.lax.top_k(gates, k)                    # (T, k)
     topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
     flat_e = tope.reshape(-1)                               # (T*k,)
+    if active is not None:
+        flat_e = jnp.where(jnp.repeat(active, k), flat_e, E)
     order = jnp.argsort(flat_e, stable=True)
     ranks = jnp.zeros((T * k,), jnp.int32).at[order].set(
         jnp.arange(T * k, dtype=jnp.int32))
-    counts = jnp.zeros((E,), jnp.int32).at[flat_e].add(1)
+    counts = jnp.zeros((E + 1,), jnp.int32).at[flat_e].add(1)
     offsets = jnp.cumsum(counts) - counts                   # exclusive
     pos_in_e = ranks - offsets[flat_e]                      # (T*k,)
-    keep = pos_in_e < capacity
+    keep = (pos_in_e < capacity) & (flat_e < E)
     slot = jnp.where(keep, flat_e * capacity + pos_in_e, 0)
     return (tope, topv, slot.reshape(T, k), keep.reshape(T, k))
 
 
-def _dispatch_group(xt, router, cfg, C):
-    """One dispatch group: xt (T, D) -> (buf (E,C,D), combine metadata).
-    Vmapped over data-local groups by apply_moe_ffn."""
+def _dispatch_group(xt, router, cfg, C, active=None):
+    """One dispatch group: xt (T, D) -> (buf (E,C,D), combine metadata,
+    aux loss, per-expert kept counts). Vmapped over data-local groups
+    by apply_moe_ffn."""
     T, D = xt.shape
     E, k = cfg.num_experts, cfg.experts_per_token
     gates = jax.nn.softmax(
         jnp.einsum("td,de->te", xt.astype(jnp.float32),
                    router.astype(jnp.float32)), axis=-1)
-    tope, topv, slot, keep = moe_dispatch(gates, k, C)
+    tope, topv, slot, keep = moe_dispatch(gates, k, C, active)
     xk = jnp.broadcast_to(xt[:, None], (T, k, D)).reshape(T * k, D)
     wgt = jnp.where(keep.reshape(-1), 1.0, 0.0).astype(xt.dtype)
     buf = jnp.zeros((E * C, D), xt.dtype)
@@ -107,7 +129,16 @@ def _dispatch_group(xt, router, cfg, C):
     me = gates.mean(axis=0)
     ce = jnp.zeros((E,), jnp.float32).at[tope.reshape(-1)].add(1.0 / (T * k))
     aux = E * jnp.sum(me * ce)
-    return buf.reshape(E, C, D), (slot, keep, topv), aux
+    counts = _expert_counts(tope, keep, E)
+    return buf.reshape(E, C, D), (slot, keep, topv), aux, counts
+
+
+def _expert_counts(tope, keep, E: int):
+    """Kept dispatch entries per expert, (E,) int32 — the MoE
+    activation trace the storage plane consumes (experts == clusters:
+    an expert with count > 0 was activated this step)."""
+    flat = jnp.where(keep.reshape(-1), tope.reshape(-1), E)
+    return jnp.zeros((E + 1,), jnp.int32).at[flat].add(1)[:E]
 
 
 def _combine_group(yb, slot, keep, topv):
@@ -118,9 +149,107 @@ def _combine_group(yb, slot, keep, topv):
     return yk.sum(axis=1)
 
 
+def _use_ep_shard_map(cfg: ModelConfig, G: int) -> bool:
+    """Shard-local expert parallelism applies when the mesh 'model'
+    axis evenly splits the experts, sharding mode is 'ep', and the
+    token block is a single replica-local group (the serving decode
+    shape — grouped training dispatch keeps the pjit formulation)."""
+    from repro.sharding import current_mesh
+    m = current_mesh()
+    if m is None or "model" not in m.axis_names or G != 1:
+        return False
+    if cfg.moe_shard_mode != "ep":
+        return False
+    n = dict(m.shape).get("model", 1)
+    return n > 1 and cfg.num_experts % n == 0
+
+
+def _moe_ep_shard_map(params, xt, cfg: ModelConfig, C: int, active_mask):
+    """Shard-local expert-parallel dispatch (DESIGN.md §8), mirroring
+    the cold-group scheme of core/sparse_ffn._cold_path_shard_map: the
+    mesh 'model' axis (size n) owns E/n whole experts per shard.
+
+    Routing is computed *replicated* (the router weights replicate, so
+    gates/top-k/capacity ranking are exactly the single-device math on
+    every shard); dispatch and combine are strictly shard-local — each
+    shard scatters only the (token, expert) entries whose expert it
+    owns into its (E/n, C, D) buffer, runs its expert GEMMs, and
+    combines a partial (T, D) output. One fp32 psum per layer crosses
+    shards, so expert selection — and decoded tokens — are identical
+    at every mesh size. Returns ((T, D) output, (E,) kept counts).
+    """
+    from jax.sharding import PartitionSpec as PS
+    from repro.compat import shard_map
+    from repro.sharding import current_mesh
+
+    mesh = current_mesh()
+    n = dict(mesh.shape)["model"]
+    E, k = cfg.num_experts, cfg.experts_per_token
+    e_loc = E // n
+    w = params["experts"]                                   # (E, f, R, D)
+    R = w.shape[2]
+    from repro.models.modules import activation_fn
+    act = activation_fn(cfg.activation)
+
+    def local(xl, wl, rl, ml):
+        # xl (T, D) replicated; wl (e_loc, f, R, D) this shard's
+        # experts; rl (D, E) replicated router; ml (T,) live-row mask.
+        T, D = xl.shape
+        gates = jax.nn.softmax(
+            jnp.einsum("td,de->te", xl.astype(jnp.float32),
+                       rl.astype(jnp.float32)), axis=-1)
+        tope, topv, slot, keep = moe_dispatch(gates, k, C, ml)
+        e0 = jax.lax.axis_index("model") * e_loc
+        flat_e = tope.reshape(-1)
+        sel = keep.reshape(-1) & (flat_e >= e0) & (flat_e < e0 + e_loc)
+        lslot = jnp.where(sel, slot.reshape(-1) - e0 * C, 0)
+        xk = jnp.broadcast_to(xl[:, None], (T, k, D)).reshape(T * k, D)
+        wgt = jnp.where(sel, 1.0, 0.0).astype(xl.dtype)
+        buf = jnp.zeros((e_loc * C, D), xl.dtype)
+        buf = buf.at[lslot].add(xk * wgt[:, None]).reshape(e_loc, C, D)
+        g = jnp.einsum("ecd,efd->ecf", buf, wl[:, :, 0])
+        if R == 3:
+            u = jnp.einsum("ecd,efd->ecf", buf, wl[:, :, 1])
+            h = act(g) * u
+        else:
+            h = act(g)
+        yb = jnp.einsum("ecf,efd->ecd", h, wl[:, :, -1])
+        yk = jnp.take(yb.reshape(e_loc * C, D), lslot, axis=0)
+        yk = yk.reshape(T, k, D) \
+            * (topv * sel.reshape(T, k)).astype(yk.dtype)[..., None]
+        # psum in f32 (same rationale as _cold_path_shard_map); the
+        # kept counts and aux loss are replicated global math — no
+        # collective beyond the one output reduction.
+        y = jax.lax.psum(yk.sum(axis=1).astype(jnp.float32), "model")
+        me = gates.mean(axis=0)
+        ce = jnp.zeros((E,), jnp.float32).at[tope.reshape(-1)].add(
+            1.0 / (T * k))
+        aux = E * jnp.sum(me * ce)
+        return y, _expert_counts(tope, keep, E), aux
+
+    if active_mask is None:
+        active_mask = jnp.ones((xt.shape[0],), bool)
+    fn = shard_map(
+        local, mesh=mesh,
+        in_specs=(PS(None, None), PS("model", None, None, None),
+                  PS(None, None), PS(None)),
+        out_specs=(PS(None, None), PS(None), PS()),
+        axis_names={"model"}, check_vma=False)
+    y, counts, aux = fn(xt, w, params["router"], active_mask)
+    return y.astype(xt.dtype), counts, aux
+
+
 def apply_moe_ffn(params, x, cfg: ModelConfig,
-                  plan: Optional[HybridPlan] = None):
-    """x (..., D) -> ((..., D), aux). Train (T=B*S) and decode (T=B).
+                  plan: Optional[HybridPlan] = None,
+                  active_mask=None, collect_trace: bool = False):
+    """x (..., D) -> ((..., D), aux[, trace]). Train (T=B*S) and
+    decode (T=B).
+
+    active_mask (T,) bool: rows excluded from dispatch (the serving
+    engine's freed KV-arena lanes) — they must neither consume expert
+    capacity nor appear in the activation trace. collect_trace=True
+    additionally returns the per-expert kept-entry counts (E,) int32
+    consumed by the serving storage plane.
 
     Hierarchical dispatch (§Perf iteration, EXPERIMENTS.md): tokens are
     routed within `moe_dispatch_groups` data-local groups (group dim
@@ -142,9 +271,19 @@ def apply_moe_ffn(params, x, cfg: ModelConfig,
     C = _capacity(Tg, k, E, cfg.moe_capacity_factor)
     w = params["experts"]                                   # (E, f, R, D)
 
+    if _use_ep_shard_map(cfg, G):
+        y, trace, aux = _moe_ep_shard_map(params, xt, cfg, C, active_mask)
+        if "shared" in params:                              # hot clusters
+            y = y + ffn_dense(params["shared"], xt, cfg.activation)
+        y = y.reshape(shape)
+        return (y, aux, trace) if collect_trace else (y, aux)
+
     xg = constrain(xt.reshape(G, Tg, D), P(BATCH, None, None))
-    buf, meta, auxg = jax.vmap(
-        lambda xx: _dispatch_group(xx, params["router"], cfg, C))(xg)
+    mask = jnp.ones((T,), bool) if active_mask is None \
+        else active_mask.reshape(-1)
+    buf, meta, auxg, cnts = jax.vmap(
+        lambda xx, mm: _dispatch_group(xx, params["router"], cfg, C, mm)
+    )(xg, mask.reshape(G, Tg))
 
     # explicit all-to-all: the dispatch buffer reshards from
     # batch-sharded groups to expert-sharded slots — tokens move to the
@@ -178,7 +317,10 @@ def apply_moe_ffn(params, x, cfg: ModelConfig,
 
     if "shared" in params:                                  # hot clusters
         y = y + ffn_dense(params["shared"], xt, cfg.activation)
-    return y.reshape(shape), aux
+    y = y.reshape(shape)
+    if collect_trace:
+        return y, aux, cnts.sum(axis=0)                     # (E,) counts
+    return y, aux
 
 
 # ------------------------------------------------------------- model ----
@@ -277,7 +419,30 @@ def make_model(cfg: ModelConfig) -> dense.Model:
                  "length": jnp.full((B,), S, jnp.int32)}
         return dense.lm_logits(params, cfg, x[:, -1:]), cache
 
-    def decode_step(params, tokens, cache, plan=None):
+    return dense.Model(
+        cfg=cfg,
+        init=lambda key: init_params(key, cfg),
+        param_spec=lambda: params_spec(cfg),
+        forward=forward,
+        prefill=prefill,
+        decode_step=make_decode_step(cfg),
+        init_cache=init_cache,
+        cache_spec=cache_spec,
+    )
+
+
+def make_decode_step(cfg: ModelConfig, collect_indices: bool = False):
+    """Serving decode step with the uniform family signature
+    (params, tokens, cache, plan, active_mask) -> (logits, cache[,
+    trace]). The hybrid plan is accepted but unused by the MoE data
+    plane — the router plays the predictor's role (DESIGN.md §8) —
+    and collect_indices=True returns the per-layer kept-dispatch
+    counts (L, E): the expert activation trace the storage plane
+    prices exactly like dense cold-cluster selections."""
+    dh_half = cfg.d_head // 2
+    W = cfg.sliding_window
+
+    def decode_step(params, tokens, cache, plan=None, active_mask=None):
         pos = cache["length"]
         x = dense.embed_tokens(params, cfg, tokens)
         angles = rope_angles(pos[:, None], dh_half, cfg.rope_theta)
@@ -289,22 +454,27 @@ def make_model(cfg: ModelConfig) -> dense.Model:
                 lp["attn"], rms_norm(h, lp["ln1"], cfg.norm_eps), cfg,
                 angles, kc, vc, kv_pos, pos, window=W)
             h = h + a
-            f, _ = apply_moe_ffn(lp["moe"],
-                                 rms_norm(h, lp["ln2"], cfg.norm_eps), cfg)
+            out = apply_moe_ffn(lp["moe"],
+                                rms_norm(h, lp["ln2"], cfg.norm_eps), cfg,
+                                active_mask=active_mask,
+                                collect_trace=collect_indices)
+            if collect_indices:
+                f, _, tr = out
+                h = h + f
+                return h, (kc, vc, tr)
+            f, _ = out
             return h + f, (kc, vc)
 
-        x, (k, v) = blocks.scan_over(body, x, (params["layers"],
-                                               cache["k"], cache["v"]))
+        x, ys = blocks.scan_over(body, x, (params["layers"],
+                                           cache["k"], cache["v"]))
+        if collect_indices:
+            k, v, trace = ys
+        else:
+            k, v = ys
         new_cache = dict(cache, k=k, v=v, kv_pos=kv_pos, length=pos + 1)
-        return dense.lm_logits(params, cfg, x), new_cache
+        logits = dense.lm_logits(params, cfg, x)
+        if collect_indices:
+            return logits, new_cache, trace
+        return logits, new_cache
 
-    return dense.Model(
-        cfg=cfg,
-        init=lambda key: init_params(key, cfg),
-        param_spec=lambda: params_spec(cfg),
-        forward=forward,
-        prefill=prefill,
-        decode_step=decode_step,
-        init_cache=init_cache,
-        cache_spec=cache_spec,
-    )
+    return decode_step

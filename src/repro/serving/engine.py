@@ -39,6 +39,14 @@ submesh. Submits route least-loaded with a FIFO tiebreak
 decoder bucket boundary and advances its own clock; run_until_drained
 merges the per-replica TokenStats onto the shared timeline and
 reports span-based throughput.
+
+Families (DESIGN.md §8): every family-specific piece — model factory,
+traced decode step, plan builder, storage view — resolves through the
+serving family registry (serving/families.py) keyed on `cfg.family`,
+so dense, vlm and moe share this one orchestrator. For moe, the mesh
+'model' axis is the *expert-parallel* axis (E/n experts per shard,
+shard-local dispatch, one psum per layer) and the storage plane
+prices expert residency as cold-cluster residency.
 """
 from __future__ import annotations
 
@@ -56,9 +64,9 @@ from repro.core.adaptation import BucketedDecoder, bucket_for
 from repro.core.baselines import SystemSpec, POWERINFER2
 from repro.core.io_model import StorageModel, UFS40
 from repro.core.planner import ExecutionPlan, HardwareProfile
-from repro.models import dense
 from repro.models.kv_cache import KVSlotArena
 from repro.models.modules import dtype_of
+from repro.serving.families import serving_family
 from repro.serving.sampler import sample_tokens
 from repro.serving.scheduler import BatchScheduler
 from repro.serving.storage_plane import StoragePlane, TimingProfile, \
@@ -154,8 +162,9 @@ class ServeReport:
 
 
 class ServeEngine:
-    """Single-host continuous-batching engine for dense sparse-FFN
-    models. Orchestrates the data plane (BucketedDecoder), the storage
+    """Single-host continuous-batching engine for every registered
+    serving family (dense sparse-FFN, vlm backbone, expert-parallel
+    moe). Orchestrates the data plane (BucketedDecoder), the storage
     plane (StoragePlane) and the scheduler (BatchScheduler) over a
     slot-based KV arena.
 
@@ -178,7 +187,9 @@ class ServeEngine:
                  prefetch: bool = True,
                  mesh=None,
                  dp: int = None):
-        assert cfg.family in ("dense", "vlm"), "engine demo targets dense family"
+        # family registry lookup (DESIGN.md §8): raises with the
+        # servable set named when cfg.family has no entry
+        self.family = serving_family(cfg)
         self.cfg = cfg
         self.plan = plan
         self.spec = spec
@@ -237,11 +248,20 @@ class ServeEngine:
             return
 
         # ---- data plane ----
-        self.model = dense.make_model(cfg)
+        if cfg.num_experts:
+            # retie MoE dispatch groups to this replica's token block:
+            # groups follow the engine's own submesh (its 'data' axis
+            # is always 1 here — replica routing handled above), not
+            # the launcher-global 'data' axis, so dp x tp x ep composes
+            # (each replica dispatches over exactly its local tokens)
+            from repro.launch.mesh import dispatch_groups
+            cfg = cfg.replace(moe_dispatch_groups=dispatch_groups(mesh))
+            self.cfg = cfg
+        self.model = self.family.make_model(cfg)
         if mesh is not None:
             params = self._shard_params(params)
         self.params = params
-        self._step_traced = dense.make_decode_step(cfg, collect_indices=True)
+        self._step_traced = self.family.make_decode_step(cfg)
         self.decoder = BucketedDecoder(
             plan_source=plan,
             make_step=lambda p: (lambda pr, t, c, m: self._step_traced(

@@ -1,0 +1,129 @@
+"""Serving family registry (DESIGN.md §8).
+
+`ServeEngine` used to hardcode `dense.make_model` behind a
+`family in ("dense", "vlm")` assert; every family the engine can serve
+is now one `ServingFamily` entry keyed on `cfg.family`, bundling the
+four family-specific pieces of the stack:
+
+* `make_model(cfg)` — the data-plane model (prefill + Model API);
+* `make_decode_step(cfg)` — the traced decode executable with the
+  uniform serving signature
+  `(params, tokens, cache, plan, active_mask) -> (logits, cache,
+  trace)`: `active_mask` keeps freed KV-arena lanes from steering
+  selection, and `trace` is the per-layer activation trace the storage
+  plane prices (dense: (L, G, kc) cold-cluster ids; moe: (L, E)
+  kept-dispatch expert counts);
+* `build_plan(cfg, freqs=None, hw=None)` — the ExecutionPlan the
+  bucketed decoder and storage plane consume (dense: the offline
+  hot-first planner; moe: experts-as-clusters, `build_moe_plan`);
+* `prepare_params(params, plan)` — the offline weight transform
+  (dense: hot-first neuron permutation; moe: identity — the
+  architecture already makes clusters explicit).
+
+The storage plane keeps its own half of the registry
+(`storage_plane.make_storage_view`) so it stays importable without the
+engine. The `vlm` entry serves the LM backbone through the dense data
+plane — exactly what the engine did before the registry existed (the
+vision tower is a stub; serving prompts are token streams).
+
+New families register with `register_family` and automatically join
+the family-conformance battery (tests/test_family_conformance.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+__all__ = ["ServingFamily", "register_family", "serving_family",
+           "servable_families", "default_archs"]
+
+
+@dataclass(frozen=True)
+class ServingFamily:
+    """One servable model family's factory bundle."""
+    family: str
+    make_model: Callable           # (cfg) -> models.dense.Model
+    make_decode_step: Callable     # (cfg) -> traced serving decode fn
+    build_plan: Callable           # (cfg, freqs=None, hw=None) -> ExecutionPlan
+    prepare_params: Callable       # (params, plan) -> params
+    default_arch: str = ""         # the family's representative config
+
+
+_REGISTRY: dict = {}
+
+
+def register_family(fam: ServingFamily):
+    _REGISTRY[fam.family] = fam
+    return fam
+
+
+def servable_families() -> tuple:
+    return tuple(sorted(_REGISTRY))
+
+
+def default_archs() -> dict:
+    """family -> representative arch, straight from the registry (the
+    single source for launch/serve.py --family and the conformance
+    battery's coverage check)."""
+    return {f: e.default_arch for f, e in sorted(_REGISTRY.items())}
+
+
+def serving_family(cfg) -> ServingFamily:
+    """Registry lookup for a config's family; unknown families raise
+    with the servable set named (the old assert, made extensible)."""
+    if cfg.family not in _REGISTRY:
+        raise ValueError(
+            f"family {cfg.family!r} ({cfg.name}) is not servable; "
+            f"registered families: {servable_families()}")
+    return _REGISTRY[cfg.family]
+
+
+# ------------------------------------------------- built-in families ----
+
+def _dense_build_plan(cfg, freqs=None, hw=None):
+    from repro.core.planner import build_plan
+    return build_plan(cfg, freqs, hw=hw)
+
+
+def _dense_prepare(params, plan):
+    from repro.core.planner import permute_ffn_params
+    return permute_ffn_params(params, plan.neuron_order)
+
+
+def _dense_family(name: str, arch: str) -> ServingFamily:
+    from repro.models import dense
+    return ServingFamily(
+        family=name,
+        make_model=dense.make_model,
+        make_decode_step=lambda cfg: dense.make_decode_step(
+            cfg, collect_indices=True),
+        build_plan=_dense_build_plan,
+        prepare_params=_dense_prepare,
+        default_arch=arch,
+    )
+
+
+def _moe_build_plan(cfg, freqs=None, hw=None):
+    from repro.core.planner import build_moe_plan
+    return build_moe_plan(cfg, hw=hw)
+
+
+def _moe_family() -> ServingFamily:
+    from repro.models import moe
+    return ServingFamily(
+        family="moe",
+        make_model=moe.make_model,
+        make_decode_step=lambda cfg: moe.make_decode_step(
+            cfg, collect_indices=True),
+        build_plan=_moe_build_plan,
+        prepare_params=lambda params, plan: params,
+        default_arch="deepseek-moe-16b",
+    )
+
+
+register_family(_dense_family("dense", "smollm-135m"))
+# vlm serves its LM backbone through the dense data plane (the vision
+# tower is a stub; engine prompts are token streams) — the pre-registry
+# engine behavior, now stated instead of implied.
+register_family(_dense_family("vlm", "qwen2-vl-2b"))
+register_family(_moe_family())

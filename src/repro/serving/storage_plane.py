@@ -11,9 +11,19 @@ The plane's public surface is deliberately narrow:
 
     plane.step(trace, plan, batch, ctx) -> TokenStats
 
-where `trace` is the real per-layer cold-cluster selection (L, G, kc)
-produced by the data plane. The orchestrator (serving/engine.py) never
-touches cache/coldstore internals.
+where `trace` is the real per-layer activation trace produced by the
+data plane — (G, kc) selected cold-cluster ids for the dense families,
+(E,) kept-dispatch expert counts for MoE. The orchestrator
+(serving/engine.py) never touches cache/coldstore internals.
+
+Family genericity (DESIGN.md §8): everything family-specific — the
+flat neuron space, the bundled weight tensors, the trace -> neuron-id
+mapping, and per-device shard ownership — lives in a *storage view*
+(`FFNStorageView` for dense/vlm, `MoEStorageView` for moe, selected by
+`make_storage_view`). MoE experts are priced exactly like dense neuron
+clusters: shared experts form the pinned hot prefix, routed experts
+are cold clusters of d_ff neurons each — resident experts are
+"hot/NPU", evicted experts pay cold-store I/O.
 """
 from __future__ import annotations
 
@@ -29,6 +39,144 @@ from repro.core.io_model import StorageModel, UFS40
 from repro.core.pipeline import ClusterTask, PrefetchExecutor, \
     simulate_pipeline
 from repro.core.planner import HardwareProfile
+
+
+# ----------------------------------------------------- family views ----
+
+class FFNStorageView:
+    """Dense-family (dense / vlm backbone) neuron space: the bundled
+    (N, R, D) FFN tensor, N = cfg.d_ff, clusters of
+    sparse_ffn.cluster_size neurons after the hot-first permutation."""
+
+    def __init__(self, cfg):
+        from repro.core.sparse_ffn import ffn_rows
+        self.cfg = cfg
+        self.n_neurons = cfg.d_ff
+        self.cluster_size = cfg.sparse_ffn.cluster_size
+        self.rows = ffn_rows(cfg.activation)
+
+    def bundles(self, params):
+        return [np.asarray(params["layers"]["ffn"]["w"][l])
+                for l in range(self.cfg.num_layers)]
+
+    def deploy_neurons(self, timing) -> float:
+        """Deployment-size flat neuron count per layer (streamed once
+        during prefill; the dense-everything compute unit)."""
+        return timing.d_ff
+
+    def deploy_prefill_neurons(self, timing) -> float:
+        """Per-token FFN compute neurons during prefill."""
+        return timing.d_ff
+
+    def trace_cold_ids(self, trace_l, n_hot: int):
+        """Map one layer's (G, kc) group-relative cluster trace to
+        global cold neuron ids (hot-first permuted space). `n_hot` is
+        the *stepped* plan's hot prefix — the trace's cluster ids are
+        relative to it, not to the batch-1 plan's."""
+        cs, N = self.cluster_size, self.n_neurons
+        tr = np.asarray(trace_l)
+        if tr.ndim < 2:
+            tr = tr.reshape(1, -1)
+        G = tr.shape[0]
+        nc_g = max((N - n_hot) // cs // G, 1)
+        glob = tr.reshape(G, -1) + np.arange(G)[:, None] * nc_g
+        ids = np.unique(glob.reshape(-1))
+        cold = (n_hot
+                + (ids[:, None] * cs + np.arange(cs)[None]).reshape(-1))
+        return cold[cold < N]
+
+    def owner_of(self, ids, plan: HybridPlan, n_shards: int):
+        """Owning device shard per neuron id, following the plan's
+        compute sharding: the cold region splits by *group* (each
+        device owns G/n whole groups — `_cold_path_shard_map`'s
+        layout) and the hot prefix splits uniformly. Without a plan
+        (or when groups don't divide), cluster-strided round-robin."""
+        ids = np.asarray(ids)
+        n, cs, N = n_shards, self.cluster_size, self.n_neurons
+        owner = (ids // cs) % n
+        if plan is not None and plan.groups >= n and plan.groups % n == 0:
+            G = plan.groups
+            width = max((N - plan.n_hot) // G, 1)
+            g_loc = G // n
+            owner = np.where(
+                ids >= plan.n_hot,
+                np.minimum((ids - plan.n_hot) // width, G - 1) // g_loc,
+                (ids * n) // max(plan.n_hot, 1))
+        return owner
+
+
+class MoEStorageView:
+    """Experts-as-clusters (DESIGN.md §8): the flat neuron space is
+    [shared experts | routed experts], one cluster per routed expert
+    (cluster_size = d_ff). The trace is the per-layer kept-dispatch
+    counts (E,): an expert with count > 0 was activated and its d_ff
+    neuron bundles are the fetch unit — resident experts are hot,
+    evicted experts pay cold-store I/O. Shard ownership is
+    expert-parallel: device s owns the contiguous E/n routed experts
+    the mesh 'model' axis assigns it (the `_moe_ep_shard_map` layout)
+    plus a uniform share of the pinned shared-expert prefix."""
+
+    def __init__(self, cfg):
+        from repro.core.sparse_ffn import ffn_rows
+        self.cfg = cfg
+        self.f = cfg.d_ff
+        self.E = cfg.num_experts
+        self.n_shared = cfg.num_shared_experts
+        self.n_neurons = cfg.moe_flat_neurons
+        self.cluster_size = cfg.d_ff
+        self.rows = ffn_rows(cfg.activation)
+
+    def bundles(self, params):
+        moe = params["layers"]["moe"]
+        ex = np.asarray(moe["experts"])             # (L, E, f, R, D)
+        L, E, f, R, D = ex.shape
+        flat = ex.reshape(L, E * f, R, D)
+        if "shared" in moe:
+            sh = np.asarray(moe["shared"]["w"])     # (L, n_sh*f, R, D)
+            flat = np.concatenate([sh, flat], axis=1)
+        return [flat[l] for l in range(L)]
+
+    def deploy_neurons(self, timing) -> float:
+        # timing.d_ff is the deployment per-expert width; the expert
+        # count is the data plane's (only widths rescale, like layers)
+        return timing.d_ff * (self.n_shared + self.E)
+
+    def deploy_prefill_neurons(self, timing) -> float:
+        # per-token prefill compute: shared + routed top-k experts
+        return timing.d_ff * (self.n_shared + self.cfg.experts_per_token)
+
+    def trace_cold_ids(self, trace_l, n_hot: int):
+        counts = np.asarray(trace_l).reshape(-1)[:self.E]
+        act = np.nonzero(counts > 0)[0]
+        ids = (n_hot + act[:, None] * self.f
+               + np.arange(self.f)[None]).reshape(-1)
+        return ids[ids < self.n_neurons]
+
+    def owner_of(self, ids, plan: HybridPlan, n_shards: int):
+        ids = np.asarray(ids)
+        n = n_shards
+        n_hot = plan.n_hot if plan is not None else self.n_shared * self.f
+        if self.E % n != 0:
+            return (ids // self.cluster_size) % n
+        e_loc = self.E // n
+        return np.where(
+            ids >= n_hot,
+            np.minimum((ids - n_hot) // (self.f * e_loc), n - 1),
+            (ids * n) // max(n_hot, 1))
+
+
+_VIEW_FAMILIES = {"dense": FFNStorageView, "vlm": FFNStorageView,
+                  "moe": MoEStorageView}
+
+
+def make_storage_view(cfg):
+    """Family-keyed storage view (the plane half of the serving
+    family registry — serving/families.py holds the data-plane half)."""
+    if cfg.family not in _VIEW_FAMILIES:
+        raise ValueError(
+            f"no storage view for family {cfg.family!r}; "
+            f"storable families: {sorted(_VIEW_FAMILIES)}")
+    return _VIEW_FAMILIES[cfg.family](cfg)
 
 
 @dataclass(frozen=True)
@@ -97,7 +245,7 @@ class StoragePlane:
                  = UFS40, offload_ratio: float = 0.5,
                  hw: HardwareProfile = None, timing: TimingProfile = None,
                  n_compute_workers: int = 4, prefetch: bool = True,
-                 n_shards: int = 1):
+                 n_shards: int = 1, view=None):
         self.cfg = cfg
         self.spec = spec
         self.hw = hw or plan.hardware
@@ -109,19 +257,19 @@ class StoragePlane:
         # NeuronCache slice and its own storage channel.
         self.n_shards = max(int(n_shards), 1)
 
-        sc = cfg.sparse_ffn
-        self.cs = sc.cluster_size
-        N = cfg.d_ff
+        # family view: flat neuron space, bundles, trace mapping,
+        # shard ownership (FFNStorageView / MoEStorageView)
+        self.view = view or make_storage_view(cfg)
+        self.cs = self.view.cluster_size
+        N = self.view.n_neurons
         self.N = N
-        from repro.core.sparse_ffn import ffn_rows
         self.timing = timing or TimingProfile.from_config(
-            cfg, ffn_rows(cfg.activation))
+            cfg, self.view.rows)
         # scale factors: storage-plane costs priced at deployment size
         # while traces come from the (possibly reduced) data-plane model
-        self.neuron_scale = self.timing.d_ff / N
+        self.neuron_scale = self.view.deploy_neurons(self.timing) / N
         self.layer_scale = self.timing.num_layers / cfg.num_layers
-        bundles = [np.asarray(params["layers"]["ffn"]["w"][l])
-                   for l in range(cfg.num_layers)]
+        bundles = self.view.bundles(params)
         self.coldstore = ColdStore(bundles, storage=storage,
                                    two_phase=spec.two_phase,
                                    block_size=24576 if spec.use_bundling
@@ -189,29 +337,20 @@ class StoragePlane:
 
     def _split_by_owner(self, neuron_ids, plan: HybridPlan = None):
         """Partition global neuron ids by owning device shard,
-        following the compute sharding of the given plan: the plan's
-        cold region splits by *group* (each device owns G/n whole
-        groups — `_cold_path_shard_map`'s layout, so per-step cold
-        traffic is balanced by construction: every device selects
-        exactly kc*G/n clusters) and the plan's hot prefix splits
-        uniformly. Bucket switches move the hot/cold boundary, so a
-        neuron near it can migrate shards and miss once in its new
-        cache — the modeled cost of the resharding collective the mesh
-        pays on an executable swap. Without a plan (or when groups
-        don't divide), fall back to cluster-strided round-robin."""
+        following the compute sharding the family view declares —
+        dense: the plan's G/n cold groups per device + uniform hot
+        split (`_cold_path_shard_map`'s layout, so per-step cold
+        traffic is balanced by construction); moe: E/n contiguous
+        routed experts per device (`_moe_ep_shard_map`'s layout).
+        Bucket switches move the hot/cold boundary, so a neuron near
+        it can migrate shards and miss once in its new cache — the
+        modeled cost of the resharding collective the mesh pays on an
+        executable swap."""
         ids = np.asarray(neuron_ids)
         n = self.n_shards
         if n == 1:
             return [ids]
-        owner = (ids // self.cs) % n
-        if plan is not None and plan.groups >= n and plan.groups % n == 0:
-            G = plan.groups
-            width = max((self.N - plan.n_hot) // G, 1)
-            g_loc = G // n
-            owner = np.where(
-                ids >= plan.n_hot,
-                np.minimum((ids - plan.n_hot) // width, G - 1) // g_loc,
-                (ids * n) // max(plan.n_hot, 1))
+        owner = self.view.owner_of(ids, plan, n)
         return [ids[owner == s] for s in range(n)]
 
     # ---------------------------------------------------- timing model ----
@@ -251,9 +390,10 @@ class StoragePlane:
         elif self.spec.use_predictor:
             t_ffn = (hot_f + cold_f) / self.hw.sparse_engine_flops * L * batch
         else:
-            # dense everything (llama.cpp): all N neurons on sparse engine
-            t_ffn = (self.timing.d_ff * shard_frac * 2 * self.timing.rows
-                     * self.timing.d_model) \
+            # dense everything (llama.cpp): every flat neuron (all
+            # experts, for moe) on the sparse engine
+            t_ffn = (self.view.deploy_neurons(self.timing) * shard_frac
+                     * 2 * self.timing.rows * self.timing.d_model) \
                 / self.hw.sparse_engine_flops * L * batch
         return t_ffn + attn / self.hw.dense_engine_flops
 
@@ -261,12 +401,15 @@ class StoragePlane:
         """Modeled prefill seconds (§4.1.1: NPU-centric dense prefill;
         every non-resident layer slice streams once at sequential
         bandwidth, overlapped with dense compute). Each device streams
-        and computes only its neuron slice."""
+        and computes only its neuron slice (for moe: its expert slice
+        streams, but per-token compute touches only shared + top-k)."""
         t = self.timing
-        n_off = int(t.d_ff * self.offload_ratio) // self.n_shards
+        flat = self.view.deploy_neurons(t)
+        n_off = int(flat * self.offload_ratio) // self.n_shards
         io = self.coldstore.storage.read_time(
             n_off * t.bundle_bytes * t.num_layers, 524288, random=False)
-        ffn = t.d_ff * 2 * t.rows * t.d_model / self.n_shards
+        ffn = self.view.deploy_prefill_neurons(t) * 2 * t.rows * t.d_model \
+            / self.n_shards
         attn = self._attn_flops_token(prompt_len / 2.0) * self._attn_frac()
         comp = (ffn + attn) * t.num_layers * prompt_len * batch \
             / self.hw.dense_engine_flops
@@ -303,21 +446,11 @@ class StoragePlane:
         return [self._fetch_shard(l, m) for m in misses_per_shard]
 
     def _trace_neuron_ids(self, trace_l, n_hot: int):
-        """Map one layer's (G, kc) group-relative cluster trace to
-        global cold neuron ids (hot-first permuted space). `n_hot` is
-        the *stepped* plan's hot prefix — the trace's cluster ids are
-        relative to it, not to the batch-1 plan's."""
-        cs = self.cs
-        tr = np.asarray(trace_l)
-        if tr.ndim < 2:
-            tr = tr.reshape(1, -1)
-        G = tr.shape[0]
-        nc_g = max((self.N - n_hot) // cs // G, 1)
-        glob = tr.reshape(G, -1) + np.arange(G)[:, None] * nc_g
-        ids = np.unique(glob.reshape(-1))
-        cold = (n_hot
-                + (ids[:, None] * cs + np.arange(cs)[None]).reshape(-1))
-        return cold[cold < self.N]
+        """Map one layer's activation trace to global cold neuron ids
+        — the family view interprets its own trace shape (dense:
+        (G, kc) group-relative cluster ids; moe: (E,) kept-dispatch
+        counts). `n_hot` is the *stepped* plan's hot prefix."""
+        return self.view.trace_cold_ids(trace_l, n_hot)
 
     def step(self, trace, plan: HybridPlan, batch: int,
              ctx_len: float) -> TokenStats:

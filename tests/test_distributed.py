@@ -204,6 +204,76 @@ def test_tensor_parallel_decode_token_identical_4dev():
     assert "OK tp golden" in out
 
 
+def test_expert_parallel_moe_decode_token_identical_4dev():
+    """The EP tentpole golden: a MoE engine over a forced-host-device
+    mesh — experts sharded E/n per 'model' shard, dispatch/combine
+    shard-local with one psum per layer (_moe_ep_shard_map) — decodes
+    token-for-token what the single-device engine decodes, at ep=2 and
+    composed dp=2 x ep=2; the storage plane reports per-shard expert
+    slices whose raw I/O demand never exceeds the single-device
+    plane's."""
+    out = run_in_subprocess("""
+        from repro.configs import get_config
+        from repro.core.planner import build_moe_plan
+        from repro.data.pipeline import DataConfig, SyntheticTokens
+        from repro.models.model import build_model
+        from repro.optim.adamw import AdamW
+        from repro.train.steps import make_train_step
+        from repro.launch.mesh import make_serving_mesh
+        from repro.serving.engine import ServeEngine
+
+        cfg = get_config("deepseek-moe-16b").reduced()
+        model = build_model(cfg)
+        params = model.init(jax.random.key(0))
+        # brief training: real logit margins so greedy decode is
+        # robust to the mesh's fp reassociation noise (~1e-5)
+        opt = AdamW(lr=2e-3)
+        step = jax.jit(make_train_step(model, opt), donate_argnums=(0, 1))
+        state = opt.init(params)
+        data = SyntheticTokens(DataConfig(cfg.vocab_size, 64, 4, seed=0))
+        for _ in range(20):
+            params, state, _ = step(params, state, data.batch())
+        plan = build_moe_plan(cfg)
+
+        def run(mesh):
+            eng = ServeEngine(cfg, params, plan, buckets=(1, 2),
+                              ctx_budget=48, temperature=0.0, seed=0,
+                              mesh=mesh)
+            rng = np.random.default_rng(0)
+            for i in range(3):
+                eng.submit(rng.integers(0, cfg.vocab_size, 16), max_new=6,
+                           arrival_time=i * 1e-3)
+            rep = eng.run_until_drained()
+            toks = {u: list(r.generated)
+                    for u, r in eng.sched.sequences.items()}
+            eng.close()
+            return rep, toks
+
+        rep1, toks1 = run(None)
+        rep2, toks2 = run(make_serving_mesh(2))
+        assert toks1 == toks2, (toks1, toks2)
+        assert all(len(t) == 6 for t in toks1.values())
+        s1, s2 = rep1.stats[0], rep2.stats[0]
+        assert s1.n_shards == 1 and s1.shards is None
+        assert s2.n_shards == 2 and len(s2.shards) == 2
+        # per-shard raw I/O demand (the shard's expert slice) shrinks
+        assert s2.io_s <= s1.io_s + 1e-12
+        assert abs(s2.io_total_s
+                   - sum(sh.io_s for sh in s2.shards)) < 1e-12
+
+        # dp=2 x ep=2 over a (2, 2) mesh: replica routing composes
+        # with expert parallelism without changing a single token
+        # (per-request greedy decode is batch-composition-free)
+        repg, toksg = run(make_serving_mesh(2, 2))
+        assert toksg == toks1, (toksg, toks1)
+        assert all(s.n_shards == 2 and len(s.shards) == 2
+                   for s in repg.stats)
+        assert {s.replica for s in repg.stats} == {0, 1}
+        print("OK ep golden", len(rep2.stats))
+    """, ndev=4, timeout=600)
+    assert "OK ep golden" in out
+
+
 def test_data_parallel_replica_routing_token_identical_4dev():
     """The dp tentpole golden: over a (2, 1) mesh the engine routes
     the seeded arrival trace across two replicas and decodes

@@ -1,0 +1,167 @@
+"""Family-conformance harness (DESIGN.md §8): every servable family —
+dense, vlm, moe — runs through ONE shared battery of serving-contract
+tests, parametrized over the registry. A future family plugs into the
+grid by registering a `ServingFamily` and adding its arch below,
+instead of re-deriving engine tests.
+
+The battery:
+  * submit/cancel/drain lifecycle (queued cancels finish tokenless,
+    TTFT never sees them);
+  * golden token-identity of the static-batch `generate()` compat
+    wrapper vs the streaming submit/run_until_drained path;
+  * empty-report stats (whole stream cancelled before any step);
+  * KV-arena exhaustion guards (oversized requests rejected, slot
+    accounting conserved).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.baselines import POWERINFER2
+from repro.serving.engine import ServeEngine
+from repro.serving.families import default_archs, servable_families, \
+    serving_family
+
+# one representative arch per registered family — extend this map when
+# registering a new family and the whole battery applies to it
+FAMILY_ARCHS = {
+    "dense": "smollm-135m",
+    "vlm": "qwen2-vl-2b",
+    "moe": "deepseek-moe-16b",
+}
+
+
+def test_every_registered_family_is_in_the_battery():
+    """The harness must cover exactly the registry: a family
+    registered without a conformance arch (or a default_arch that
+    drifted from the battery's) fails here, keeping the grid, the
+    registry and launch/serve.py --family in lock-step."""
+    assert set(FAMILY_ARCHS) == set(servable_families())
+    assert FAMILY_ARCHS == default_archs()
+
+
+def test_unregistered_family_raises_with_servable_set():
+    cfg = get_config("mamba2-130m")            # ssm: not servable
+    with pytest.raises(ValueError, match="ssm.*not servable"):
+        serving_family(cfg)
+    with pytest.raises(ValueError, match="moe"):
+        serving_family(cfg)                    # names the servable set
+
+
+@pytest.fixture(scope="module", params=sorted(FAMILY_ARCHS))
+def family_setup(request):
+    """(family, cfg, params, plan, prompt) for one servable family,
+    built through the registry exactly as launch/serve.py builds it."""
+    family = request.param
+    cfg = get_config(FAMILY_ARCHS[family]).reduced()
+    assert cfg.family == family
+    fam = serving_family(cfg)
+    model = fam.make_model(cfg)
+    params = model.init(jax.random.key(0))
+    plan = fam.build_plan(cfg)
+    params = fam.prepare_params(params, plan)
+    prompt = np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (2, 12)).astype(np.int32)
+    return family, cfg, params, plan, prompt
+
+
+def _engine(setup, **kw):
+    _, cfg, params, plan, _ = setup
+    kw.setdefault("buckets", (1, 2, 4))
+    kw.setdefault("ctx_budget", 32)
+    kw.setdefault("temperature", 0.8)
+    return ServeEngine(cfg, params, plan, spec=POWERINFER2,
+                       offload_ratio=0.5, seed=0, **kw)
+
+
+# ------------------------------------------------- shared battery ----
+
+def test_submit_cancel_drain(family_setup):
+    family, cfg, _, _, prompt = family_setup
+    eng = _engine(family_setup)
+    try:
+        uids = [eng.submit(prompt[i % 2], max_new=3) for i in range(3)]
+        eng.cancel([uids[2]])                  # still queued: tokenless
+        rep = eng.run_until_drained()
+        assert not eng.sched.has_work
+        seqs = eng.sched.sequences
+        assert all(seqs[u].finished for u in uids)
+        assert seqs[uids[2]].generated == []
+        assert seqs[uids[2]].first_token_time is None
+        assert all(len(seqs[u].generated) == 3 for u in uids[:2])
+        assert rep.ttft().size == 2            # cancelled filtered
+        assert rep.total_tokens == sum(s.batch for s in rep.stats) == 6
+        assert rep.span_s > 0 and rep.throughput_tok_s > 0
+        # every step produced a live trace the storage plane priced
+        assert all(s.effective_s > 0 for s in rep.stats)
+    finally:
+        eng.close()
+
+
+def test_generate_token_identical_to_stream(family_setup):
+    """The compat wrapper and the streaming path must decode the same
+    tokens — same executables, same sampling-key chain — whatever the
+    family's data plane looks like."""
+    family, cfg, _, _, prompt = family_setup
+    gen = _engine(family_setup)
+    srv = _engine(family_setup)
+    try:
+        res = gen.generate(prompt, max_new=4, temperature=0.8)
+        uids = [srv.submit(prompt[i], max_new=4) for i in range(2)]
+        srv.run_until_drained()
+        stream = np.stack([srv.sched.sequences[u].generated
+                           for u in uids]).astype(np.int32)
+        np.testing.assert_array_equal(res.tokens, stream)
+        # determinism: a fresh engine reproduces the stream exactly
+        srv2 = _engine(family_setup)
+        try:
+            uids2 = [srv2.submit(prompt[i], max_new=4) for i in range(2)]
+            srv2.run_until_drained()
+            again = np.stack([srv2.sched.sequences[u].generated
+                              for u in uids2]).astype(np.int32)
+            np.testing.assert_array_equal(stream, again)
+        finally:
+            srv2.close()
+    finally:
+        gen.close(), srv.close()
+
+
+def test_empty_report_stats(family_setup):
+    """Cancelling the whole stream before any step must yield a
+    well-formed zero report for every family (no percentile crash, no
+    inf rates, no TTFT coercion)."""
+    eng = _engine(family_setup)
+    try:
+        _, cfg, _, _, prompt = family_setup
+        uids = [eng.submit(prompt[0], max_new=4) for _ in range(2)]
+        eng.cancel(uids)
+        rep = eng.run_until_drained()
+        assert rep.stats == [] and len(rep.requests) == 2
+        assert rep.ttft().size == 0
+        assert rep.tokens_per_s == 0.0 and rep.throughput_tok_s == 0.0
+        assert rep.latency_percentiles()["p99"] == 0.0
+    finally:
+        eng.close()
+
+
+def test_kv_arena_exhaustion(family_setup):
+    """Oversized requests are rejected with the ctx_budget hint both
+    at submit time (arena live) and admission time; slot accounting
+    stays conserved through completions."""
+    family, cfg, _, _, prompt = family_setup
+    eng = _engine(family_setup, ctx_budget=16)
+    try:
+        uid = eng.submit(prompt[0], max_new=2)     # 12 + 2 <= 16: fits
+        assert eng.step() is not None              # arena exists now
+        with pytest.raises(ValueError, match="raise ctx_budget"):
+            eng.submit(prompt[1], max_new=8)       # 12 + 8 > 16
+        eng.run_until_drained()
+        assert eng.sched.sequences[uid].finished
+        assert eng.arena.n_free == eng.arena.n_slots
+        # the arena refuses double-allocation outright
+        with pytest.raises(RuntimeError):
+            for i in range(eng.arena.n_slots + 1):
+                eng.arena.alloc(1000 + i)
+    finally:
+        eng.close()

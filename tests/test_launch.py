@@ -90,6 +90,77 @@ def test_roofline_terms_and_dominance():
     assert out["dominant"] == "collective"
 
 
+def test_dispatch_groups_single_source_of_truth():
+    """MoE dispatch groups derive from launch.mesh.dispatch_groups
+    everywhere: one group per (pod x data) row, 1 without a mesh, and
+    1 on a serving replica's (1, n_model) submesh — which is what
+    makes dp x tp x ep compose (each replica dispatches over exactly
+    its local tokens)."""
+    from repro.launch.mesh import dispatch_groups
+
+    class PodMesh:
+        axis_names = ("pod", "data", "model")
+        shape = {"pod": 2, "data": 16, "model": 16}
+
+    class ReplicaSubmesh:
+        axis_names = ("data", "model")
+        shape = {"data": 1, "model": 4}
+
+    assert dispatch_groups(None) == 1
+    assert dispatch_groups(PodMesh()) == 32
+    assert dispatch_groups(FakeMesh()) == 16
+    assert dispatch_groups(ReplicaSubmesh()) == 1
+
+
+def test_dryrun_moe_group_inference_deduplicated():
+    """Satellite regression: the two dry-run lowering paths used to
+    re-derive moe_dispatch_groups inline; both must now go through
+    adapt_moe_groups (which defers to the shared mesh helper), and
+    the adapter passes non-MoE configs through untouched."""
+    import inspect
+    from repro.launch import dryrun
+    src = inspect.getsource(dryrun)
+    assert src.count("cfg = adapt_moe_groups(cfg, mesh)") == 2  # both paths
+    assert "moe_dispatch_groups=nb" not in src             # inline gone
+    cfg = get_config("deepseek-moe-16b")
+    assert dryrun.adapt_moe_groups(cfg, FakeMesh()) \
+        .moe_dispatch_groups == 16
+    dense = get_config("smollm-135m")
+    assert dryrun.adapt_moe_groups(dense, FakeMesh()) is dense
+
+
+def test_dryrun_moe_decode_smoke():
+    """The moe family's decode dry-run path end to end (adapt config,
+    infer groups, lower the decode step on the mesh) — the cheap
+    1-device half of the 256-device sweep guarantee."""
+    from repro.compat import set_mesh
+    from repro.launch.dryrun import adapt_moe_groups, decode_plan_for
+    from repro.launch.input_specs import cache_specs, param_specs
+    from repro.models.model import build_model
+
+    shape = INPUT_SHAPES["decode_32k"]
+    mesh = make_host_mesh()
+    cfg = adapt_config(get_config("deepseek-moe-16b"), shape).reduced()
+    cfg = adapt_moe_groups(cfg, mesh)
+    assert cfg.moe_dispatch_groups == 1        # host mesh: data == 1
+    assert decode_plan_for(cfg, mesh.shape["model"]) is None  # router=plan
+    model = build_model(cfg)
+    with set_mesh(mesh):
+        pspecs = param_specs(model, cfg, mesh)
+        batch = input_specs(cfg, shape, mesh)
+        cspecs = cache_specs(model, cfg, shape, mesh)
+        lowered = jax.jit(
+            lambda p, t, c: model.decode_step(p, t, c, None)).lower(
+            pspecs, batch["tokens"], cspecs)
+    # the lowered program must actually carry the stacked expert
+    # tensor (L, E, f, R, D) — a dense-only fallthrough would drop it
+    from repro.core.sparse_ffn import ffn_rows
+    expert_dims = "x".join(map(str, (
+        cfg.num_layers, cfg.num_experts, cfg.d_ff,
+        ffn_rows(cfg.activation), cfg.d_model)))
+    assert expert_dims in lowered.as_text()
+
+
 def test_model_flops_moe_uses_active_params():
     dense = model_flops("qwen3-14b", "train_4k")
     moe_total = get_config("deepseek-moe-16b").param_count()

@@ -1,0 +1,166 @@
+"""MoE dispatch properties (satellite of the EP serving tentpole):
+capacity-overflow drops are deterministic FIFO-in-token-order (ties in
+gate scores included), `_combine_group` exactly inverts
+`_dispatch_group` for kept tokens, `_capacity` never returns 0, and
+the active-mask contract — dead rows neither consume capacity nor
+perturb live rows' slots (the KV-arena zombie-lane guarantee the
+serving engine relies on)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.moe import (_capacity, _combine_group, _dispatch_group,
+                              moe_dispatch)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                        # property still checked below
+    HAVE_HYPOTHESIS = False
+
+
+# ------------------------------------------------------- _capacity ----
+
+def _check_capacity(T, k, E, factor):
+    c = _capacity(T, k, E, factor)
+    assert c >= 1, (T, k, E, factor)
+    assert c % 8 == 0                     # MXU-aligned slots
+    assert c >= min(8, T * k)             # floor holds even when tiny
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=100, deadline=None)
+    @given(st.integers(1, 4096), st.integers(1, 16), st.integers(1, 128),
+           st.floats(0.01, 8.0))
+    def test_capacity_never_zero_for_k_ge_1(T, k, E, factor):
+        _check_capacity(T, k, E, factor)
+else:
+    def test_capacity_never_zero_for_k_ge_1():
+        rng = np.random.default_rng(0)
+        for _ in range(300):
+            _check_capacity(int(rng.integers(1, 4097)),
+                            int(rng.integers(1, 17)),
+                            int(rng.integers(1, 129)),
+                            float(rng.uniform(0.01, 8.0)))
+        for corner in ((1, 1, 128, 0.01), (1, 1, 1, 8.0),
+                       (4096, 16, 1, 0.01)):
+            _check_capacity(*corner)
+
+
+# --------------------------------------------- deterministic drops ----
+
+def test_overflow_drops_deterministic_under_tied_gates():
+    """All tokens tie on every expert: capacity ranking must fall back
+    to token order (stable argsort), so exactly the first C tokens per
+    expert are kept — bit-identical across runs and under jit."""
+    T, E, k, C = 12, 4, 2, 2
+    gates = jnp.full((T, E), 1.0 / E)     # fully tied scores
+    outs = [moe_dispatch(gates, k, C),
+            moe_dispatch(gates, k, C),
+            jax.jit(lambda g: moe_dispatch(g, k, C))(gates)]
+    for a, b in zip(outs, outs[1:]):
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    tope, topv, slot, keep = outs[0]
+    tope, slot, keep = map(np.asarray, (tope, slot, keep))
+    # tied gates -> top_k picks the lowest expert ids for every token,
+    # and FIFO capacity keeps the earliest tokens per expert
+    for e in range(E):
+        kept_tokens = sorted(t for t in range(T)
+                             for i in range(k)
+                             if tope[t, i] == e and keep[t, i])
+        routed_tokens = sorted(t for t in range(T)
+                               for i in range(k) if tope[t, i] == e)
+        assert kept_tokens == routed_tokens[:C]
+    # kept slots are collision-free and within the (E*C) buffer
+    kept = slot[keep]
+    assert len(set(kept.tolist())) == len(kept)
+    assert kept.max(initial=0) < E * C
+
+
+def test_drop_count_is_exactly_overflow():
+    """Kept entries per expert == min(routed, C); everything else is
+    dropped — no silent extra drops, no capacity overrun."""
+    T, E, k, C = 32, 4, 2, 3
+    gates = jax.nn.softmax(
+        jax.random.normal(jax.random.key(0), (T, E)), -1)
+    tope, _, slot, keep = moe_dispatch(gates, k, C)
+    tope, keep = np.asarray(tope), np.asarray(keep)
+    routed = np.bincount(tope.reshape(-1), minlength=E)
+    kept = np.bincount(tope.reshape(-1), weights=keep.reshape(-1),
+                       minlength=E).astype(int)
+    np.testing.assert_array_equal(kept, np.minimum(routed, C))
+
+
+# ------------------------------------------- dispatch <-> combine ----
+
+def test_combine_inverts_dispatch_for_kept_tokens():
+    """With ample capacity every (token, expert) entry lands in its
+    own slot; feeding the dispatch buffer straight back through the
+    combine must reconstruct each token exactly (combine weights are
+    renormalized to sum to 1), i.e. combine o dispatch == identity on
+    kept tokens."""
+    cfg = get_config("deepseek-moe-16b").reduced().replace(
+        moe_capacity_factor=8.0)
+    T, D = 6, cfg.d_model
+    C = _capacity(T, cfg.experts_per_token, cfg.num_experts,
+                  cfg.moe_capacity_factor)
+    x = jax.random.normal(jax.random.key(1), (T, D))
+    router = jax.random.normal(jax.random.key(2),
+                               (D, cfg.num_experts)) * 0.1
+    buf, (slot, keep, topv), aux, counts = _dispatch_group(
+        x, router, cfg, C)
+    assert bool(np.asarray(keep).all())   # ample capacity: no drops
+    y = _combine_group(buf.reshape(-1, D), slot, keep, topv)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x),
+                               atol=1e-5, rtol=1e-5)
+    # the trace counts exactly the kept entries
+    assert int(np.asarray(counts).sum()) == T * cfg.experts_per_token
+
+
+def test_dropped_tokens_combine_to_zero():
+    """A dropped (token, expert) entry contributes nothing: with
+    capacity 0-ish (floor C, all slots contested) the combine output
+    for fully-dropped tokens is exactly zero."""
+    cfg = get_config("deepseek-moe-16b").reduced()
+    T, D = 24, cfg.d_model
+    C = 1                                  # starve capacity directly
+    x = jnp.ones((T, D))
+    router = jnp.zeros((D, cfg.num_experts))   # uniform tied gates
+    buf, (slot, keep, topv), _, counts = _dispatch_group(
+        x, router, cfg, C)
+    keep_np = np.asarray(keep)
+    y = np.asarray(_combine_group(buf.reshape(-1, D), slot, keep, topv))
+    dropped_rows = ~keep_np.any(axis=1)
+    assert dropped_rows.any()              # capacity actually starved
+    np.testing.assert_array_equal(y[dropped_rows], 0.0)
+    assert int(np.asarray(counts).sum()) == int(keep_np.sum())
+
+
+# ----------------------------------------------------- active mask ----
+
+def test_dead_rows_never_consume_capacity():
+    """The serving zombie-lane contract: dispatching (T live + T dead)
+    rows with an active mask must keep/slot the live rows exactly as
+    dispatching the live rows alone — dead lanes can neither evict a
+    live token past capacity nor shift its buffer slot."""
+    E, k, C = 4, 2, 2
+    rng = jax.random.key(3)
+    live = jax.nn.softmax(jax.random.normal(rng, (8, E)), -1)
+    dead = jax.nn.softmax(
+        jax.random.normal(jax.random.key(4), (8, E)) * 3.0, -1)
+    # interleave live/dead rows so dead rows sit *before* live ones
+    gates = jnp.stack([dead, live], 1).reshape(16, E)
+    active = jnp.tile(jnp.array([False, True]), 8)
+    tope_m, topv_m, slot_m, keep_m = moe_dispatch(gates, k, C, active)
+    tope_l, topv_l, slot_l, keep_l = moe_dispatch(live, k, C)
+    rows = np.arange(1, 16, 2)             # the live rows
+    np.testing.assert_array_equal(np.asarray(keep_m)[rows],
+                                  np.asarray(keep_l))
+    np.testing.assert_array_equal(np.asarray(slot_m)[rows],
+                                  np.asarray(slot_l))
+    np.testing.assert_array_equal(np.asarray(tope_m)[rows],
+                                  np.asarray(tope_l))
+    # dead rows are fully dropped
+    assert not np.asarray(keep_m)[::2].any()
