@@ -138,6 +138,10 @@ def engine_setup(arch: str = "smollm-135m", activation: str = None,
             _save_trained(path, jax.tree.leaves(params), counts, n_tok)
     if cfg.num_experts:
         plan = build_moe_plan(cfg, hw=PHONE)
+        # whole-expert plans prepare to identity; two-level plans
+        # (cfg.moe_intra_expert) apply the per-expert hot-first
+        # permutation the plan's neuron_order records
+        params = serving_family(cfg).prepare_params(params, plan)
         prompt = np.random.default_rng(seed).integers(
             0, cfg.vocab_size, (4, 16)).astype(np.int32)
         return cfg, model, params, plan, prompt

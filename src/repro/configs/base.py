@@ -69,6 +69,13 @@ class ModelConfig:
     # buffer shards over the batch axes instead of materializing a
     # global (E, C_global, D) buffer. Launcher sets = data*pod shards.
     moe_dispatch_groups: int = 1
+    # Intra-expert hot/cold sparsity (the paper's TurboSparse-Mixtral
+    # path, DESIGN.md §9): each routed expert's d_ff rows get the
+    # dense-family hybrid treatment — a per-expert hot-first
+    # permutation with a pinned per-expert hot prefix, cold rows priced
+    # as sparse_ffn.cluster_size clusters from the real activation
+    # trace. False = whole experts are the cluster unit (DESIGN.md §8).
+    moe_intra_expert: bool = False
 
     # --- SSM (Mamba-2 / SSD, arXiv:2405.21060) ---
     ssm_state: int = 0

@@ -38,8 +38,16 @@ TURBOSPARSE_MIXTRAL_47B = ModelConfig(
     vocab_size=32000,
     activation="relu2",
     num_experts=8,
+    # TurboSparse's ReLUfication adds an always-on shared expert next
+    # to the routed ones — the pinned hot prefix of the serving plane.
+    num_shared_experts=1,
     experts_per_token=2,
-    moe_shard_mode="tp",
+    # expert-parallel over 'model' (8 experts / n shards), so the
+    # serving EP goldens cover the two-level path shard-locally
+    moe_shard_mode="ep",
+    # the paper's headline case: the hybrid hot/cold FFN applies
+    # *inside* each routed expert (DESIGN.md §9)
+    moe_intra_expert=True,
     sparse_ffn=SparseFFNConfig(enabled=True, mode="relu",
                                hot_ratio=0.2, cold_active_ratio=0.08),
 )

@@ -36,6 +36,15 @@ class HybridPlan:
     groups: int = 1        # neuron-dim shards (mesh model-axis size)
     backend: str = "jnp"   # 'jnp' | 'pallas'
     cluster_size: int = 128
+    # Two-level MoE sparsity (intra-expert hot/cold, DESIGN.md §9):
+    # per-expert hot prefix rows (0 = whole-expert MoE or dense plan)
+    # and the pinned resident prefix when it differs from the per-step
+    # hot compute — every routed expert's hot prefix stays resident
+    # while only the activated experts compute theirs, so
+    # n_hot = shared + n_act*n_expert_hot prices compute and
+    # n_pinned = shared + E*n_expert_hot sizes residency.
+    n_expert_hot: int = 0
+    n_pinned: int = 0
 
     @property
     def total_cold(self) -> int:
@@ -44,6 +53,12 @@ class HybridPlan:
     @property
     def clusters_per_group(self) -> int:
         return self.k_cold // self.cluster_size
+
+    @property
+    def resident_hot(self) -> int:
+        """Pinned resident hot prefix (neurons): n_pinned for two-level
+        MoE plans, otherwise the computed hot prefix itself."""
+        return self.n_pinned or self.n_hot
 
 
 def make_plan(n_neurons: int, hot_ratio: float, cold_active_ratio: float,

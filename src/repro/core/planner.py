@@ -291,8 +291,7 @@ def classify_neurons(freqs: np.ndarray, cfg: ModelConfig,
     mean_f = sorted_f.mean(axis=0)                          # (N,) layer-avg
 
     sc = cfg.sparse_ffn
-    bytes_per_neuron = sc.cluster_size and _bundle_bytes(cfg)
-    io_cap = int(hw.seq_bw * hw.attn_time_s / max(bytes_per_neuron, 1))
+    io_cap = hot_io_cap(cfg, hw)
 
     plans = {}
     for b in batch_buckets:
@@ -313,6 +312,15 @@ def _bundle_bytes(cfg: ModelConfig) -> int:
     R = ffn_rows(cfg.activation)
     itemsize = 2 if cfg.param_dtype == "bfloat16" else 4
     return R * cfg.d_model * itemsize
+
+
+def hot_io_cap(cfg: ModelConfig, hw: HardwareProfile) -> int:
+    """I/O-aware hot-prefix cap (§5 "carefully balances"): the pinned
+    hot region must be prefetchable within one attention block at
+    sequential bandwidth. Shared by the dense classifier and the
+    two-level MoE plan (there the cap bounds the *total* pinned
+    prefix: shared experts + every routed expert's hot rows)."""
+    return int(hw.seq_bw * hw.attn_time_s / max(_bundle_bytes(cfg), 1))
 
 
 # ------------------------------------------------------------- assembly ----
@@ -351,37 +359,147 @@ def build_plan(cfg: ModelConfig, freqs: np.ndarray = None,
         neuron_order=order, frequencies=sorted_f, plans=plans, hardware=hw)
 
 
-def build_moe_plan(cfg: ModelConfig, hw: HardwareProfile = None,
-                   batch_buckets=(1, 2, 4, 8, 16, 32)) -> ExecutionPlan:
-    """Experts-as-clusters execution plan for the MoE family
-    (DESIGN.md §8): the flat serving neuron space is
-    [shared experts | routed experts] with one cluster per routed
-    expert (cluster_size = d_ff), so the storage plane prices expert
-    residency exactly like dense cold-cluster residency.
+def moe_synthetic_frequencies(cfg: ModelConfig, seed: int = 0,
+                              zipf_a: float = 1.2) -> np.ndarray:
+    """Within-expert per-token activation frequencies (L, E*f),
+    *conditional on the expert being routed* — the MoE analogue of
+    `synthetic_frequencies`, used when no profiled frequencies are
+    supplied to the two-level `build_moe_plan`.
 
-    Per batch bucket, the cold budget is the *expected batch union* of
-    routed experts — 1-(1-k/E)^b per expert, the Fig 2 union effect at
-    expert granularity — clamped to [k, E] experts. No neuron
-    permutation is needed: the architecture already makes the clusters
-    explicit, so `neuron_order` is the identity."""
+    Shape: a hot band of ~1.5*hot_ratio*f neurons whose frequency
+    ramps 0.95 -> 0.3 (so the >0.5 union threshold lands near the
+    config's declared per-expert hot share at batch 1 and the hot
+    prefix *grows* with the per-expert batch, Fig 2), then a zipf
+    cold tail."""
+    rng = np.random.default_rng(seed)
+    L, E, f = cfg.num_layers, cfg.num_experts, max(cfg.d_ff, 1)
+    band = int(np.clip(round(1.5 * cfg.sparse_ffn.hot_ratio * f), 1, f))
+    hot = np.linspace(0.95, 0.3, band)
+    rank = np.arange(1, f - band + 1, dtype=np.float64)
+    tail = 0.25 / rank ** zipf_a
+    base = np.concatenate([hot, tail])
+    freqs = np.stack([np.concatenate([rng.permutation(base)
+                                      for _ in range(E)])
+                      for _ in range(L)])
+    return freqs.astype(np.float32)
+
+
+def permute_moe_params(params, order: np.ndarray):
+    """Per-expert hot-first reorder of the stacked expert bundles
+    (L, E, f, R, D) — the MoE half of `permute_ffn_params`. Only the
+    routed experts' rows move (the router is per-expert, the shared
+    experts keep the identity prefix the flat order assigns them), so
+    MoE layer outputs are unchanged up to fp reassociation."""
+    layers = params["layers"]
+    moe = layers["moe"]
+    ex = np.asarray(moe["experts"])                         # (L, E, f, R, D)
+    L, E, f = ex.shape[:3]
+    S = order.shape[1] - E * f
+    ro = (order[:, S:].reshape(L, E, f) - S
+          - (np.arange(E, dtype=np.int32) * f)[None, :, None])
+    ex = np.take_along_axis(ex, ro[..., None, None], axis=2)
+    new_moe = dict(moe, experts=jnp.asarray(ex))
+    return dict(params, layers=dict(layers, moe=new_moe))
+
+
+def build_moe_plan(cfg: ModelConfig, freqs: np.ndarray = None,
+                   hw: HardwareProfile = None,
+                   batch_buckets=(1, 2, 4, 8, 16, 32)) -> ExecutionPlan:
+    """Execution plan for the MoE family.
+
+    Whole-expert mode (DESIGN.md §8, `cfg.moe_intra_expert=False`):
+    the flat serving neuron space is [shared experts | routed experts]
+    with one cluster per routed expert (cluster_size = d_ff), so the
+    storage plane prices expert residency exactly like dense
+    cold-cluster residency. Per batch bucket, the cold budget is the
+    *expected batch union* of routed experts — 1-(1-k/E)^b per expert,
+    the Fig 2 union effect at expert granularity — clamped to [k, E]
+    experts. No neuron permutation is needed: the architecture already
+    makes the clusters explicit, so `neuron_order` is the identity.
+
+    Two-level mode (DESIGN.md §9, the paper's TurboSparse-Mixtral
+    case): expert gating *composes with* intra-expert hot/cold
+    clusters. The flat space keeps each routed expert contiguous but
+    permutes its d_ff rows hot-first (`freqs` (L, E*f) within-expert
+    activation frequencies; synthetic zipf when None). Per bucket, the
+    expert union above picks n_act experts; the per-expert hot prefix
+    is then sized by the same Fig-2 union math `classify_neurons`
+    applies — at the per-active-expert token count b_e = ceil(b*k /
+    n_act) — and capped by the shared `hot_io_cap` budget (the total
+    pinned prefix, shared + E hot prefixes, must prefetch within one
+    attention block). The plan prices hot compute per *activated*
+    expert (n_hot = S + n_act*n_hot_e) while pinning every expert's
+    hot prefix (n_pinned = S + E*n_hot_e)."""
     hw = hw or HardwareProfile()
     f, E, k = cfg.d_ff, cfg.num_experts, cfg.experts_per_token
     if not E or not k:
         raise ValueError(f"{cfg.name} is not a MoE config "
                          f"(num_experts={E}, experts_per_token={k})")
-    n_hot = cfg.num_shared_experts * f
+    S = cfg.num_shared_experts * f
     N = cfg.moe_flat_neurons
+    L = cfg.num_layers
+
+    def expert_union(b):
+        union = 1.0 - (1.0 - k / E) ** b
+        return min(max(int(round(E * union)), min(k, E)), E)
+
+    if not cfg.moe_intra_expert:
+        plans = {b: HybridPlan(n_hot=S, k_cold=expert_union(b) * f,
+                               groups=1, cluster_size=f)
+                 for b in batch_buckets}
+        # shared experts always fire; each routed expert at rate ~k/E
+        fr = np.concatenate([np.ones((S,), np.float32),
+                             np.full((E * f,), k / E, np.float32)])
+        fr = np.tile(fr, (L, 1))
+        order = np.tile(np.arange(N, dtype=np.int32), (L, 1))
+        return ExecutionPlan(
+            arch=cfg.name, n_neurons=N, cluster_size=f,
+            neuron_order=order, frequencies=fr, plans=plans, hardware=hw)
+
+    # ---- two-level: expert union x intra-expert hot/cold ----
+    cs = cfg.sparse_ffn.cluster_size
+    if f % cs:
+        raise ValueError(
+            f"{cfg.name}: d_ff={f} must be a multiple of the "
+            f"intra-expert cluster size {cs}")
+    if freqs is None:
+        freqs = moe_synthetic_frequencies(cfg)
+    freqs = np.asarray(freqs, np.float32)
+    if freqs.shape != (L, E * f):
+        raise ValueError(
+            f"two-level MoE frequencies must be (L, E*f) = "
+            f"({L}, {E * f}); got {freqs.shape}")
+    per_exp = freqs.reshape(L, E, f)
+    order_e = np.argsort(-per_exp, axis=2).astype(np.int32)  # hot-first
+    sorted_f = np.take_along_axis(per_exp, order_e, axis=2)
+    mean_f = sorted_f.mean(axis=(0, 1))         # (f,) layer+expert profile
+    cap_e = max((hot_io_cap(cfg, hw) - S) // E, 0)
+
     plans = {}
     for b in batch_buckets:
-        union = 1.0 - (1.0 - k / E) ** b
-        n_act = min(max(int(round(E * union)), min(k, E)), E)
-        plans[b] = HybridPlan(n_hot=n_hot, k_cold=n_act * f, groups=1,
-                              cluster_size=f)
-    # shared experts always fire; each routed expert at rate ~k/E
-    freqs = np.concatenate([np.ones((n_hot,), np.float32),
-                            np.full((E * f,), k / E, np.float32)])
-    freqs = np.tile(freqs, (cfg.num_layers, 1))
-    order = np.tile(np.arange(N, dtype=np.int32), (cfg.num_layers, 1))
+        n_act = expert_union(b)
+        b_e = max(int(np.ceil(b * k / n_act)), 1)  # tokens/active expert
+        union = 1.0 - (1.0 - mean_f) ** b_e
+        n_hot_e = int((union > 0.5).sum())
+        n_hot_e = max(min(round_down(n_hot_e, cs),
+                          round_down(cap_e, cs), f - cs), 0)
+        cold_union = union[n_hot_e:]
+        cold_ratio = float(np.clip(cold_union.mean() * 2.0, 0.02, 1.0))
+        k_cold_e = max(round_down(int((f - n_hot_e) * cold_ratio), cs), cs)
+        plans[b] = HybridPlan(
+            n_hot=S + n_act * n_hot_e, k_cold=n_act * k_cold_e,
+            groups=1, cluster_size=cs,
+            n_expert_hot=n_hot_e, n_pinned=S + E * n_hot_e)
+
+    # flat order: identity shared prefix, then each expert's rows
+    # hot-first within its contiguous block (prepare_params applies
+    # this with permute_moe_params, so flat id == physical row)
+    routed = (order_e + (np.arange(E, dtype=np.int32) * f)[None, :, None]
+              + S).reshape(L, E * f)
+    shared = np.tile(np.arange(S, dtype=np.int32), (L, 1))
+    order = np.concatenate([shared, routed], axis=1).astype(np.int32)
+    fr = np.concatenate([np.ones((L, S), np.float32),
+                         sorted_f.reshape(L, E * f)], axis=1)
     return ExecutionPlan(
-        arch=cfg.name, n_neurons=N, cluster_size=f,
-        neuron_order=order, frequencies=freqs, plans=plans, hardware=hw)
+        arch=cfg.name, n_neurons=N, cluster_size=cs,
+        neuron_order=order, frequencies=fr, plans=plans, hardware=hw)

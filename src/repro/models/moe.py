@@ -28,6 +28,11 @@ is the family registry's traced decode — it accepts the engine's
 `active_mask` (freed KV-arena lanes never consume expert capacity)
 and returns the per-layer kept-dispatch counts (L, E), the expert
 activation trace the storage plane prices as cold-cluster residency.
+With `cfg.moe_intra_expert` (DESIGN.md §9, the TurboSparse-Mixtral
+case) the trace refines to (L, E, 1+ncc): real per-cold-cluster
+activation counts *inside* each expert, thresholded off the unchanged
+dense expert GEMMs — decode stays token-identical while the storage
+plane prices hot/cold clusters within each routed expert.
 """
 from __future__ import annotations
 
@@ -141,6 +146,37 @@ def _expert_counts(tope, keep, E: int):
     return jnp.zeros((E + 1,), jnp.int32).at[flat].add(1)[:E]
 
 
+def _two_level_trace(cfg: ModelConfig, plan) -> bool:
+    """True when the decode trace is the two-level (E, 1+ncc) form:
+    intra-expert sparsity enabled and the stepped plan carries a
+    per-expert hot prefix (DESIGN.md §9)."""
+    return (cfg.moe_intra_expert and plan is not None
+            and getattr(plan, "n_expert_hot", 0) > 0)
+
+
+def _cold_cluster_counts(h, cfg: ModelConfig, n_hot_e: int, cs: int):
+    """h (..., e_slice, C, f) real expert activations -> (e_slice, ncc)
+    int32 active-(slot, neuron) counts per intra-expert *cold* cluster
+    (rows are hot-first permuted, so the cold suffix starts at
+    n_hot_e and groups into (f - n_hot_e)/cs clusters).
+
+    The expert GEMMs are computed densely (numerics untouched), so the
+    trace is the TRUE activation set: empty capacity slots and dropped
+    dispatch entries contribute exact zeros (relu/silu of 0 is 0) and
+    never mark a cluster active. With relu-family activations skipping
+    an inactive cold cluster is lossless — exactly why the paper's
+    TurboSparse models ReLUfy — which is what lets the storage plane
+    price only the traced clusters while decode stays token-identical
+    to dense-expert decode."""
+    from repro.core.planner import _act_threshold
+    tau = _act_threshold(cfg.sparse_ffn.mode)
+    f = h.shape[-1]
+    active = (jnp.abs(h) > tau).astype(jnp.int32)
+    na = active.reshape((-1,) + h.shape[-3:]).sum(axis=(0, 2))  # (e, f)
+    ncc = (f - n_hot_e) // cs
+    return na[:, n_hot_e:].reshape(-1, ncc, cs).sum(axis=-1)
+
+
 def _combine_group(yb, slot, keep, topv):
     """yb (E*C, D) expert outputs -> (T, D) weighted combine."""
     T, k = slot.shape
@@ -164,7 +200,8 @@ def _use_ep_shard_map(cfg: ModelConfig, G: int) -> bool:
     return n > 1 and cfg.num_experts % n == 0
 
 
-def _moe_ep_shard_map(params, xt, cfg: ModelConfig, C: int, active_mask):
+def _moe_ep_shard_map(params, xt, cfg: ModelConfig, C: int, active_mask,
+                      plan=None, collect_trace: bool = False):
     """Shard-local expert-parallel dispatch (DESIGN.md §8), mirroring
     the cold-group scheme of core/sparse_ffn._cold_path_shard_map: the
     mesh 'model' axis (size n) owns E/n whole experts per shard.
@@ -176,7 +213,14 @@ def _moe_ep_shard_map(params, xt, cfg: ModelConfig, C: int, active_mask):
     owns into its (E/n, C, D) buffer, runs its expert GEMMs, and
     combines a partial (T, D) output. One fp32 psum per layer crosses
     shards, so expert selection — and decoded tokens — are identical
-    at every mesh size. Returns ((T, D) output, (E,) kept counts).
+    at every mesh size. Returns ((T, D) output, trace, aux).
+
+    The trace is the (E,) kept counts, or — when the stepped plan
+    enables two-level sparsity (DESIGN.md §9) — the (E, 1+ncc) form:
+    each shard thresholds its own experts' real activations (the
+    per-expert cold gathers stay strictly shard-local) and the local
+    (E/n, 1+ncc) blocks are all_gather'd in expert order, the same
+    id-only collective the dense cold path uses for its cluster ids.
     """
     from jax.sharding import PartitionSpec as PS
     from repro.compat import shard_map
@@ -190,6 +234,9 @@ def _moe_ep_shard_map(params, xt, cfg: ModelConfig, C: int, active_mask):
     R = w.shape[2]
     from repro.models.modules import activation_fn
     act = activation_fn(cfg.activation)
+    two_level = collect_trace and _two_level_trace(cfg, plan)
+    n_hot_e = plan.n_expert_hot if two_level else 0
+    cs = plan.cluster_size if two_level else 0
 
     def local(xl, wl, rl, ml):
         # xl (T, D) replicated; wl (e_loc, f, R, D) this shard's
@@ -219,21 +266,34 @@ def _moe_ep_shard_map(params, xt, cfg: ModelConfig, C: int, active_mask):
             * (topv * sel.reshape(T, k)).astype(yk.dtype)[..., None]
         # psum in f32 (same rationale as _cold_path_shard_map); the
         # kept counts and aux loss are replicated global math — no
-        # collective beyond the one output reduction.
+        # collective beyond the one output reduction (plus, for the
+        # two-level trace, the id-only all_gather below).
         y = jax.lax.psum(yk.sum(axis=1).astype(jnp.float32), "model")
         me = gates.mean(axis=0)
         ce = jnp.zeros((E,), jnp.float32).at[tope.reshape(-1)].add(
             1.0 / (T * k))
         aux = E * jnp.sum(me * ce)
-        return y, _expert_counts(tope, keep, E), aux
+        counts = _expert_counts(tope, keep, E)
+        if two_level:
+            # this shard's experts' real activations -> local
+            # (e_loc, 1+ncc) block, gathered in expert-block order
+            cold = _cold_cluster_counts(h, cfg, n_hot_e, cs)
+            loc = jax.lax.dynamic_slice_in_dim(counts, e0, e_loc)
+            blk = jnp.concatenate([loc[:, None], cold], axis=1)
+            trace = jax.lax.all_gather(blk, "model").reshape(
+                E, blk.shape[1]).astype(jnp.int32)
+        else:
+            trace = counts
+        return y, trace, aux
 
     if active_mask is None:
         active_mask = jnp.ones((xt.shape[0],), bool)
+    tr_spec = PS(None, None) if two_level else PS(None)
     fn = shard_map(
         local, mesh=mesh,
         in_specs=(PS(None, None), PS("model", None, None, None),
                   PS(None, None), PS(None)),
-        out_specs=(PS(None, None), PS(None), PS()),
+        out_specs=(PS(None, None), tr_spec, PS()),
         axis_names={"model"}, check_vma=False)
     y, counts, aux = fn(xt, w, params["router"], active_mask)
     return y.astype(xt.dtype), counts, aux
@@ -248,8 +308,15 @@ def apply_moe_ffn(params, x, cfg: ModelConfig,
     active_mask (T,) bool: rows excluded from dispatch (the serving
     engine's freed KV-arena lanes) — they must neither consume expert
     capacity nor appear in the activation trace. collect_trace=True
-    additionally returns the per-expert kept-entry counts (E,) int32
-    consumed by the serving storage plane.
+    additionally returns the activation trace the serving storage
+    plane consumes: the per-expert kept-entry counts (E,) int32, or —
+    when `cfg.moe_intra_expert` and the stepped plan carries a
+    per-expert hot prefix — the two-level (E, 1+ncc) form whose first
+    column is the kept counts and whose remaining columns count real
+    activations per intra-expert cold cluster (DESIGN.md §9). The
+    expert compute itself never changes: the trace thresholds the
+    dense GEMMs' activations, so two-level decode is token-identical
+    to whole-expert decode by construction.
 
     Hierarchical dispatch (§Perf iteration, EXPERIMENTS.md): tokens are
     routed within `moe_dispatch_groups` data-local groups (group dim
@@ -272,7 +339,9 @@ def apply_moe_ffn(params, x, cfg: ModelConfig,
     w = params["experts"]                                   # (E, f, R, D)
 
     if _use_ep_shard_map(cfg, G):
-        y, trace, aux = _moe_ep_shard_map(params, xt, cfg, C, active_mask)
+        y, trace, aux = _moe_ep_shard_map(params, xt, cfg, C, active_mask,
+                                          plan=plan,
+                                          collect_trace=collect_trace)
         if "shared" in params:                              # hot clusters
             y = y + ffn_dense(params["shared"], xt, cfg.activation)
         y = y.reshape(shape)
@@ -319,7 +388,13 @@ def apply_moe_ffn(params, x, cfg: ModelConfig,
         y = y + ffn_dense(params["shared"], xt, cfg.activation)
     y = y.reshape(shape)
     if collect_trace:
-        return y, aux, cnts.sum(axis=0)                     # (E,) counts
+        counts = cnts.sum(axis=0)                           # (E,) counts
+        if _two_level_trace(cfg, plan):
+            cold = _cold_cluster_counts(h, cfg, plan.n_expert_hot,
+                                        plan.cluster_size)
+            return y, aux, jnp.concatenate(
+                [counts[:, None], cold], axis=1).astype(jnp.int32)
+        return y, aux, counts
     return y, aux
 
 
@@ -434,11 +509,13 @@ def make_model(cfg: ModelConfig) -> dense.Model:
 def make_decode_step(cfg: ModelConfig, collect_indices: bool = False):
     """Serving decode step with the uniform family signature
     (params, tokens, cache, plan, active_mask) -> (logits, cache[,
-    trace]). The hybrid plan is accepted but unused by the MoE data
-    plane — the router plays the predictor's role (DESIGN.md §8) —
-    and collect_indices=True returns the per-layer kept-dispatch
-    counts (L, E): the expert activation trace the storage plane
-    prices exactly like dense cold-cluster selections."""
+    trace]). The router plays the predictor's role (DESIGN.md §8);
+    the hybrid plan never alters the expert compute, it only shapes
+    the trace: collect_indices=True returns the per-layer
+    kept-dispatch counts (L, E), or the two-level (L, E, 1+ncc) trace
+    when the plan carries a per-expert hot prefix
+    (cfg.moe_intra_expert, DESIGN.md §9) — the activation trace the
+    storage plane prices exactly like dense cold-cluster selections."""
     dh_half = cfg.d_head // 2
     W = cfg.sliding_window
 
@@ -456,7 +533,7 @@ def make_decode_step(cfg: ModelConfig, collect_indices: bool = False):
             h = h + a
             out = apply_moe_ffn(lp["moe"],
                                 rms_norm(h, lp["ln2"], cfg.norm_eps), cfg,
-                                active_mask=active_mask,
+                                plan=plan, active_mask=active_mask,
                                 collect_trace=collect_indices)
             if collect_indices:
                 f, _, tr = out

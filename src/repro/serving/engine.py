@@ -186,7 +186,8 @@ class ServeEngine:
                  temperature: float = 0.8,
                  prefetch: bool = True,
                  mesh=None,
-                 dp: int = None):
+                 dp: int = None,
+                 n_replicas: int = 1):
         # family registry lookup (DESIGN.md §8): raises with the
         # servable set named when cfg.family has no entry
         self.family = serving_family(cfg)
@@ -218,6 +219,9 @@ class ServeEngine:
                 subs = replica_submeshes(mesh)
             else:
                 subs = [None] * n_data
+            # each replica's storage plane gets a 1/n_data share of the
+            # resident NeuronCache budget (DESIGN.md §9): the host
+            # memory budget is per machine, so dp must not multiply it
             self.replicas = [
                 ServeEngine(cfg, params, plan, spec=spec, storage=storage,
                             offload_ratio=offload_ratio, hw=hw,
@@ -225,7 +229,8 @@ class ServeEngine:
                             n_compute_workers=n_compute_workers, seed=seed,
                             buckets=buckets, ctx_budget=ctx_budget,
                             eos_id=eos_id, temperature=temperature,
-                            prefetch=prefetch, mesh=subs[r])
+                            prefetch=prefetch, mesh=subs[r],
+                            n_replicas=n_data)
                 for r in range(n_data)]
             if subs[0] is None:
                 # meshless replicas run identical executables on the
@@ -274,7 +279,7 @@ class ServeEngine:
             cfg, params, plan, spec=spec, storage=storage,
             offload_ratio=offload_ratio, hw=hw, timing=timing,
             n_compute_workers=n_compute_workers, prefetch=prefetch,
-            n_shards=self.n_shards)
+            n_shards=self.n_shards, n_replicas=n_replicas)
 
         # ---- scheduler + KV slots ----
         self.sched = BatchScheduler(eos_id=eos_id)

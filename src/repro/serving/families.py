@@ -12,13 +12,17 @@ four family-specific pieces of the stack:
   trace)`: `active_mask` keeps freed KV-arena lanes from steering
   selection, and `trace` is the per-layer activation trace the storage
   plane prices (dense: (L, G, kc) cold-cluster ids; moe: (L, E)
-  kept-dispatch expert counts);
+  kept-dispatch expert counts, or the two-level (L, E, 1+ncc) form
+  when cfg.moe_intra_expert prices hot/cold clusters *inside* each
+  expert — DESIGN.md §9);
 * `build_plan(cfg, freqs=None, hw=None)` — the ExecutionPlan the
   bucketed decoder and storage plane consume (dense: the offline
   hot-first planner; moe: experts-as-clusters, `build_moe_plan`);
 * `prepare_params(params, plan)` — the offline weight transform
-  (dense: hot-first neuron permutation; moe: identity — the
-  architecture already makes clusters explicit).
+  (dense: hot-first neuron permutation; moe: identity for
+  whole-expert plans — the architecture already makes clusters
+  explicit — and the per-expert hot-first permutation for two-level
+  plans).
 
 The storage plane keeps its own half of the registry
 (`storage_plane.make_storage_view`) so it stays importable without the
@@ -104,8 +108,21 @@ def _dense_family(name: str, arch: str) -> ServingFamily:
 
 
 def _moe_build_plan(cfg, freqs=None, hw=None):
+    # freqs: within-expert activation frequencies (L, E*f) for the
+    # two-level plan (cfg.moe_intra_expert); ignored for whole-expert
     from repro.core.planner import build_moe_plan
-    return build_moe_plan(cfg, hw=hw)
+    return build_moe_plan(cfg, freqs, hw=hw)
+
+
+def _moe_prepare(params, plan):
+    # two-level plans carry a per-expert hot-first permutation; the
+    # whole-expert plan's order is the identity (experts already ARE
+    # the clusters), so prepare stays a no-op there
+    if any(getattr(p, "n_expert_hot", 0)
+           for p in plan.plans.values()):
+        from repro.core.planner import permute_moe_params
+        return permute_moe_params(params, plan.neuron_order)
+    return params
 
 
 def _moe_family() -> ServingFamily:
@@ -116,7 +133,7 @@ def _moe_family() -> ServingFamily:
         make_decode_step=lambda cfg: moe.make_decode_step(
             cfg, collect_indices=True),
         build_plan=_moe_build_plan,
-        prepare_params=lambda params, plan: params,
+        prepare_params=_moe_prepare,
         default_arch="deepseek-moe-16b",
     )
 

@@ -13,7 +13,8 @@ The plane's public surface is deliberately narrow:
 
 where `trace` is the real per-layer activation trace produced by the
 data plane — (G, kc) selected cold-cluster ids for the dense families,
-(E,) kept-dispatch expert counts for MoE. The orchestrator
+(E,) kept-dispatch expert counts for MoE (or the two-level (E, 1+ncc)
+intra-expert form, DESIGN.md §9). The orchestrator
 (serving/engine.py) never touches cache/coldstore internals.
 
 Family genericity (DESIGN.md §8): everything family-specific — the
@@ -68,12 +69,13 @@ class FFNStorageView:
         """Per-token FFN compute neurons during prefill."""
         return timing.d_ff
 
-    def trace_cold_ids(self, trace_l, n_hot: int):
+    def trace_cold_ids(self, trace_l, plan: HybridPlan):
         """Map one layer's (G, kc) group-relative cluster trace to
-        global cold neuron ids (hot-first permuted space). `n_hot` is
-        the *stepped* plan's hot prefix — the trace's cluster ids are
-        relative to it, not to the batch-1 plan's."""
+        global cold neuron ids (hot-first permuted space). The
+        *stepped* plan's hot prefix anchors the mapping — the trace's
+        cluster ids are relative to it, not to the batch-1 plan's."""
         cs, N = self.cluster_size, self.n_neurons
+        n_hot = plan.n_hot
         tr = np.asarray(trace_l)
         if tr.ndim < 2:
             tr = tr.reshape(1, -1)
@@ -84,6 +86,17 @@ class FFNStorageView:
         cold = (n_hot
                 + (ids[:, None] * cs + np.arange(cs)[None]).reshape(-1))
         return cold[cold < N]
+
+    def hot_ids(self, trace_l, plan: HybridPlan):
+        """The stepped plan's hot set — streamed through the LRU by
+        systems without a pinned hot region (spec.pinned_hot=False)."""
+        return np.arange(plan.n_hot)
+
+    def warm_cold_ids(self, n_hot: int, count: int):
+        """Most-frequent cold ids (hot-first space: the cold region
+        starts right after the plane's pinned prefix) used to pre-warm
+        each shard's cold cache."""
+        return np.arange(n_hot, min(n_hot + count, self.n_neurons))
 
     def owner_of(self, ids, plan: HybridPlan, n_shards: int):
         """Owning device shard per neuron id, following the plan's
@@ -106,15 +119,28 @@ class FFNStorageView:
 
 
 class MoEStorageView:
-    """Experts-as-clusters (DESIGN.md §8): the flat neuron space is
-    [shared experts | routed experts], one cluster per routed expert
-    (cluster_size = d_ff). The trace is the per-layer kept-dispatch
-    counts (E,): an expert with count > 0 was activated and its d_ff
-    neuron bundles are the fetch unit — resident experts are hot,
-    evicted experts pay cold-store I/O. Shard ownership is
-    expert-parallel: device s owns the contiguous E/n routed experts
-    the mesh 'model' axis assigns it (the `_moe_ep_shard_map` layout)
-    plus a uniform share of the pinned shared-expert prefix."""
+    """MoE flat neuron space [shared experts | routed experts], each
+    routed expert a contiguous f-row block (DESIGN.md §8/§9).
+
+    Whole-expert mode (cfg.moe_intra_expert=False): one cluster per
+    routed expert (cluster_size = d_ff); the trace is the per-layer
+    kept-dispatch counts (E,) — an expert with count > 0 was activated
+    and its d_ff neuron bundles are the fetch unit.
+
+    Two-level mode: each expert's rows are hot-first permuted
+    (prepare_params applied the plan's per-expert permutation, so flat
+    id == physical row) and the cluster unit is the intra-expert
+    sparse_ffn.cluster_size. The trace is (E, 1+ncc): column 0 the
+    kept-dispatch counts, columns 1.. the real activation counts per
+    cold cluster — only the activated experts' *active cold clusters*
+    pay cold-store I/O, while every expert's hot prefix (plus the
+    shared experts) is pinned via the plan's n_pinned.
+
+    Shard ownership is expert-parallel either way: device s owns the
+    contiguous ceil(E/n) routed-expert blocks the mesh 'model' axis
+    assigns it (the `_moe_ep_shard_map` layout — an expert's hot and
+    cold rows travel together) plus a uniform share of the pinned
+    shared-expert prefix."""
 
     def __init__(self, cfg):
         from repro.core.sparse_ffn import ffn_rows
@@ -122,8 +148,11 @@ class MoEStorageView:
         self.f = cfg.d_ff
         self.E = cfg.num_experts
         self.n_shared = cfg.num_shared_experts
+        self.S = cfg.num_shared_experts * cfg.d_ff
         self.n_neurons = cfg.moe_flat_neurons
-        self.cluster_size = cfg.d_ff
+        self.intra = bool(cfg.moe_intra_expert)
+        self.cluster_size = cfg.sparse_ffn.cluster_size if self.intra \
+            else cfg.d_ff
         self.rows = ffn_rows(cfg.activation)
 
     def bundles(self, params):
@@ -145,24 +174,92 @@ class MoEStorageView:
         # per-token prefill compute: shared + routed top-k experts
         return timing.d_ff * (self.n_shared + self.cfg.experts_per_token)
 
-    def trace_cold_ids(self, trace_l, n_hot: int):
-        counts = np.asarray(trace_l).reshape(-1)[:self.E]
-        act = np.nonzero(counts > 0)[0]
-        ids = (n_hot + act[:, None] * self.f
-               + np.arange(self.f)[None]).reshape(-1)
-        return ids[ids < self.n_neurons]
+    def _expert_hot(self, plan: HybridPlan) -> int:
+        return plan.n_expert_hot if plan is not None else 0
+
+    def trace_cold_ids(self, trace_l, plan: HybridPlan):
+        """Flat cold neuron ids for one layer's trace. A trace whose
+        shape disagrees with the stepped plan (wrong expert count,
+        wrong cold-cluster count for the plan's n_expert_hot) raises —
+        a shape mismatch means the data plane and the plan disagree
+        about the neuron space, and silently dropping ids would mask
+        it as under-priced I/O."""
+        tr = np.asarray(trace_l)
+        S, f, E, cs = self.S, self.f, self.E, self.cluster_size
+        n_hot_e = self._expert_hot(plan)
+        if n_hot_e:
+            ncc = (f - n_hot_e) // cs
+            if tr.shape != (E, 1 + ncc):
+                raise ValueError(
+                    f"two-level MoE trace shape {tr.shape} does not "
+                    f"match the stepped plan: expected (E, 1+ncc) = "
+                    f"({E}, {1 + ncc}) for n_expert_hot={n_hot_e}, "
+                    f"cluster_size={cs}, d_ff={f}")
+            act_e, act_c = np.nonzero(tr[:, 1:] > 0)
+            ids = (S + act_e[:, None] * f + n_hot_e
+                   + act_c[:, None] * cs
+                   + np.arange(cs)[None]).reshape(-1)
+        else:
+            counts = tr.reshape(-1)
+            if counts.shape[0] != E:
+                raise ValueError(
+                    f"MoE expert trace has {counts.shape[0]} entries "
+                    f"for {E} experts — the trace and the plan "
+                    f"disagree about the expert space")
+            act = np.nonzero(counts > 0)[0]
+            ids = (S + act[:, None] * f
+                   + np.arange(f)[None]).reshape(-1)
+        if ids.size and (ids.min() < 0 or ids.max() >= self.n_neurons):
+            raise ValueError(
+                f"MoE trace maps outside the flat neuron space "
+                f"[0, {self.n_neurons}) — ids span "
+                f"[{ids.min()}, {ids.max()}]")
+        return ids
+
+    def hot_ids(self, trace_l, plan: HybridPlan):
+        """The stepped hot set for systems without a pinned region:
+        the shared prefix plus, in two-level mode, the hot rows of the
+        experts the trace shows activated."""
+        n_hot_e = self._expert_hot(plan)
+        if not n_hot_e:
+            return np.arange(self.S)
+        tr = np.asarray(trace_l)
+        act = np.nonzero(tr[:, 0] > 0)[0]
+        hot = (self.S + act[:, None] * self.f
+               + np.arange(n_hot_e)[None]).reshape(-1)
+        return np.concatenate([np.arange(self.S), hot])
+
+    def warm_cold_ids(self, n_hot: int, count: int):
+        """Pre-warm ids for the cold caches. Whole-expert mode mirrors
+        the dense view (the cold region is flat after the shared
+        prefix); two-level mode interleaves experts offset-major — the
+        hot-first permutation makes the first cold cluster of *every*
+        expert more frequent than any second cluster."""
+        if not self.intra:
+            return np.arange(n_hot, min(n_hot + count, self.n_neurons))
+        # derive the per-expert pinned width from the plane's pinned
+        # prefix (n_hot = S + E*n_hot_e, possibly capacity-capped)
+        n_hot_e = max((n_hot - self.S) // max(self.E, 1), 0)
+        offs = np.arange(self.f - n_hot_e)
+        grid = (self.S + np.arange(self.E)[None, :] * self.f + n_hot_e
+                + offs[:, None])                    # (n_cold_e, E)
+        return grid.reshape(-1)[:count]
 
     def owner_of(self, ids, plan: HybridPlan, n_shards: int):
+        """Owning shard per flat id, following `_moe_ep_shard_map`:
+        contiguous expert blocks — ceil(E/n) experts per shard, the
+        last block clamped when E doesn't divide (so the non-divisible
+        fallback agrees with the divisible layout instead of
+        round-robining the pinned shared prefix) — and a uniform split
+        of the shared-expert prefix."""
         ids = np.asarray(ids)
-        n = n_shards
-        n_hot = plan.n_hot if plan is not None else self.n_shared * self.f
-        if self.E % n != 0:
-            return (ids // self.cluster_size) % n
-        e_loc = self.E // n
+        n, S = n_shards, self.S
+        e_loc = max(-(-self.E // n), 1)             # ceil: clamped blocks
+        expert = (ids - S) // self.f
         return np.where(
-            ids >= n_hot,
-            np.minimum((ids - n_hot) // (self.f * e_loc), n - 1),
-            (ids * n) // max(n_hot, 1))
+            ids >= S,
+            np.minimum(expert // e_loc, n - 1),
+            (ids * n) // max(S, 1))
 
 
 _VIEW_FAMILIES = {"dense": FFNStorageView, "vlm": FFNStorageView,
@@ -245,12 +342,19 @@ class StoragePlane:
                  = UFS40, offload_ratio: float = 0.5,
                  hw: HardwareProfile = None, timing: TimingProfile = None,
                  n_compute_workers: int = 4, prefetch: bool = True,
-                 n_shards: int = 1, view=None):
+                 n_shards: int = 1, n_replicas: int = 1, view=None):
         self.cfg = cfg
         self.spec = spec
         self.hw = hw or plan.hardware
         self.n_workers = n_compute_workers
         self.offload_ratio = offload_ratio
+        # Data-parallel accounting (DESIGN.md §5/§9): the host memory
+        # budget is one per machine, not one per replica — a plane that
+        # serves one of n_replicas 'data'-axis rows gets a 1/n share of
+        # the resident-neuron budget, the same way the 'model' axis
+        # splits each cache below. Total residency across replicas
+        # therefore never exceeds the single-engine budget.
+        self.n_replicas = max(int(n_replicas), 1)
         # Tensor-parallel accounting: device s owns the contiguous
         # neuron slice [s*N/n, (s+1)*N/n) — the same row split the mesh
         # 'model' axis applies to the bundled FFN tensor — with its own
@@ -284,11 +388,13 @@ class StoragePlane:
         # its per-token working set). Baseline systems stream *all*
         # activated neurons (hot included) through one LRU cache, with
         # bundling-redundancy derating (spec.cache_efficiency).
-        resident = int(N * (1.0 - offload_ratio))
+        resident = int(N * (1.0 - offload_ratio)) // self.n_replicas
         plan1 = plan.plan_for_batch(1)
         if spec.pinned_hot:
             hot_cap = (resident // 2) // self.cs * self.cs
-            self.n_hot = min(plan1.n_hot, max(hot_cap, self.cs))
+            # two-level MoE plans pin every expert's hot prefix
+            # (plan.n_pinned), not just the per-step computed hot
+            self.n_hot = min(plan1.resident_hot, max(hot_cap, self.cs))
             cold_capacity = max(resident - self.n_hot, self.cs) \
                 * cfg.num_layers
         else:
@@ -310,10 +416,13 @@ class StoragePlane:
                         hot_fraction=0.0,
                         bytes_per_neuron=self.bundle_bytes)
             for _ in range(self.n_shards)]
-        # warm each shard's cold cache with its most-frequent cold slice
+        # warm each shard's cold cache with its most-frequent cold
+        # slice (the family view orders the cold space — flat after
+        # the pinned prefix for dense/whole-expert, expert-interleaved
+        # for two-level MoE)
         per_layer = cold_capacity // cfg.num_layers
         for l in range(cfg.num_layers):
-            ids = np.arange(self.n_hot, min(self.n_hot + per_layer, N))
+            ids = self.view.warm_cold_ids(self.n_hot, per_layer)
             for s, part in enumerate(self._split_by_owner(ids, plan1)):
                 self.caches[s].admit_cold(l, list(part))
         for c in self.caches:
@@ -334,6 +443,16 @@ class StoragePlane:
     def cache(self):
         """Shard 0's cache — the whole cache when n_shards == 1."""
         return self.caches[0]
+
+    @property
+    def resident_capacity_neurons(self) -> int:
+        """Modeled resident footprint of this plane in neurons: the
+        pinned hot prefix across every layer plus each shard's cold
+        LRU capacity. Replica budgeting (DESIGN.md §9) guarantees the
+        sum over a routed engine's replicas stays within one engine's
+        budget."""
+        return self.n_hot * self.cfg.num_layers \
+            + sum(c.capacity for c in self.caches)
 
     def _split_by_owner(self, neuron_ids, plan: HybridPlan = None):
         """Partition global neuron ids by owning device shard,
@@ -445,12 +564,14 @@ class StoragePlane:
         are independent even though the modeled fetches run serially."""
         return [self._fetch_shard(l, m) for m in misses_per_shard]
 
-    def _trace_neuron_ids(self, trace_l, n_hot: int):
+    def _trace_neuron_ids(self, trace_l, plan: HybridPlan):
         """Map one layer's activation trace to global cold neuron ids
-        — the family view interprets its own trace shape (dense:
-        (G, kc) group-relative cluster ids; moe: (E,) kept-dispatch
-        counts). `n_hot` is the *stepped* plan's hot prefix."""
-        return self.view.trace_cold_ids(trace_l, n_hot)
+        — the family view interprets its own trace shape against the
+        *stepped* plan (dense: (G, kc) group-relative cluster ids;
+        moe: (E,) kept-dispatch counts or the two-level (E, 1+ncc)
+        form). A trace that disagrees with the plan's shape raises
+        instead of silently under-pricing."""
+        return self.view.trace_cold_ids(trace_l, plan)
 
     def step(self, trace, plan: HybridPlan, batch: int,
              ctx_len: float) -> TokenStats:
@@ -476,14 +597,14 @@ class StoragePlane:
         per_layer = []
         for l in range(L):
             if spec.use_predictor:
-                cold_ids = self._trace_neuron_ids(trace[l], plan.n_hot)
+                cold_ids = self._trace_neuron_ids(trace[l], plan)
                 if spec.pinned_hot:
                     neuron_ids = cold_ids       # hot prefix pinned: no I/O
                 else:
-                    # activated set = hot prefix + selected cold, all
+                    # activated set = hot set + selected cold, all
                     # streamed through the single cache
                     neuron_ids = np.concatenate(
-                        [np.arange(plan.n_hot), cold_ids])
+                        [self.view.hot_ids(trace[l], plan), cold_ids])
             else:
                 neuron_ids = np.arange(self.N)       # dense: everything
             parts = self._split_by_owner(neuron_ids, plan)

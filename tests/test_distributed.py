@@ -274,6 +274,74 @@ def test_expert_parallel_moe_decode_token_identical_4dev():
     assert "OK ep golden" in out
 
 
+def test_intra_expert_moe_decode_token_identical_4dev():
+    """The two-level golden (DESIGN.md §9): intra-expert decode —
+    per-expert hot/cold clusters, per-expert hot-first permutation,
+    (L, E, 1+ncc) trace — is token-identical to the dense-expert
+    decode at ep=1 AND over a 2-shard expert-parallel mesh (the
+    per-expert cold gathers stay shard-local; the trace blocks
+    all_gather in expert order), while per-shard raw I/O demand
+    shrinks vs the single-device plane."""
+    out = run_in_subprocess("""
+        from repro.configs import get_config
+        from repro.data.pipeline import DataConfig, SyntheticTokens
+        from repro.models.model import build_model
+        from repro.optim.adamw import AdamW
+        from repro.train.steps import make_train_step
+        from repro.launch.mesh import make_serving_mesh
+        from repro.serving.engine import ServeEngine
+        from repro.serving.families import serving_family
+
+        cfg = get_config("turbosparse-mixtral-47b").reduced()
+        model = build_model(cfg)
+        params = model.init(jax.random.key(0))
+        # brief training: real logit margins so greedy decode is
+        # robust to the permutation's fp reassociation noise (~1e-5)
+        opt = AdamW(lr=2e-3)
+        step = jax.jit(make_train_step(model, opt), donate_argnums=(0, 1))
+        state = opt.init(params)
+        data = SyntheticTokens(DataConfig(cfg.vocab_size, 64, 4, seed=0))
+        for _ in range(20):
+            params, state, _ = step(params, state, data.batch())
+
+        fam = serving_family(cfg)
+        plan = fam.build_plan(cfg)
+        assert all(p.n_expert_hot > 0 for p in plan.plans.values())
+        p_intra = fam.prepare_params(params, plan)
+        cfgw = cfg.replace(moe_intra_expert=False)
+        planw = serving_family(cfgw).build_plan(cfgw)
+
+        def run(c, pp, pl, mesh):
+            eng = ServeEngine(c, pp, pl, buckets=(1, 2), ctx_budget=48,
+                              temperature=0.0, seed=0, mesh=mesh)
+            rng = np.random.default_rng(0)
+            for i in range(3):
+                eng.submit(rng.integers(0, c.vocab_size, 16), max_new=6,
+                           arrival_time=i * 1e-3)
+            rep = eng.run_until_drained()
+            toks = {u: list(r.generated)
+                    for u, r in eng.sched.sequences.items()}
+            eng.close()
+            return rep, toks
+
+        # dense-expert reference (whole-expert plan, unpermuted params)
+        _, toks_ref = run(cfgw, params, planw, None)
+        rep1, toks1 = run(cfg, p_intra, plan, None)
+        assert toks1 == toks_ref, (toks1, toks_ref)
+        rep2, toks2 = run(cfg, p_intra, plan, make_serving_mesh(2))
+        assert toks2 == toks_ref, (toks2, toks_ref)
+        assert all(len(t) == 6 for t in toks1.values())
+        s1, s2 = rep1.stats[0], rep2.stats[0]
+        assert s1.n_shards == 1 and s1.shards is None
+        assert s2.n_shards == 2 and len(s2.shards) == 2
+        assert s2.io_s <= s1.io_s + 1e-12
+        assert abs(s2.io_total_s
+                   - sum(sh.io_s for sh in s2.shards)) < 1e-12
+        print("OK two-level ep golden", len(rep2.stats))
+    """, ndev=4, timeout=600)
+    assert "OK two-level ep golden" in out
+
+
 def test_data_parallel_replica_routing_token_identical_4dev():
     """The dp tentpole golden: over a (2, 1) mesh the engine routes
     the seeded arrival trace across two replicas and decodes

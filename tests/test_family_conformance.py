@@ -31,6 +31,15 @@ FAMILY_ARCHS = {
     "moe": "deepseek-moe-16b",
 }
 
+# additional archs that exercise a distinct serving mode of an
+# already-registered family (not a family of their own, so they ride
+# through the same battery without their own registry entry):
+# turbosparse = two-level MoE sparsity (intra-expert hot/cold clusters
+# + per-expert hot-first permutation, DESIGN.md §9)
+EXTRA_BATTERY_ARCHS = ("turbosparse-mixtral-47b",)
+
+BATTERY_ARCHS = sorted(FAMILY_ARCHS.values()) + list(EXTRA_BATTERY_ARCHS)
+
 
 def test_every_registered_family_is_in_the_battery():
     """The harness must cover exactly the registry: a family
@@ -49,13 +58,15 @@ def test_unregistered_family_raises_with_servable_set():
         serving_family(cfg)                    # names the servable set
 
 
-@pytest.fixture(scope="module", params=sorted(FAMILY_ARCHS))
+@pytest.fixture(scope="module", params=BATTERY_ARCHS)
 def family_setup(request):
-    """(family, cfg, params, plan, prompt) for one servable family,
-    built through the registry exactly as launch/serve.py builds it."""
-    family = request.param
-    cfg = get_config(FAMILY_ARCHS[family]).reduced()
-    assert cfg.family == family
+    """(family, cfg, params, plan, prompt) for one servable family
+    (plus the extra serving-mode archs), built through the registry
+    exactly as launch/serve.py builds it."""
+    cfg = get_config(request.param).reduced()
+    family = cfg.family
+    if request.param in FAMILY_ARCHS.values():
+        assert FAMILY_ARCHS[family] == request.param
     fam = serving_family(cfg)
     model = fam.make_model(cfg)
     params = model.init(jax.random.key(0))

@@ -1,0 +1,340 @@
+"""Two-level MoE sparsity (DESIGN.md §9): expert-level gating composed
+with intra-expert hot/cold neuron clusters — the paper's
+TurboSparse-Mixtral path.
+
+Covers the two-level `build_moe_plan` invariants (deterministic sweep
++ hypothesis property test), the per-expert hot-first permutation, the
+(E, 1+ncc) trace -> flat-neuron-id mapping (corrupted traces raise
+instead of silently under-pricing), expert-block shard ownership with
+non-divisible E, the ep=1 golden (intra-expert decode token-identical
+to dense-expert decode, with strictly cheaper cold I/O at batch 1),
+and the dp replica cache-budget split.
+"""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.baselines import POWERINFER2
+from repro.core.clusters import HybridPlan
+from repro.core.planner import build_moe_plan, moe_synthetic_frequencies, \
+    permute_moe_params
+from repro.serving.engine import ServeEngine
+from repro.serving.families import serving_family
+from repro.serving.storage_plane import MoEStorageView
+
+BASE = get_config("deepseek-moe-16b").reduced()
+CS = BASE.sparse_ffn.cluster_size
+
+
+def _check_plan(cfg):
+    plan = build_moe_plan(cfg)
+    E, k, f = cfg.num_experts, cfg.experts_per_token, cfg.d_ff
+    S = cfg.num_shared_experts * f
+    N = cfg.moe_flat_neurons
+    prev_act = 0
+    for b in sorted(plan.plans):
+        p = plan.plans[b]
+        n_act = min(max(int(round(E * (1.0 - (1.0 - k / E) ** b))),
+                        min(k, E)), E)
+        assert min(k, E) <= n_act <= E
+        assert n_act >= prev_act, "n_act must be nondecreasing in batch"
+        prev_act = n_act
+        assert p.n_hot + p.k_cold <= N
+        assert p.resident_hot >= p.n_hot
+        if cfg.moe_intra_expert:
+            h = p.n_expert_hot
+            assert h % CS == 0 and 0 <= h <= f - CS
+            assert p.n_hot == S + n_act * h
+            assert p.n_pinned == S + E * h
+            assert p.n_pinned <= N
+            assert p.cluster_size == CS
+            assert p.k_cold % n_act == 0
+            kc_e = p.k_cold // n_act
+            assert CS <= kc_e <= f - h
+        else:
+            assert p.n_hot == S and p.k_cold == n_act * f
+            assert p.n_expert_hot == 0 and p.cluster_size == f
+    # the flat order is a bijection per layer (identity shared prefix,
+    # per-expert hot-first blocks)
+    assert sorted(plan.neuron_order[0].tolist()) == list(range(N))
+    if S:
+        assert plan.neuron_order[0][:S].tolist() == list(range(S))
+    if cfg.moe_intra_expert:
+        for e in range(E):
+            blk = plan.neuron_order[0][S + e * f: S + (e + 1) * f]
+            assert sorted(blk.tolist()) == list(range(S + e * f,
+                                                      S + (e + 1) * f))
+
+
+def test_moe_plan_invariants_sweep():
+    for (E, k), s, m, intra in itertools.product(
+            [(1, 1), (2, 1), (4, 2), (6, 3), (8, 2)], (0, 1), (2, 16),
+            (False, True)):
+        _check_plan(BASE.replace(num_experts=E, experts_per_token=k,
+                                 num_shared_experts=s, d_ff=CS * m,
+                                 moe_intra_expert=intra))
+
+
+def test_moe_plan_invariants_property():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.data())
+    def run(data):
+        E = data.draw(st.integers(1, 8), label="E")
+        k = data.draw(st.integers(1, E), label="k")
+        s = data.draw(st.integers(0, 2), label="shared")
+        m = data.draw(st.integers(2, 8), label="d_ff/cs")
+        intra = data.draw(st.booleans(), label="intra")
+        _check_plan(BASE.replace(num_experts=E, experts_per_token=k,
+                                 num_shared_experts=s, d_ff=CS * m,
+                                 moe_intra_expert=intra))
+
+    run()
+
+
+def test_non_multiple_cluster_dff_raises():
+    cfg = BASE.replace(d_ff=CS * 2 + 1, moe_intra_expert=True)
+    with pytest.raises(ValueError, match="multiple of"):
+        build_moe_plan(cfg)
+
+
+def test_bad_frequency_shape_raises():
+    cfg = BASE.replace(moe_intra_expert=True)
+    with pytest.raises(ValueError, match="L, E\\*f"):
+        build_moe_plan(cfg, freqs=np.ones((cfg.num_layers, 7), np.float32))
+
+
+# ------------------------------------------------ trace -> flat ids ----
+
+def _two_level_cfg(E=2, shared=1, m=2):
+    return BASE.replace(num_experts=E, num_shared_experts=shared,
+                        experts_per_token=min(2, E), d_ff=CS * m,
+                        moe_intra_expert=True)
+
+
+def test_trace_cold_ids_two_level_mapping():
+    cfg = _two_level_cfg()                       # f=64, S=64, E=2
+    view = MoEStorageView(cfg)
+    f, S = cfg.d_ff, cfg.num_shared_experts * cfg.d_ff
+    plan = HybridPlan(n_hot=S + CS, k_cold=CS, cluster_size=CS,
+                      n_expert_hot=CS, n_pinned=S + 2 * CS)
+    ncc = (f - CS) // CS                         # 1 cold cluster/expert
+    trace = np.array([[3, 1], [0, 0]], np.int32)  # (E, 1+ncc)
+    ids = view.trace_cold_ids(trace, plan)
+    # expert 0's single cold cluster: rows [S + n_hot_e, S + f)
+    np.testing.assert_array_equal(ids, np.arange(S + CS, S + f))
+    # both experts active -> both cold blocks
+    trace = np.array([[3, 1], [2, 5]], np.int32)
+    ids = view.trace_cold_ids(trace, plan)
+    np.testing.assert_array_equal(
+        ids, np.concatenate([np.arange(S + CS, S + f),
+                             np.arange(S + f + CS, S + 2 * f)]))
+    # an active expert whose cold clusters all stayed inactive pays
+    # no cold I/O (its hot prefix is pinned)
+    assert view.trace_cold_ids(np.array([[4, 0], [0, 0]], np.int32),
+                               plan).size == 0
+
+
+def test_corrupted_trace_raises_two_level():
+    """A trace whose shape disagrees with the stepped plan (wrong
+    n_hot -> wrong cluster count, wrong expert count) must raise, not
+    silently drop ids as under-priced I/O."""
+    cfg = _two_level_cfg(m=4)                    # f=128, ncc=3 at h=CS
+    view = MoEStorageView(cfg)
+    S = cfg.num_shared_experts * cfg.d_ff
+    plan = HybridPlan(n_hot=S + CS, k_cold=CS, cluster_size=CS,
+                      n_expert_hot=CS, n_pinned=S + 2 * CS)
+    good = np.zeros((2, 4), np.int32)
+    view.trace_cold_ids(good, plan)              # shape matches: fine
+    with pytest.raises(ValueError, match="two-level MoE trace shape"):
+        view.trace_cold_ids(np.zeros((2, 3), np.int32), plan)  # wrong ncc
+    with pytest.raises(ValueError, match="two-level MoE trace shape"):
+        view.trace_cold_ids(np.zeros((3, 4), np.int32), plan)  # wrong E
+
+
+def test_corrupted_trace_raises_whole_expert():
+    cfg = _two_level_cfg().replace(moe_intra_expert=False)
+    view = MoEStorageView(cfg)
+    plan = HybridPlan(n_hot=cfg.d_ff, k_cold=cfg.d_ff,
+                      cluster_size=cfg.d_ff)
+    view.trace_cold_ids(np.array([1, 0], np.int32), plan)
+    with pytest.raises(ValueError, match="disagree about the expert"):
+        view.trace_cold_ids(np.array([1, 0, 2], np.int32), plan)
+
+
+# -------------------------------------------------- shard ownership ----
+
+def test_owner_of_non_divisible_expert_blocks():
+    """E % n_shards != 0 must mirror the divisible layout — clamped
+    contiguous expert blocks + a uniform shared-prefix split — instead
+    of round-robining every id (which scattered the pinned shared
+    prefix and disagreed with `_moe_ep_shard_map`)."""
+    cfg = _two_level_cfg(E=6, shared=1, m=2)     # f=64, S=64
+    f, S = cfg.d_ff, 64
+    for view in (MoEStorageView(cfg),
+                 MoEStorageView(cfg.replace(moe_intra_expert=False))):
+        ids = np.arange(view.n_neurons)
+        owner = view.owner_of(ids, None, 4)      # ceil(6/4) = 2/shard
+        # every expert block is wholly owned, blocks are contiguous
+        for e in range(6):
+            blk = owner[S + e * f: S + (e + 1) * f]
+            assert (blk == e // 2).all(), (e, set(blk.tolist()))
+        # the pinned shared prefix splits uniformly (not round-robin)
+        sh = owner[:S]
+        assert (np.diff(sh) >= 0).all()
+        assert set(sh.tolist()) == set(range(4))
+    # divisible case keeps the historical layout: E/n whole experts
+    view = MoEStorageView(_two_level_cfg(E=4, shared=1, m=2))
+    owner = view.owner_of(np.arange(view.n_neurons), None, 2)
+    for e in range(4):
+        blk = owner[S + e * f: S + (e + 1) * f]
+        assert (blk == e // 2).all()
+
+
+# ----------------------------------------------------- end to end ----
+
+@pytest.fixture(scope="module")
+def trained():
+    """Briefly-trained reduced TurboSparse-Mixtral: real logit margins
+    so greedy decode is robust to the per-expert permutation's fp
+    reassociation noise (~1e-5), mirroring the distributed goldens."""
+    from repro.data.pipeline import DataConfig, SyntheticTokens
+    from repro.models.model import build_model
+    from repro.optim.adamw import AdamW
+    from repro.train.steps import make_train_step
+    cfg = get_config("turbosparse-mixtral-47b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    opt = AdamW(lr=2e-3)
+    step = jax.jit(make_train_step(model, opt), donate_argnums=(0, 1))
+    state = opt.init(params)
+    data = SyntheticTokens(DataConfig(cfg.vocab_size, 64, 4, seed=0))
+    for _ in range(20):
+        params, state, _ = step(params, state, data.batch())
+    return cfg, params
+
+
+def test_permutation_preserves_moe_output(trained):
+    """The per-expert hot-first permutation is numerics-preserving:
+    MoE layer outputs match up to fp reassociation."""
+    from repro.models.moe import apply_moe_ffn
+    cfg, params = trained
+    plan = build_moe_plan(cfg)
+    p2 = permute_moe_params(params, plan.neuron_order)
+    x = jax.random.normal(jax.random.key(5), (4, cfg.d_model)) * 0.1
+    for l in range(cfg.num_layers):
+        l0 = jax.tree.map(lambda a: a[l], params["layers"]["moe"])
+        l1 = jax.tree.map(lambda a: a[l], p2["layers"]["moe"])
+        y0, _ = apply_moe_ffn(l0, x, cfg)
+        y1, _ = apply_moe_ffn(l1, x, cfg)
+        np.testing.assert_allclose(np.asarray(y0), np.asarray(y1),
+                                   atol=1e-4, rtol=1e-4)
+
+
+def _run_engine(cfg, params, plan, prompt, max_new=6):
+    eng = ServeEngine(cfg, params, plan, spec=POWERINFER2,
+                      offload_ratio=0.5, buckets=(1, 2), ctx_budget=32,
+                      temperature=0.0, seed=0)
+    res = eng.generate(prompt, max_new=max_new, temperature=0.0)
+    n_tok = sum(s.batch for s in res.stats)
+    bytes_tok = eng.coldstore.total_bytes / max(n_tok, 1)
+    eng.close()
+    return res, bytes_tok
+
+
+def test_intra_expert_golden_token_identical_and_cheaper(trained):
+    """The ep=1 golden: intra-expert decode (two-level plan, permuted
+    params) is token-identical to dense-expert decode (whole-expert
+    plan, unpermuted params) — the trace thresholds the same dense
+    GEMMs — and intra-expert pricing strictly reduces modeled
+    cold-store bytes/token at batch 1."""
+    cfg, params = trained
+    fam = serving_family(cfg)
+    plan = fam.build_plan(cfg)
+    assert all(p.n_expert_hot > 0 for p in plan.plans.values())
+    p_intra = fam.prepare_params(params, plan)
+    cfgw = cfg.replace(moe_intra_expert=False)
+    planw = serving_family(cfgw).build_plan(cfgw)
+    assert serving_family(cfgw).prepare_params(params, planw) is params
+
+    prompt = np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (2, 12)).astype(np.int32)
+    res_i, _ = _run_engine(cfg, p_intra, plan, prompt)
+    res_w, _ = _run_engine(cfgw, params, planw, prompt)
+    np.testing.assert_array_equal(res_i.tokens, res_w.tokens)
+    assert (res_i.tokens >= 0).all()
+
+    # batch 1: strictly fewer modeled cold-store bytes per token
+    _, b_i = _run_engine(cfg, p_intra, plan, prompt[:1])
+    _, b_w = _run_engine(cfgw, params, planw, prompt[:1])
+    assert b_i < b_w, (b_i, b_w)
+
+
+def test_two_level_trace_shape_and_content(trained):
+    """The traced decode emits (L, E, 1+ncc): column 0 the kept
+    dispatch counts, the rest real cold-cluster activations — an
+    expert with no kept tokens can't activate a cluster."""
+    cfg, params = trained
+    fam = serving_family(cfg)
+    plan_all = fam.build_plan(cfg)
+    p = fam.prepare_params(params, plan_all)
+    plan = plan_all.plan_for_batch(2)
+    model = fam.make_model(cfg)
+    prompt = np.random.default_rng(1).integers(
+        0, cfg.vocab_size, (2, 8)).astype(np.int32)
+    _, cache = model.prefill(p, {"tokens": prompt}, max_len=12)
+    step = fam.make_decode_step(cfg)
+    toks = jnp.asarray(np.array([[3], [5]], np.int32))
+    _, _, trace = step(p, toks, cache, plan, jnp.ones((2,), bool))
+    tr = np.asarray(trace)
+    ncc = (cfg.d_ff - plan.n_expert_hot) // plan.cluster_size
+    assert tr.shape == (cfg.num_layers, cfg.num_experts, 1 + ncc)
+    assert (tr >= 0).all()
+    kept = tr[:, :, 0]
+    assert (kept.sum(axis=1) == 2 * cfg.experts_per_token).all()
+    assert (tr[:, :, 1:].sum(axis=2)[kept == 0] == 0).all()
+    # a dead lane must not contribute: masking row 1 changes the trace
+    _, _, tr_masked = step(p, toks, cache, plan,
+                           jnp.asarray([True, False]))
+    km = np.asarray(tr_masked)[:, :, 0]
+    assert (km.sum(axis=1) == cfg.experts_per_token).all()
+
+
+# -------------------------------------------- dp replica budgeting ----
+
+def test_dp_replica_residency_within_one_budget():
+    """Satellite bugfix: with dp=N each replica's StoragePlane used to
+    claim the FULL resident budget, so modeled residency exceeded the
+    device budget N times over. Capacity now splits over the 'data'
+    axis like DESIGN.md §3 splits it over 'model'."""
+    cfg = get_config("smollm-135m").reduced()
+    fam = serving_family(cfg)
+    model = fam.make_model(cfg)
+    params = model.init(jax.random.key(0))
+    plan = fam.build_plan(cfg)
+    params = fam.prepare_params(params, plan)
+
+    def make(dp=None):
+        return ServeEngine(cfg, params, plan, buckets=(1, 2),
+                           ctx_budget=40, temperature=0.8, seed=0, dp=dp)
+
+    e1 = make()
+    budget = e1.storage.resident_capacity_neurons
+    assert budget == int(cfg.d_ff * 0.5) * cfg.num_layers
+    try:
+        for dp in (2, 4):
+            edp = make(dp=dp)
+            per = [r.storage.resident_capacity_neurons
+                   for r in edp.replicas]
+            assert sum(per) <= budget
+            assert sum(per) == budget    # even splits lose nothing
+            assert max(per) - min(per) <= per[0] // 4   # balanced
+            edp.close()
+    finally:
+        e1.close()
