@@ -1,36 +1,174 @@
-"""Kernel micro-bench: gathered-cluster FFN vs dense FFN vs jnp oracle
-(interpret mode on CPU — numbers are structural, not TPU wall time)."""
+"""Kernel roofline bench: XLA vs the fused Pallas cold path, per
+serving batch bucket (DESIGN.md §10).
+
+For every serving bucket the engine actually decodes at, this times —
+on the reduced smollm operating point the serving benches pin — the
+dense FFN, the hybrid FFN under both cold-path backends, and the
+cold-only path under both backends (the jnp score->top-k->gather chain
+vs the one-pallas_call fused kernel with double-buffered cluster DMA),
+asserting the two backends agree numerically while they race. Two
+plan legs per bucket: `op`, the serving operating point (Fig-2 scaled
+hot share, thin cold budget), and `deep`, a cold-heavy plan that keeps
+several clusters in flight so the kernel's c+1-fetch-overlaps-c-compute
+pipeline actually pipelines.
+
+Besides the CSV rows it emits the BENCH_kernels.json artifact (same
+--json convention as bench_serving) carrying per-bucket timings, the
+weight-traffic fraction (bytes the gather moves vs dense — the
+cold-path win the paper's Fig 6(b) pipeline banks on) and the
+KernelCalibration block (core/io_model.py): measured dense/sparse
+engine rates that replace HardwareProfile's hand-set constants, e.g.
+
+  PYTHONPATH=src python -m benchmarks.bench_kernels --json \
+      BENCH_kernels.json
+  PYTHONPATH=src python -m benchmarks.bench_serving --kernel-calibration \
+      BENCH_kernels.json ...
+
+On this CPU container the kernels run in interpret mode, so absolute
+times are structural, not TPU wall clock — the JSON's calibration
+`source` says so; on a real TPU the same harness measures real rates.
+"""
+import argparse
+import dataclasses
+import json
+import sys
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import emit, timeit
-from repro.kernels.ops import cluster_gather_ffn, dense_ffn
-from repro.kernels.ref import cluster_gather_ffn_ref, dense_ffn_ref
+from repro.configs import get_config
+from repro.core.clusters import make_plan, scale_plan_for_batch
+from repro.core.io_model import KernelCalibration
+from repro.core.sparse_ffn import ffn_dense, ffn_hybrid, init_ffn
+
+BUCKETS = (1, 2, 4, 8, 16, 32)
+TINY_BUCKETS = (1, 4)
 
 
-def main():
-    B, D, N, cs = 4, 256, 2048, 128
-    x = jax.random.normal(jax.random.key(0), (B, D)) * 0.5
-    w = jax.random.normal(jax.random.key(1), (N, 3, D)) * 0.1
-    idx = jnp.arange(4, dtype=jnp.int32)   # 4 of 16 clusters active
+def _legs(cfg):
+    """(leg name, base plan) pairs: the serving operating point and a
+    cold-heavy plan with a multi-cluster in-flight budget."""
+    cs = cfg.sparse_ffn.cluster_size
+    return (("op", make_plan(cfg.d_ff, 0.125, 0.10, cs)),
+            ("deep", make_plan(cfg.d_ff, 0.125, 0.50, cs)))
 
-    g = jax.jit(lambda: cluster_gather_ffn(
-        x, w, idx, activation="silu", cluster_size=cs))
-    gr = jax.jit(lambda: cluster_gather_ffn_ref(
-        x, w, idx, activation="silu", cluster_size=cs))
-    d = jax.jit(lambda: dense_ffn(x, w, activation="silu", block_n=cs))
-    dr = jax.jit(lambda: dense_ffn_ref(x, w, activation="silu"))
 
-    rows = []
-    for name, fn in (("kernel_gather_interp", g), ("ref_gather_jnp", gr),
-                     ("kernel_dense_interp", d), ("ref_dense_jnp", dr)):
-        us = timeit(lambda: jax.block_until_ready(fn()), n=5) * 1e6
-        rows.append((name, round(us, 1), "us/call CPU"))
-    # structural metric: bytes fetched by the gather vs dense
-    frac = idx.shape[0] * cs / N
-    rows.append(("gather_weight_traffic_fraction", round(float(frac), 3),
-                 "HBM->VMEM bytes vs dense (the cold-path win)"))
+def _flops(batch: int, n_neurons: int, R: int, D: int) -> float:
+    """MACs*2 for `n_neurons` bundled rows: R GEMVs of D each."""
+    return 2.0 * batch * n_neurons * R * D
+
+
+def bench_bucket(params, cfg, plan, batch: int, reps: int):
+    """Time every leg for one (bucket, plan); returns the JSON row."""
+    D, N = cfg.d_model, cfg.d_ff
+    R = params["w"].shape[1]
+    act, mode = cfg.activation, cfg.sparse_ffn.mode
+    x = jax.random.normal(jax.random.key(batch), (batch, D)) * 0.5
+    p_jnp = dataclasses.replace(plan, backend="jnp")
+    p_pal = dataclasses.replace(plan, backend="pallas")
+    cold_jnp = dataclasses.replace(p_jnp, n_hot=0)
+    cold_pal = dataclasses.replace(p_pal, n_hot=0)
+
+    fns = {
+        "t_dense_s": jax.jit(lambda: ffn_dense(params, x, act)),
+        "t_xla_hybrid_s": jax.jit(
+            lambda: ffn_hybrid(params, x, act, mode, p_jnp)),
+        "t_pallas_hybrid_s": jax.jit(
+            lambda: ffn_hybrid(params, x, act, mode, p_pal)),
+        "t_xla_cold_s": jax.jit(
+            lambda: ffn_hybrid(params, x, act, mode, cold_jnp)),
+        "t_pallas_cold_s": jax.jit(
+            lambda: ffn_hybrid(params, x, act, mode, cold_pal)),
+    }
+    row = {"batch": batch, "D": D, "N": N,
+           "cs": plan.cluster_size, "n_hot": plan.n_hot,
+           "k_cold": plan.k_cold,
+           "clusters_in_flight": plan.clusters_per_group}
+    for name, fn in fns.items():
+        row[name] = timeit(lambda: jax.block_until_ready(fn()),
+                           n=reps, warmup=1)
+    # the backends must agree while they race — a bench that silently
+    # compared a wrong kernel would calibrate garbage
+    np.testing.assert_allclose(np.asarray(fns["t_pallas_hybrid_s"]()),
+                               np.asarray(fns["t_xla_hybrid_s"]()),
+                               atol=1e-3, rtol=1e-3)
+
+    # structural roofline inputs: work + weight traffic per call
+    cold_total = cold_pal.total_cold        # gathered neurons, cold-only leg
+    bpe = np.dtype(np.asarray(params["w"]).dtype).itemsize
+    row.update(
+        dense_flops=_flops(batch, N, R, D),
+        cold_flops=_flops(batch, cold_total, R, D),
+        gather_bytes=float(cold_total * R * D * bpe),
+        # the cold-path win: fraction of the full weight bytes a decode
+        # step actually touches (dense hot prefix + gathered clusters)
+        weight_traffic_fraction=round(
+            (plan.n_hot + plan.total_cold) / N, 4),
+        gather_traffic_fraction=round(
+            plan.total_cold / max(N - plan.n_hot, 1), 4),
+    )
+    return row
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="smollm-135m",
+                    help="dense-family arch whose reduced config sets "
+                         "the (D, N, cs) operating point")
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: buckets (1, 4) only, fewer reps")
+    ap.add_argument("--json", default=None,
+                    help="write results JSON (BENCH_kernels.json "
+                         "artifact, incl. the io_model calibration)")
+    args = ap.parse_args(argv if argv is not None else sys.argv[1:]
+                         if __name__ == "__main__" else [])
+
+    cfg = get_config(args.arch).reduced()
+    D, N = cfg.d_model, cfg.d_ff
+    params = init_ffn(jax.random.key(0), D, N, cfg.activation, jnp.float32,
+                      predictor_rank=cfg.sparse_ffn.predictor_rank)
+    buckets = TINY_BUCKETS if args.tiny else BUCKETS
+    reps = 3 if args.tiny else 5
+    source = f"interpret-cpu jax {jax.__version__}" \
+        if jax.default_backend() != "tpu" else f"tpu jax {jax.__version__}"
+
+    rows, results = [], []
+    for leg, base in _legs(cfg):
+        for b in buckets:
+            plan = scale_plan_for_batch(base, N, b, cfg.sparse_ffn
+                                        .cluster_size)
+            r = bench_bucket(params, cfg, plan, b, reps)
+            r["leg"], r["source"] = leg, source
+            results.append(r)
+            tag = f"{leg}_b{b}"
+            rows.append((f"kernels_{tag}_xla_cold",
+                         round(r["t_xla_cold_s"] * 1e6, 1), "us/call CPU"))
+            rows.append((f"kernels_{tag}_pallas_cold",
+                         round(r["t_pallas_cold_s"] * 1e6, 1),
+                         f"us/call CPU ({r['clusters_in_flight']} "
+                         f"clusters in flight)"))
+            rows.append((f"kernels_{tag}_weight_traffic_fraction",
+                         r["weight_traffic_fraction"],
+                         "step bytes vs dense (the cold-path win)"))
+
+    calib = KernelCalibration.from_rows(results)
+    rows.append(("kernels_calibrated_dense_gflops",
+                 round(calib.dense_flops_per_s / 1e9, 3), calib.source))
+    rows.append(("kernels_calibrated_sparse_gflops",
+                 round(calib.sparse_flops_per_s / 1e9, 3), calib.source))
     emit(rows)
+
+    if args.json:
+        out = {"bench": "kernels", "arch": cfg.name, "tiny": bool(args.tiny),
+               "D": D, "N": N, "cs": cfg.sparse_ffn.cluster_size,
+               "activation": cfg.activation, "mode": cfg.sparse_ffn.mode,
+               "results": results,
+               "calibration": dataclasses.asdict(calib)}
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=1)
+        print(f"# wrote {args.json}")
     return rows
 
 

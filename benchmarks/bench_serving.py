@@ -75,13 +75,13 @@ def _request_stream(cfg, eng, n_requests, max_new_hi, seed=0):
 
 
 def run_spec(cfg, params, plan, spec, seed=0, mesh=None, n_requests=None,
-             max_new_hi=14, dp=None):
+             max_new_hi=14, dp=None, hw=None):
     from benchmarks.common import paper_timing
     from repro.serving.engine import ServeEngine
     eng = ServeEngine(cfg, params, plan, spec=spec, offload_ratio=0.5,
                       timing=paper_timing(cfg.family), buckets=BUCKETS,
                       ctx_budget=PROMPT_LEN + 16, temperature=0.8,
-                      mesh=mesh, dp=dp)
+                      mesh=mesh, dp=dp, hw=hw)
     _request_stream(cfg, eng, n_requests or N_REQUESTS, max_new_hi, seed)
     rep = eng.run_until_drained()
     assert not eng.sched.has_work
@@ -117,6 +117,12 @@ def main(argv=None):
                          "(deepseek — tp is the expert-parallel axis)")
     ap.add_argument("--json", default=None,
                     help="write results JSON (BENCH_*.json artifact)")
+    ap.add_argument("--kernel-calibration", default=None,
+                    help="BENCH_kernels.json from bench_kernels: price "
+                         "the storage plane with the HardwareProfile "
+                         "its measured kernel rates calibrate "
+                         "(core/io_model.KernelCalibration) instead of "
+                         "the hand-set constants")
     args = ap.parse_args(argv if argv is not None else sys.argv[1:]
                          if __name__ == "__main__" else [])
 
@@ -146,13 +152,23 @@ def main(argv=None):
                      "family": args.family,
                      "device_count": jax.device_count(), "results": []}
 
+    hw = None
+    if args.kernel_calibration:
+        from dataclasses import asdict
+        from repro.core.io_model import KernelCalibration
+        calib = KernelCalibration.from_bench_json(args.kernel_calibration)
+        hw = calib.hardware()
+        out["kernel_calibration"] = asdict(calib)
+        print(f"# storage plane priced with measured kernel rates: "
+              f"{hw.name}")
+
     # ---- part 1: spec comparison, single device --------------------------
     print(f"{'system':16s} {'dp':>3s} {'tp':>3s} {'tok/s':>10s} "
           f"{'span-tok/s':>10s} {'ttft-ms':>9s} {'p50-ms':>8s} "
           f"{'p90-ms':>8s} {'p99-ms':>8s} {'peak':>5s}")
     for spec in (LLAMACPP, POWERINFER2):
         eng, rep = run_spec(cfg, params, plan, spec, n_requests=n_req,
-                            max_new_hi=max_new_hi)
+                            max_new_hi=max_new_hi, hw=hw)
         s = _summary(eng, rep)
         print(f"{spec.name:16s} {1:3d} {1:3d} {s['tok_s']:10.1f} "
               f"{s['span_tok_s']:10.1f} {s['ttft_ms']:9.3f} "
@@ -195,7 +211,7 @@ def main(argv=None):
             mesh = make_serving_mesh(t, d) if d * t > 1 else None
             eng, rep = run_spec(cfg, params, grid_plan, POWERINFER2,
                                 mesh=mesh, n_requests=n_grid,
-                                max_new_hi=max_new_hi)
+                                max_new_hi=max_new_hi, hw=hw)
             s = _summary(eng, rep)
             eng.close()
             ident = s["tokens"] == tokens_ref.setdefault(d, s["tokens"])

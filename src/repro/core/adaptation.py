@@ -43,11 +43,17 @@ class BucketedDecoder:
     executable is traced and run inside that mesh context, so the
     sparse-FFN shard_map path and all sharding constraints bind to it —
     tensor-parallel and single-device executables coexist in the table.
+
+    `backend` ('jnp' | 'pallas' | None) overrides each bucket plan's
+    cold-path backend before tracing: every executable in the table
+    runs the chosen kernel path (DESIGN.md §10), regardless of how the
+    offline planner built the per-bucket plans.
     """
     plan_source: ExecutionPlan
     make_step: Callable[[HybridPlan], Callable]
     buckets: tuple = (1, 2, 4, 8, 16, 32)
     mesh: object = None
+    backend: str = None
     _cache: Dict[tuple, tuple] = field(default_factory=dict)
     switches: int = 0
     _last_key: tuple = ()
@@ -61,6 +67,9 @@ class BucketedDecoder:
         key = (b, mesh_key(self.mesh))
         if key not in self._cache:
             plan = self.plan_source.plan_for_batch(b)
+            if self.backend and plan.backend != self.backend:
+                import dataclasses
+                plan = dataclasses.replace(plan, backend=self.backend)
             fn = jax.jit(self.make_step(plan))
             if self.mesh is not None:
                 fn = self._bind_mesh(fn, self.mesh)

@@ -88,6 +88,68 @@ HOST_DMA = StorageModel(
 )
 
 
+# ------------------------------------------------ kernel calibration ----
+
+@dataclass(frozen=True)
+class KernelCalibration:
+    """Measured kernel throughput -> planner/storage-plane constants.
+
+    `HardwareProfile.dense_engine_flops` / `sparse_engine_flops` were
+    hand-set deployment constants; this closes the loop with the
+    *executed* kernels instead: `benchmarks/bench_kernels.py` times the
+    dense FFN and the fused cold-path kernel (score -> top-k ->
+    double-buffered gather -> FFN) per serving bucket, aggregates the
+    measured rates here, and writes the result into its
+    BENCH_kernels.json artifact. `hardware()` then produces the
+    HardwareProfile the storage plane prices with — on a real TPU the
+    same harness yields real device rates; on this CPU container the
+    rates are interpret-mode (structural, not wall-clock-representative,
+    which is why `source` is carried along and reported).
+    """
+    dense_flops_per_s: float       # measured dense (hot-prefix) engine
+    sparse_flops_per_s: float      # measured fused gathered cold path
+    gather_bytes_per_s: float      # weight bytes/s the cold path moved
+    source: str = "uncalibrated"   # e.g. "interpret-cpu jax 0.4.37"
+
+    @staticmethod
+    def from_rows(rows) -> "KernelCalibration":
+        """Aggregate per-bucket bench rows (dicts carrying
+        dense_flops/t_dense_s, cold_flops/t_pallas_cold_s and
+        gather_bytes) into one calibration: total work over total
+        measured time, so big buckets weigh proportionally."""
+        dense_t = sum(r["t_dense_s"] for r in rows)
+        cold_t = sum(r["t_pallas_cold_s"] for r in rows)
+        return KernelCalibration(
+            dense_flops_per_s=sum(r["dense_flops"] for r in rows)
+            / max(dense_t, 1e-12),
+            sparse_flops_per_s=sum(r["cold_flops"] for r in rows)
+            / max(cold_t, 1e-12),
+            gather_bytes_per_s=sum(r["gather_bytes"] for r in rows)
+            / max(cold_t, 1e-12),
+            source=rows[0].get("source", "uncalibrated") if rows
+            else "uncalibrated")
+
+    @staticmethod
+    def from_bench_json(path) -> "KernelCalibration":
+        """Load the calibration block a bench_kernels --json run wrote."""
+        import json
+        with open(path) as f:
+            obj = json.load(f)
+        return KernelCalibration(**obj["calibration"])
+
+    def hardware(self, base=None):
+        """A HardwareProfile whose engine rates are the measured ones
+        (seq/rand storage bandwidths and the attention window stay the
+        base profile's — they are storage-tier, not kernel, numbers)."""
+        from dataclasses import replace
+        from repro.core.planner import HardwareProfile  # lazy: no cycle
+        base = base or HardwareProfile()
+        return replace(base,
+                       name=f"{base.name}+kernels[{self.source}]",
+                       dense_engine_flops=self.dense_flops_per_s,
+                       sparse_engine_flops=self.sparse_flops_per_s)
+
+
 def with_core(model: StorageModel, core: str) -> StorageModel:
     """Paper Table 1: I/O throughput depends on the issuing core."""
     derate = {"big": 1.0, "mid": 0.94, "little": 0.71}[core]

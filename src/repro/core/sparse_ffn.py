@@ -13,10 +13,17 @@ Three compute paths:
                   cold clusters (§4.1.2). Cold neurons are re-densified
                   into MXU-aligned gathered tiles (TPU adaptation of the
                   paper's CPU sparse path — see DESIGN.md §2).
-  * Pallas backend — plan.backend='pallas' routes the cold gather
-                  through kernels/cluster_gather_ffn (scalar-prefetch
-                  HBM->VMEM cluster streaming = the paper's
-                  neuron-cluster-level I/O pipeline at VMEM granularity).
+  * Pallas backend — plan.backend='pallas' routes the WHOLE cold path
+                  (predictor score -> batch-union top-k -> cluster
+                  gather -> gated FFN, incl. CATS token gating) through
+                  one fused kernel, kernels/cluster_gather_ffn.
+                  fused_cold_ffn: in-kernel selection drives
+                  double-buffered HBM->VMEM cluster DMA — the paper's
+                  neuron-cluster-level I/O pipeline at VMEM granularity
+                  (DESIGN.md §10). Composes with the shard_map cold
+                  path below (each shard runs the kernel over its local
+                  groups) and selects the same clusters as the jnp
+                  backend bit-for-bit, so decode is token-identical.
 
 Distribution: the neuron dim is grouped as (groups, N/groups) with the
 group dim sharded over the mesh 'model' axis; predictor scoring, top-k
@@ -129,6 +136,18 @@ def _cold_path_shard_map(params, x, activation: str, mode: str,
     def local(xl, wcl, Al, Bl, maskl):
         # xl (B, D) replicated over model; wcl (g_loc*nc_g, cs, R, D)
         # local clusters; Bl (r, Nc_local) local predictor columns.
+        if plan.backend == "pallas":
+            # the fused kernel IS the shard-local math: selection never
+            # crosses groups, so running it over the shard's g_loc
+            # groups (same psum / id all_gather) keeps every mesh size
+            # token-identical to the jnp backend.
+            from repro.kernels import ops as kops
+            y, idx = kops.fused_cold_ffn(
+                xl, wcl.reshape(g_loc, nc_g, cs, R, D), Al, Bl,
+                activation=activation, mode=mode, kc=kc,
+                active_mask=maskl)
+            return (jax.lax.psum(y.astype(jnp.float32), "model"),
+                    jax.lax.all_gather(idx, "model").reshape(G, kc))
         h = jnp.einsum("bd,dr->br", xl.astype(jnp.float32),
                        Al.astype(jnp.float32))
         scores = jnp.einsum("br,rn->bn", h, Bl.astype(jnp.float32))
@@ -206,6 +225,23 @@ def ffn_hybrid(params, x, activation: str, mode: str, plan: HybridPlan,
         y += y_cold.astype(jnp.float32)
     elif n_cold > 0 and kc > 0 and "pred" in params:
         nc_g = n_cold // G // cs                      # cold clusters per group
+        if plan.backend == "pallas":
+            # the fused kernel computes scoring, batch-union top-k,
+            # gather, FFN and CATS token gating itself — same math as
+            # the jnp chain below (selection bit-identical, output
+            # within fp tolerance), one pallas_call per layer.
+            from repro.kernels import ops as kops
+            wc = w[n_hot:].reshape(G, nc_g, cs, R, D)
+            y_cold, cidx = kops.fused_cold_ffn(
+                x, wc, params["pred"]["A"],
+                params["pred"]["B"][:, n_hot:],
+                activation=activation, mode=mode, kc=kc,
+                active_mask=active_mask)
+            y += y_cold.astype(jnp.float32)
+            y = constrain(y.astype(x.dtype), P(BATCH, None))
+            if return_indices:
+                return y, cidx
+            return y
         scores = predict_scores(params["pred"], x)[:, n_hot:]   # (B, Nc) fp32
         # Batch union (paper fn.1: a neuron is active if any token in
         # the batch triggers it), then *cluster*-granular selection —
@@ -220,29 +256,24 @@ def ffn_hybrid(params, x, activation: str, mode: str, plan: HybridPlan,
         _, cidx = jax.lax.top_k(cscore, kc)                     # (G, kc)
         wc = w[n_hot:].reshape(G, nc_g, cs, R, D)
         wc = constrain(wc, P("model", None, None, None, None))
-        if plan.backend == "pallas":
-            from repro.kernels import ops as kops
-            y_cold = kops.cluster_gather_ffn_grouped(
-                x, wc, cidx, activation=activation)
+        gath = jnp.take_along_axis(
+            wc, cidx[:, :, None, None, None], axis=1)   # (G,kc,cs,R,D)
+        gath = gath.reshape(G, kc * cs, R, D)
+        act = activation_fn(activation)
+        g = jnp.einsum("bd,gkd->bgk", x, gath[:, :, 0])
+        if R == 3:
+            u = jnp.einsum("bd,gkd->bgk", x, gath[:, :, 1])
+            h = act(g) * u
         else:
-            gath = jnp.take_along_axis(
-                wc, cidx[:, :, None, None, None], axis=1)   # (G,kc,cs,R,D)
-            gath = gath.reshape(G, kc * cs, R, D)
-            act = activation_fn(activation)
-            g = jnp.einsum("bd,gkd->bgk", x, gath[:, :, 0])
-            if R == 3:
-                u = jnp.einsum("bd,gkd->bgk", x, gath[:, :, 1])
-                h = act(g) * u
-            else:
-                h = act(g)
-            if mode == "cats":
-                # CATS-style (§7.2.5): gate each token's contribution by
-                # its own predicted activation for the selected neurons.
-                tok = scores.reshape(B, G, nc_g, cs)
-                tok = jnp.take_along_axis(
-                    tok, cidx[None, :, :, None], axis=2)    # (B,G,kc,cs)
-                h = h * (tok.reshape(B, G, kc * cs) > 0.0).astype(h.dtype)
-            y_cold = jnp.einsum("bgk,gkd->bd", h.astype(w.dtype), gath[:, :, -1])
+            h = act(g)
+        if mode == "cats":
+            # CATS-style (§7.2.5): gate each token's contribution by
+            # its own predicted activation for the selected neurons.
+            tok = scores.reshape(B, G, nc_g, cs)
+            tok = jnp.take_along_axis(
+                tok, cidx[None, :, :, None], axis=2)    # (B,G,kc,cs)
+            h = h * (tok.reshape(B, G, kc * cs) > 0.0).astype(h.dtype)
+        y_cold = jnp.einsum("bgk,gkd->bd", h.astype(w.dtype), gath[:, :, -1])
         y += y_cold.astype(jnp.float32)
 
     y = constrain(y.astype(x.dtype), P(BATCH, None))

@@ -1,13 +1,26 @@
-"""Pallas TPU kernel: gathered neuron-cluster FFN (the paper's cold path).
+"""Pallas TPU kernels: gathered neuron-cluster FFN (the paper's cold path).
 
-The TPU-native form of PowerInfer-2's neuron-cluster pipeline (§4.3):
-the grid walks the *active* clusters selected by the predictor; a
-scalar-prefetched index vector drives each BlockSpec's index_map, so
-the Pallas pipeline DMA-streams exactly the activated clusters from
-HBM ("flash" analogue) into VMEM ("DRAM" analogue) while the MXU
-computes the previous cluster — compute/I-O overlap at cluster
-granularity, which is precisely Fig 6(b) one level down the memory
-hierarchy.
+The TPU-native form of PowerInfer-2's neuron-cluster pipeline (§4.3),
+in two tiers:
+
+* `cluster_gather_ffn` — gather-only: a scalar-prefetched index vector
+  drives each BlockSpec's index_map, so the Pallas pipeline DMA-streams
+  exactly the activated clusters from HBM ("flash" analogue) into VMEM
+  ("DRAM" analogue) while the MXU computes the previous cluster.
+  Selection (predictor score -> top-k) still happens outside, in XLA.
+
+* `fused_cold_ffn` — the whole cold path in ONE pallas_call: predictor
+  scoring, batch-union top-k cluster selection, cluster gather and the
+  gated FFN GEMMs. Selection has to live *inside* the kernel here, so
+  the automatic scalar-prefetch pipeline can't drive the gather;
+  instead the kernel keeps the selected ids in SMEM and issues its own
+  double-buffered `make_async_copy` fetches from HBM-resident weights —
+  the DMA for cluster c+1 is started before the MXU computes cluster c
+  (wait -> compute -> already-running copy), which is exactly Fig 6(b)
+  one level down the memory hierarchy and the kernel analogue of the
+  storage plane's PrefetchExecutor. The grid walks neuron groups, so
+  under shard_map each 'model' shard runs the same kernel over its
+  local groups.
 
 Weight layout matches the cold store: bundled (N, R, D) with R rows per
 neuron (Gate/Up/Down) so one block fetch brings a whole cluster bundle
@@ -27,6 +40,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.compat import pallas_tpu_compiler_params
+from repro.models.modules import activation_fn
 
 # Renamed TPUCompilerParams -> CompilerParams across jax releases; the
 # compat module resolves whichever this install provides.
@@ -95,3 +109,148 @@ def cluster_gather_ffn(x, w, cluster_idx, *, activation: str,
             dimension_semantics=("arbitrary",)),
     )(cluster_idx, x, w_blocked)
     return out.astype(x.dtype)
+
+
+# --------------------------------------------------- fused cold path ----
+
+# Masked rows must lose every batch-union max without poisoning the
+# degenerate all-masked case: with -inf the iterative argmax below would
+# keep re-selecting index 0, while jax.lax.top_k over an all--inf
+# vector yields the distinct ids [0, 1, ...]. finfo.min sits below any
+# finite score yet above the -inf a selected entry is knocked down to,
+# so both paths pick identical ids in every case.
+_NEG = float(jnp.finfo(jnp.float32).min)
+
+
+def _fused_kernel(x_ref, w_hbm, a_ref, b_ref, mask_ref, y_ref, idx_ref, *,
+                  activation: str, gated: bool, cats: bool,
+                  kc: int, nc_g: int, cs: int):
+    """One grid step = one neuron group: score -> top-k -> gathered FFN.
+
+    x_ref (B, D) VMEM; w_hbm (G*nc_g*cs, R, D) stays in HBM (ANY) —
+    clusters are pulled in by explicit double-buffered DMA; a_ref
+    (D, r) / b_ref (r, nc_g*cs) the predictor slice for this group;
+    mask_ref (B, 1) live-row mask; y_ref (B, D) fp32 accumulator over
+    groups; idx_ref (G, kc) SMEM selected-cluster output.
+    """
+    g = pl.program_id(0)
+
+    @pl.when(g == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    def body(buf, sem):
+        x = x_ref[...]                                    # (B, D)
+        # -- predictor scoring (fp32, matching core.predictor) --
+        h = jax.lax.dot_general(
+            x.astype(jnp.float32), a_ref[...].astype(jnp.float32),
+            (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        scores = jax.lax.dot_general(
+            h, b_ref[...].astype(jnp.float32),
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)           # (B, nc_g*cs)
+        # -- batch-union cluster scores (paper fn.1 + §3.1) --
+        union = jnp.where(mask_ref[...] > 0.0, scores, _NEG).max(axis=0)
+        cscore = union.reshape(nc_g, cs).max(axis=-1)     # (nc_g,)
+
+        # -- iterative top-k: argmax + knock-out reproduces
+        #    jax.lax.top_k exactly (ties resolve to the lowest index) --
+        def select(k, sc):
+            c = jnp.argmax(sc).astype(jnp.int32)
+            idx_ref[g, k] = c
+            return sc.at[c].set(-jnp.inf)
+        jax.lax.fori_loop(0, kc, select, cscore, unroll=True)
+
+        # -- double-buffered gather + gated FFN --
+        def cluster_dma(slot, k):
+            c = idx_ref[g, k]
+            row = (g * nc_g + c) * cs
+            return pltpu.make_async_copy(
+                w_hbm.at[pl.ds(row, cs)], buf.at[slot], sem.at[slot])
+
+        cluster_dma(0, 0).start()                         # warm-up fetch
+        act = activation_fn(activation)
+
+        def compute(k, _):
+            slot = jax.lax.rem(k, 2)
+
+            @pl.when(k + 1 < kc)
+            def _prefetch():                              # overlap: c+1 DMA
+                cluster_dma(jax.lax.rem(k + 1, 2), k + 1).start()
+
+            cluster_dma(slot, k).wait()
+            wk = buf[slot]                                # (cs, R, D)
+            gg = jax.lax.dot_general(
+                x, wk[:, 0], (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32)       # (B, cs)
+            hh = act(gg)
+            if gated:
+                u = jax.lax.dot_general(
+                    x, wk[:, 1], (((1,), (1,)), ((), ())),
+                    preferred_element_type=jnp.float32)
+                hh = hh * u
+            if cats:
+                # CATS token gating: each token keeps only neurons its
+                # OWN predicted activation marks positive (§7.2.5) —
+                # the batch union steers selection, not computation.
+                c = idx_ref[g, k]
+                tok = jax.lax.dynamic_slice(
+                    scores, (0, c * cs), (scores.shape[0], cs))
+                hh = hh * (tok > 0.0).astype(hh.dtype)
+            wd = wk[:, -1]
+            y_ref[...] += jax.lax.dot_general(
+                hh.astype(wd.dtype), wd, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            return 0
+
+        jax.lax.fori_loop(0, kc, compute, 0)
+
+    pl.run_scoped(
+        body,
+        buf=pltpu.VMEM((2, cs) + w_hbm.shape[1:], w_hbm.dtype),
+        sem=pltpu.SemaphoreType.DMA((2,)))
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "activation", "cluster_size", "groups", "kc", "cats", "interpret"))
+def fused_cold_ffn(x, w, A, Bp, mask, *, activation: str, cluster_size: int,
+                   groups: int, kc: int, cats: bool = False,
+                   interpret: bool = True):
+    """Fused cold path: score -> top-k -> gather -> FFN in one pallas_call.
+
+    x (B, D); w (G*nc_g*cs, R, D) group-major cold bundles (HBM-resident
+    — never staged through the block pipeline); A (D, r) / Bp
+    (r, G*nc_g*cs) the cold predictor slice; mask (B, 1) float live-row
+    mask (1.0 = row steers the batch union).
+
+    Returns (y (B, D) fp32, idx (groups, kc) int32) — bitwise the same
+    selection as the jnp path's jax.lax.top_k chain.
+    """
+    B, D = x.shape
+    Ntot, R, _ = w.shape
+    assert Ntot % (groups * cluster_size) == 0
+    nc_g = Ntot // (groups * cluster_size)
+    assert 1 <= kc <= nc_g
+    r = A.shape[1]
+    y, idx = pl.pallas_call(
+        functools.partial(_fused_kernel, activation=activation,
+                          gated=R == 3, cats=cats, kc=kc, nc_g=nc_g,
+                          cs=cluster_size),
+        grid=(groups,),
+        in_specs=[
+            pl.BlockSpec((B, D), lambda g: (0, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),        # weights stay HBM
+            pl.BlockSpec((D, r), lambda g: (0, 0)),
+            pl.BlockSpec((r, nc_g * cluster_size),
+                         lambda g: (0, g)),              # group's pred cols
+            pl.BlockSpec((B, 1), lambda g: (0, 0)),
+        ],
+        out_specs=(pl.BlockSpec((B, D), lambda g: (0, 0)),
+                   pl.BlockSpec(memory_space=pltpu.SMEM)),
+        out_shape=(jax.ShapeDtypeStruct((B, D), jnp.float32),
+                   jax.ShapeDtypeStruct((groups, kc), jnp.int32)),
+        interpret=interpret,
+        compiler_params=CompilerParams(
+            dimension_semantics=("arbitrary",)),
+    )(x, w, A, Bp, mask)
+    return y, idx

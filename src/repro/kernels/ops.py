@@ -1,8 +1,9 @@
 """Jitted public wrappers for the Pallas kernels.
 
-`interpret` defaults to True because this container is CPU-only; on a
-real TPU pass interpret=False (the kernels are written for TPU:
-MXU-aligned blocks, VMEM-resident accumulators, scalar-prefetch DMA).
+`interpret` defaults to "not on a TPU" (this container is CPU-only);
+on a real TPU the kernels compile as written: MXU-aligned blocks,
+VMEM-resident accumulators, scalar-prefetch / manual double-buffered
+DMA.
 """
 from __future__ import annotations
 
@@ -11,8 +12,13 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.cluster_gather_ffn import cluster_gather_ffn
+from repro.kernels.cluster_gather_ffn import cluster_gather_ffn, \
+    fused_cold_ffn as _fused_cold_ffn_call
 from repro.kernels.dense_ffn import dense_ffn
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
 
 
 def cluster_gather_ffn_grouped(x, wc, cidx, *, activation: str,
@@ -34,4 +40,33 @@ def cluster_gather_ffn_grouped(x, wc, cidx, *, activation: str,
                               cluster_size=cs, interpret=interpret)
 
 
-__all__ = ["cluster_gather_ffn", "cluster_gather_ffn_grouped", "dense_ffn"]
+def fused_cold_ffn(x, wc, A, Bp, *, activation: str, mode: str = "relu",
+                   kc: int, active_mask=None, interpret: bool = None):
+    """Fused cold path (kernels/cluster_gather_ffn.fused_cold_ffn):
+    predictor score -> batch-union top-k -> double-buffered cluster
+    gather -> gated FFN, one pallas_call.
+
+    x (B, D); wc (G, nc_g, cs, R, D) cold clusters per group; A (D, r)
+    and Bp (r, G*nc_g*cs) the predictor's cold slice; kc clusters kept
+    per group. `mode == "cats"` applies the per-token score gating the
+    jnp backend applies (§7.2.5); `active_mask` (B,) bool keeps dead
+    KV-arena lanes out of the batch union. Returns
+    (y (B, D) fp32, cidx (G, kc) int32) — the same selection the jnp
+    top_k chain makes, so the two backends decode token-identically.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
+    G, nc_g, cs, R, D = wc.shape
+    B = x.shape[0]
+    if active_mask is None:
+        mask = jnp.ones((B, 1), jnp.float32)
+    else:
+        mask = active_mask.astype(jnp.float32).reshape(B, 1)
+    return _fused_cold_ffn_call(
+        x, wc.reshape(G * nc_g * cs, R, D), A, Bp, mask,
+        activation=activation, cluster_size=cs, groups=G, kc=kc,
+        cats=mode == "cats", interpret=interpret)
+
+
+__all__ = ["cluster_gather_ffn", "cluster_gather_ffn_grouped",
+           "fused_cold_ffn", "dense_ffn"]

@@ -45,7 +45,8 @@ FAMILY_ARCHS = default_archs()
 
 def build_engine(arch: str, reduced: bool = True, offload: float = 0.5,
                  spec=POWERINFER2, storage=UFS40, profile: bool = False,
-                 seed: int = 0, tp: int = 1, dp: int = 1, **engine_kwargs):
+                 seed: int = 0, tp: int = 1, dp: int = 1,
+                 backend: str = "jnp", **engine_kwargs):
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
@@ -60,8 +61,13 @@ def build_engine(arch: str, reduced: bool = True, offload: float = 0.5,
                                       cfg.vocab_size) for i in range(4)]
         counts, n_tok = profile_activations(params, cfg, batches)
         freqs = (counts / n_tok).astype(np.float32)
-    plan = fam.build_plan(cfg, freqs)
+    plan = fam.build_plan(cfg, freqs, backend=backend)
     params = fam.prepare_params(params, plan)
+    if backend != "jnp":
+        # the decoder also gets the override so per-bucket plans the
+        # planner (or a bench) pinned later still trace the chosen
+        # kernel path
+        engine_kwargs.setdefault("backend", backend)
     if tp > 1 and "mesh" not in engine_kwargs:
         from repro.launch.mesh import make_serving_mesh
         engine_kwargs["mesh"] = make_serving_mesh(tp, dp)
@@ -98,6 +104,11 @@ def main():
                          "shard owns E/ep experts)")
     ap.add_argument("--dp", type=int, default=1,
                     help="data-parallel replicas (mesh 'data' axis)")
+    ap.add_argument("--backend", choices=("jnp", "pallas"), default="jnp",
+                    help="cold-path kernel backend: 'pallas' runs the "
+                         "fused score->top-k->gather->FFN kernel "
+                         "(interpret mode off-TPU; DESIGN.md §10); "
+                         "decode is token-identical either way")
     args = ap.parse_args()
 
     arch = args.arch or FAMILY_ARCHS[args.family]
@@ -111,9 +122,12 @@ def main():
                      f"'model' axis; pass one")
         tp = args.ep
     storage = HOST_DMA if args.host_dma else UFS40
+    if args.backend == "pallas" and get_config(arch).num_experts:
+        ap.error("--backend pallas is the dense-family fused cold-path "
+                 "kernel; the moe family has no pallas backend")
     engine, cfg = build_engine(arch, args.reduced, args.offload,
                                storage=storage, profile=True, tp=tp,
-                               dp=args.dp)
+                               dp=args.dp, backend=args.backend)
     rng = np.random.default_rng(0)
     prompt = rng.integers(0, cfg.vocab_size,
                           (args.bon, args.prompt_len)).astype(np.int32)

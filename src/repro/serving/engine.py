@@ -187,10 +187,25 @@ class ServeEngine:
                  prefetch: bool = True,
                  mesh=None,
                  dp: int = None,
-                 n_replicas: int = 1):
+                 n_replicas: int = 1,
+                 backend: str = None):
         # family registry lookup (DESIGN.md §8): raises with the
         # servable set named when cfg.family has no entry
         self.family = serving_family(cfg)
+        # cold-path kernel backend override, threaded per bucket into
+        # the decoder's executable table (DESIGN.md §10). The moe cold
+        # path is expert dispatch, not a cluster gather — no pallas
+        # kernel exists for it, so refuse loudly instead of silently
+        # serving the jnp path under a 'pallas' label.
+        if backend not in (None, "jnp", "pallas"):
+            raise ValueError(f"unknown cold-path backend {backend!r}; "
+                             f"expected 'jnp' or 'pallas'")
+        if backend == "pallas" and cfg.num_experts:
+            raise ValueError(
+                "backend='pallas' is the dense-family fused cold-path "
+                "kernel; the moe family's cold path is expert dispatch "
+                "(models/moe.py) and has no pallas backend yet")
+        self.backend = backend
         self.cfg = cfg
         self.plan = plan
         self.spec = spec
@@ -230,7 +245,7 @@ class ServeEngine:
                             buckets=buckets, ctx_budget=ctx_budget,
                             eos_id=eos_id, temperature=temperature,
                             prefetch=prefetch, mesh=subs[r],
-                            n_replicas=n_data)
+                            n_replicas=n_data, backend=backend)
                 for r in range(n_data)]
             if subs[0] is None:
                 # meshless replicas run identical executables on the
@@ -272,7 +287,7 @@ class ServeEngine:
             make_step=lambda p: (lambda pr, t, c, m: self._step_traced(
                 pr, t, c, p, m)),
             buckets=tuple(buckets) if buckets else tuple(range(1, 65)),
-            mesh=mesh)
+            mesh=mesh, backend=backend)
 
         # ---- storage plane ----
         self.storage = StoragePlane(

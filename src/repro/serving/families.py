@@ -15,9 +15,12 @@ four family-specific pieces of the stack:
   kept-dispatch expert counts, or the two-level (L, E, 1+ncc) form
   when cfg.moe_intra_expert prices hot/cold clusters *inside* each
   expert — DESIGN.md §9);
-* `build_plan(cfg, freqs=None, hw=None)` — the ExecutionPlan the
-  bucketed decoder and storage plane consume (dense: the offline
-  hot-first planner; moe: experts-as-clusters, `build_moe_plan`);
+* `build_plan(cfg, freqs=None, hw=None, backend="jnp")` — the
+  ExecutionPlan the bucketed decoder and storage plane consume (dense:
+  the offline hot-first planner; moe: experts-as-clusters,
+  `build_moe_plan`). `backend` picks the cold-path kernel the
+  per-bucket plans carry ('jnp' | 'pallas', DESIGN.md §10); moe
+  raises on 'pallas' (its cold path is expert dispatch);
 * `prepare_params(params, plan)` — the offline weight transform
   (dense: hot-first neuron permutation; moe: identity for
   whole-expert plans — the architecture already makes clusters
@@ -48,7 +51,8 @@ class ServingFamily:
     family: str
     make_model: Callable           # (cfg) -> models.dense.Model
     make_decode_step: Callable     # (cfg) -> traced serving decode fn
-    build_plan: Callable           # (cfg, freqs=None, hw=None) -> ExecutionPlan
+    build_plan: Callable           # (cfg, freqs=None, hw=None,
+                                   #  backend="jnp") -> ExecutionPlan
     prepare_params: Callable       # (params, plan) -> params
     default_arch: str = ""         # the family's representative config
 
@@ -84,9 +88,9 @@ def serving_family(cfg) -> ServingFamily:
 
 # ------------------------------------------------- built-in families ----
 
-def _dense_build_plan(cfg, freqs=None, hw=None):
+def _dense_build_plan(cfg, freqs=None, hw=None, backend="jnp"):
     from repro.core.planner import build_plan
-    return build_plan(cfg, freqs, hw=hw)
+    return build_plan(cfg, freqs, hw=hw, backend=backend)
 
 
 def _dense_prepare(params, plan):
@@ -107,9 +111,13 @@ def _dense_family(name: str, arch: str) -> ServingFamily:
     )
 
 
-def _moe_build_plan(cfg, freqs=None, hw=None):
+def _moe_build_plan(cfg, freqs=None, hw=None, backend="jnp"):
     # freqs: within-expert activation frequencies (L, E*f) for the
     # two-level plan (cfg.moe_intra_expert); ignored for whole-expert
+    if backend not in (None, "jnp"):
+        raise ValueError(
+            f"moe has no {backend!r} cold-path backend: its cold path "
+            f"is expert dispatch (models/moe.py), not a cluster gather")
     from repro.core.planner import build_moe_plan
     return build_moe_plan(cfg, freqs, hw=hw)
 

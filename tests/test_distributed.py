@@ -30,11 +30,15 @@ def run_in_subprocess(body: str, timeout=420, ndev=8):
     return r.stdout
 
 
-def test_shard_map_cold_path_matches_local_8dev():
-    """The shard-local cold path must reproduce the single-device math
-    — output within tolerance, selected cluster ids identical — for
-    every mesh whose 'model' size divides the plan's groups."""
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_shard_map_cold_path_matches_local_8dev(backend):
+    """The shard-local cold path must reproduce the single-device jnp
+    math — output within tolerance, selected cluster ids identical —
+    for every mesh whose 'model' size divides the plan's groups, under
+    both cold-path backends (pallas = the fused kernel, interpret mode,
+    running inside the shard_map body — DESIGN.md §10)."""
     out = run_in_subprocess("""
+        import dataclasses
         from repro.core.sparse_ffn import init_ffn, ffn_hybrid
         from repro.core.clusters import HybridPlan
         D, N, cs, G = 64, 512, 32, 4
@@ -42,8 +46,10 @@ def test_shard_map_cold_path_matches_local_8dev():
                           predictor_rank=16)
         x = jax.random.normal(jax.random.key(1), (2, D)) * 0.5
         plan = HybridPlan(n_hot=128, k_cold=64, groups=G, cluster_size=cs)
+        # reference is always the single-device jnp chain
         y_local, cidx_local = ffn_hybrid(params, x, "relu2", "relu", plan,
                                          return_indices=True)
+        plan = dataclasses.replace(plan, backend=%r)
         for nd, nm in ((2, 4), (2, 2), (1, 4)):
             mesh = make_mesh((nd, nm), ("data", "model"),
                              axis_types=(AxisType.Auto,) * 2,
@@ -62,7 +68,7 @@ def test_shard_map_cold_path_matches_local_8dev():
             np.testing.assert_array_equal(np.asarray(cidx),
                                           np.asarray(cidx_local))
         print("OK shard_map")
-    """)
+    """ % backend)
     assert "OK shard_map" in out
 
 
@@ -170,10 +176,10 @@ def test_tensor_parallel_decode_token_identical_4dev():
                       for b in (1, 2, 4, 8)}
         params = permute_ffn_params(params, plan.neuron_order)
 
-        def run(mesh):
+        def run(mesh, backend=None):
             eng = ServeEngine(cfg, params, plan, buckets=(1, 2, 4),
                               ctx_budget=48, temperature=0.0, seed=0,
-                              mesh=mesh)
+                              mesh=mesh, backend=backend)
             rng = np.random.default_rng(0)
             for i in range(3):
                 eng.submit(rng.integers(0, cfg.vocab_size, 16), max_new=8,
@@ -188,6 +194,12 @@ def test_tensor_parallel_decode_token_identical_4dev():
         rep4, toks4 = run(make_serving_mesh(4))
         assert toks1 == toks4, (toks1, toks4)
         assert all(len(t) == 8 for t in toks1.values())
+        # the fused pallas cold path (DESIGN.md §10) decodes the same
+        # tokens as jnp, single-device and under the tp=4 mesh
+        _, toksp1 = run(None, backend="pallas")
+        assert toksp1 == toks1, (toksp1, toks1)
+        _, toksp4 = run(make_serving_mesh(4), backend="pallas")
+        assert toksp4 == toks1, (toksp4, toks1)
         s1, s4 = rep1.stats[0], rep4.stats[0]
         assert s1.n_shards == 1 and s1.shards is None
         assert s4.n_shards == 4 and len(s4.shards) == 4
@@ -389,10 +401,10 @@ def test_data_parallel_replica_routing_token_identical_4dev():
         reqs = [(rng.integers(0, cfg.vocab_size, 16),
                  6, i * 1e-6) for i in range(4)]
 
-        def make(mesh=None, dp=None):
+        def make(mesh=None, dp=None, backend=None):
             return ServeEngine(cfg, params, plan, buckets=(1, 2),
                                ctx_budget=48, temperature=0.0, seed=0,
-                               mesh=mesh, dp=dp)
+                               mesh=mesh, dp=dp, backend=backend)
 
         def serve(eng, stream):
             uids = [eng.submit(p, m, arrival_time=t) for p, m, t in stream]
@@ -437,6 +449,14 @@ def test_data_parallel_replica_routing_token_identical_4dev():
         assert toks_grid == toks_dp, (toks_grid, toks_dp)
         assert all(s.n_shards == 2 and len(s.shards) == 2
                    for s in rep_grid.stats)
+
+        # the fused pallas cold path over the same (2, 2) grid:
+        # replica routing x tensor sharding x kernel backend, still
+        # token-identical (DESIGN.md §10)
+        pal_eng = make(mesh=make_serving_mesh(2, 2), backend="pallas")
+        _, toks_pal = serve(pal_eng, reqs)
+        pal_eng.close()
+        assert toks_pal == toks_dp, (toks_pal, toks_dp)
 
         # the shared-timeline span beats draining the same trace on a
         # single replica (replicas decode concurrently)

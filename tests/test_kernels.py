@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 
 from repro.kernels.ops import (cluster_gather_ffn, cluster_gather_ffn_grouped,
-                               dense_ffn)
+                               dense_ffn, fused_cold_ffn)
 from repro.kernels.ref import cluster_gather_ffn_ref, dense_ffn_ref
 
 ACTS = [("silu", 3), ("relu2", 3), ("gelu", 2), ("geglu", 3)]
@@ -71,6 +71,94 @@ def test_gather_order_invariance():
     y2 = cluster_gather_ffn(x, w, idx[::-1], activation="silu",
                             cluster_size=cs)
     np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               atol=1e-4, rtol=1e-4)
+
+
+# ---- fused cold path: score -> top-k -> gather -> FFN (DESIGN.md §10) ----
+
+# (B, D, N, cs, G, kc): N must split into G groups of nc_g clusters
+FUSED_SHAPES = [(2, 64, 512, 32, 1, 3), (4, 128, 512, 64, 2, 2),
+                (1, 64, 768, 32, 3, 4)]
+
+
+def _fused_inputs(B, D, N, cs, G, R, dtype, seed=0):
+    ks = jax.random.split(jax.random.key(seed), 4)
+    x = (jax.random.normal(ks[0], (B, D)) * 0.5).astype(dtype)
+    wc = (jax.random.normal(ks[1], (G, N // (G * cs), cs, R, D))
+          * 0.1).astype(dtype)
+    A = jax.random.normal(ks[2], (D, 16)) * 0.3
+    Bp = jax.random.normal(ks[3], (16, N)) * 0.3
+    return x, wc, A, Bp
+
+
+def _fused_oracle(x, wc, A, Bp, act, mode, kc, mask=None):
+    """The jnp chain the kernel fuses, composed step by step."""
+    from repro.models.modules import activation_fn
+    G, nc_g, cs, R, D = wc.shape
+    xf = jnp.asarray(x, jnp.float32)
+    scores = (xf @ A) @ Bp                              # (B, G*nc_g*cs)
+    neg = float(jnp.finfo(jnp.float32).min)
+    u = scores if mask is None else jnp.where(mask[:, None], scores, neg)
+    union = u.max(0).reshape(G, nc_g, cs).max(-1)       # (G, nc_g)
+    _, idx = jax.lax.top_k(union, kc)                   # (G, kc)
+    actf = activation_fn(act)
+    y = jnp.zeros((x.shape[0], D), jnp.float32)
+    for g in range(G):
+        for k in range(kc):
+            c = int(idx[g, k])
+            wk = wc[g, c].astype(jnp.float32)           # (cs, R, D)
+            hh = actf(xf @ wk[:, 0].T)
+            if R == 3:
+                hh = hh * (xf @ wk[:, 1].T)
+            if mode == "cats":
+                tok = scores[:, (g * nc_g + c) * cs:(g * nc_g + c + 1) * cs]
+                hh = hh * (tok > 0.0)
+            y = y + hh @ wk[:, -1]
+    return y, idx
+
+
+@pytest.mark.parametrize("act,R", ACTS)
+@pytest.mark.parametrize("B,D,N,cs,G,kc", FUSED_SHAPES)
+@pytest.mark.parametrize("mode", ["relu", "cats"])
+def test_fused_cold_ffn_sweep(act, R, B, D, N, cs, G, kc, mode):
+    x, wc, A, Bp = _fused_inputs(B, D, N, cs, G, R, jnp.float32,
+                                 seed=B * N + cs)
+    y, idx = fused_cold_ffn(x, wc, A, Bp, activation=act, mode=mode, kc=kc)
+    yr, ir = _fused_oracle(x, wc, A, Bp, act, mode, kc)
+    # in-kernel iterative argmax must reproduce lax.top_k exactly
+    # (same tie-breaking), so selection — hence decode — is identical
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(ir))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               atol=2e-4, rtol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_fused_cold_ffn_masked_rows(dtype):
+    """Inactive rows must not vote in the batch-union selection."""
+    B, D, N, cs, G, kc = 4, 64, 512, 32, 2, 2
+    x, wc, A, Bp = _fused_inputs(B, D, N, cs, G, 3, dtype, seed=11)
+    mask = jnp.array([True, False, True, False])
+    y, idx = fused_cold_ffn(x, wc, A, Bp, activation="silu", mode="cats",
+                            kc=kc, active_mask=mask)
+    yr, ir = _fused_oracle(x, wc, A, Bp, "silu", "cats", kc, mask=mask)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(ir))
+    tol = dict(atol=5e-2, rtol=5e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), **tol)
+
+
+def test_fused_all_clusters_equals_dense():
+    """kc == nc_g selects everything: the fused kernel must equal the
+    dense FFN over the cold region (CATS off so no extra gating)."""
+    B, D, N, cs, G = 2, 64, 512, 64, 2
+    x, wc, A, Bp = _fused_inputs(B, D, N, cs, G, 3, jnp.float32, seed=3)
+    nc_g = N // (G * cs)
+    y, idx = fused_cold_ffn(x, wc, A, Bp, activation="silu", mode="relu",
+                            kc=nc_g)
+    yd = dense_ffn(x, wc.reshape(N, 3, D), activation="silu", block_n=cs)
+    assert sorted(np.asarray(idx)[0].tolist()) == list(range(nc_g))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yd),
                                atol=1e-4, rtol=1e-4)
 
 

@@ -29,13 +29,15 @@ def test_hybrid_equals_dense_at_full_budget():
                                atol=1e-4, rtol=1e-4)
 
 
-def test_hybrid_cold_only_selects_top_clusters():
+@pytest.mark.parametrize("backend", ["jnp", "pallas"])
+def test_hybrid_cold_only_selects_top_clusters(backend):
     """With hot=0, the computed output must equal manually gathering the
-    predictor's top clusters."""
+    predictor's top clusters — under both cold-path backends."""
     D, N, cs = 64, 512, 64
     p = _params(D, N)
     x = jax.random.normal(jax.random.key(2), (2, D)) * 0.5
-    plan = HybridPlan(n_hot=0, k_cold=128, groups=1, cluster_size=cs)
+    plan = HybridPlan(n_hot=0, k_cold=128, groups=1, cluster_size=cs,
+                      backend=backend)
     y = ffn_hybrid(p, x, "relu2", "relu", plan)
     scores = predict_scores(p["pred"], x)
     union = np.asarray(scores).max(0)
@@ -83,16 +85,46 @@ def test_grouped_equals_ungrouped():
                                atol=1e-4, rtol=1e-4)
 
 
-def test_pallas_backend_matches_jnp():
+@pytest.mark.parametrize("mode", ["relu", "cats"])
+def test_pallas_backend_matches_jnp(mode):
+    """The fused pallas cold path must match jnp in output AND in the
+    selected cluster ids — including mode='cats', whose per-token
+    gating the old pallas branch silently dropped (the reduced smollm
+    serving config runs CATS, so this is the token-identity keystone).
+    """
     D, N = 64, 512
     p = _params(D, N)
     x = jax.random.normal(jax.random.key(7), (2, D)) * 0.5
     pj = make_plan(N, 0.25, 0.25, 64, groups=2)
     pp = dataclasses.replace(pj, backend="pallas")
-    yj = ffn_hybrid(p, x, "relu2", "relu", pj)
-    yp = ffn_hybrid(p, x, "relu2", "relu", pp)
+    yj, cj = ffn_hybrid(p, x, "relu2", mode, pj, return_indices=True)
+    yp, cp = ffn_hybrid(p, x, "relu2", mode, pp, return_indices=True)
+    np.testing.assert_array_equal(np.asarray(cj), np.asarray(cp))
     np.testing.assert_allclose(np.asarray(yj), np.asarray(yp),
                                atol=1e-3, rtol=1e-3)
+
+
+@pytest.mark.parametrize("mode", ["relu", "cats"])
+def test_pallas_active_mask_parity(mode):
+    """Freed-lane masking steers selection identically on both
+    backends: a masked row must not vote in the batch union."""
+    D, N = 64, 512
+    p = _params(D, N)
+    x = jax.random.normal(jax.random.key(9), (4, D)) * 0.5
+    mask = jnp.array([True, False, True, False])
+    pj = make_plan(N, 0.25, 0.25, 64, groups=2)
+    pp = dataclasses.replace(pj, backend="pallas")
+    yj, cj = ffn_hybrid(p, x, "relu2", mode, pj, return_indices=True,
+                        active_mask=mask)
+    yp, cp = ffn_hybrid(p, x, "relu2", mode, pp, return_indices=True,
+                        active_mask=mask)
+    np.testing.assert_array_equal(np.asarray(cj), np.asarray(cp))
+    np.testing.assert_allclose(np.asarray(yj)[np.asarray(mask)],
+                               np.asarray(yp)[np.asarray(mask)],
+                               atol=1e-3, rtol=1e-3)
+    # and the mask must matter: all-active selection differs somewhere
+    _, c_all = ffn_hybrid(p, x, "relu2", mode, pp, return_indices=True)
+    assert cp.shape == c_all.shape
 
 
 def test_make_plan_alignment():
