@@ -6,15 +6,12 @@ Two components:
   * hybrid hot/cold FFN fidelity — KL(dense || hybrid) of real decode
     logits and top-1 agreement at increasing cold budgets.
 """
-import dataclasses
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import emit, engine_setup
 from repro.core.clusters import HybridPlan
-from repro.models import dense as D
 from repro.quant.quantize import quant_error
 
 

@@ -6,7 +6,6 @@ gap largest at high batch (dense union) — the paper's dynamic
 adaptation claim."""
 import dataclasses
 
-import numpy as np
 
 from benchmarks.common import emit, engine_setup, paper_timing
 from repro.core.baselines import POWERINFER2

@@ -5,7 +5,6 @@ Engine benches: the real reduced model decodes under each SystemSpec
 with 50% FFN offload; speeds are the modeled effective tok/s from the
 storage plane (UFS 4.0 tier, real activation traces).
 """
-import numpy as np
 
 from benchmarks.common import emit, engine_setup, paper_timing
 from repro.core.baselines import ALL_SYSTEMS, POWERINFER2, LLMFLASH

@@ -2,7 +2,6 @@
 
 Paper: offloaded decode is 76.7% I/O for LLMFlash but 13.7% for
 PowerInfer-2 (cluster pipeline + bundles hide the storage tier)."""
-import numpy as np
 
 from benchmarks.common import emit, engine_setup, paper_timing
 from repro.core.baselines import LLMFLASH, POWERINFER2, LLAMACPP

@@ -27,12 +27,24 @@ CLI (also runnable argless via benchmarks.run):
       --json BENCH_serving_4dev.json
   python -m benchmarks.bench_serving --family moe --devices 4 --tiny \
       --json BENCH_serving_moe.json
+  python -m benchmarks.bench_serving --fleet 4 --tiny \
+      --json BENCH_fleet.json
 --devices N forces N host platform devices when jax is not yet
 initialized (CI smoke) and sweeps every (dp, tp) with dp*tp <= N;
 --family moe serves DeepSeekMoE through the family registry — the
 mesh 'model' axis becomes the expert-parallel axis (tp == ep, E/n
 experts per shard) and the storage plane prices per-device expert
 slices; --json writes the machine-readable results.
+
+Fleet leg (--fleet N, DESIGN.md §11): instead of meshing one engine,
+stand up fleets of 1..N complete engines behind the FleetGateway and
+sweep fleet size x arrival rate (--arrival-rate R1,R2 requests/s on
+the fleet clock). Reports the saturation curve (span throughput per
+fleet size at each rate), TTFT percentiles split cache-hit vs miss,
+and rejected/retried counts; runs backend loss/rejoin and
+draining-without-drops as first-class scenarios. Every leg asserts
+drained == submitted (a dropped request exits nonzero) and the whole
+sweep is deterministic on the modeled fleet clock.
 """
 import argparse
 import json
@@ -105,6 +117,185 @@ def _summary(eng, rep):
     }
 
 
+# --------------------------------------------------- fleet leg (§11) ----
+
+def _fleet_gateway(cfg, params, plan, n, hw=None, heartbeat_s=1e-4):
+    from benchmarks.common import paper_timing
+    from repro.core.baselines import POWERINFER2
+    from repro.serving.gateway import FleetGateway, local_fleet
+    backends = local_fleet(cfg, params, plan, n, spec=POWERINFER2,
+                           offload_ratio=0.5,
+                           timing=paper_timing(cfg.family),
+                           buckets=BUCKETS, ctx_budget=PROMPT_LEN + 16,
+                           temperature=0.8, seed=0, hw=hw)
+    return FleetGateway(backends, heartbeat_s=heartbeat_s)
+
+
+def _fleet_stream(cfg, gw, n_req, rate, max_new, seed=0):
+    """Deterministic Poisson-like stream at `rate` req/s on the fleet
+    clock; returns the arrival times (the scenario legs key injected
+    events off them)."""
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, n_req))
+    prompts = [rng.integers(0, cfg.vocab_size, PROMPT_LEN)
+               for _ in range(n_req)]
+    for t, p in zip(arrivals, prompts):
+        gw.submit(p, max_new=max_new, arrival_time=float(t))
+    return arrivals, prompts
+
+
+def _fleet_leg(args, cfg, params, plan, hw, rows):
+    """The --fleet sweep: saturation curves over fleet size x arrival
+    rate, TTFT split by cache hit/miss, loss/rejoin and draining
+    scenarios. Returns the BENCH_fleet.json payload; appends any
+    drained==submitted violations to `failures`."""
+    fleet_sizes = [n for n in (1, 2, 4, 8, 16) if n <= args.fleet]
+    rates = [float(r) for r in args.arrival_rate.split(",")]
+    n_req = 16 if args.tiny else 48
+    max_new = 5 if args.tiny else 8
+    failures = []
+    out = {"bench": "fleet", "tiny": bool(args.tiny),
+           "family": args.family, "fleet_sizes": fleet_sizes,
+           "arrival_rates": rates, "n_requests": n_req,
+           "results": [], "scenarios": {}}
+
+    def check(rep, tag):
+        if not rep.drained:
+            failures.append(
+                f"{tag}: drained != submitted "
+                f"({rep.n_completed}+{rep.n_rejected} of "
+                f"{rep.n_submitted})")
+
+    print(f"{'fleet':>5s} {'rate':>9s} {'span-tok/s':>10s} "
+          f"{'ttft-miss-p50-ms':>16s} {'ttft-hit-p50-ms':>15s} "
+          f"{'hits':>5s} {'rej':>4s} {'retry':>5s}")
+    span_by = {}                           # rate -> {fleet: span_tok_s}
+    for n in fleet_sizes:
+        for rate in rates:
+            gw = _fleet_gateway(cfg, params, plan, n, hw=hw)
+            _, prompts = _fleet_stream(cfg, gw, n_req, rate, max_new)
+            rep1 = gw.run_until_drained()  # saturation numbers
+            check(rep1, f"fleet={n} rate={rate:g}")
+            # replay a quarter of the stream: response-LRU hits, so
+            # the report's TTFT split has both populations
+            for p in prompts[:max(1, n_req // 4)]:
+                gw.submit(p, max_new=max_new, arrival_time=gw.clock_s)
+            rep = gw.run_until_drained()
+            check(rep, f"fleet={n} rate={rate:g} (replay)")
+            gw.close()
+            hit = rep.ttft_percentiles("hit")
+            miss = rep.ttft_percentiles("miss")
+            span = round(rep1.throughput_tok_s, 2)
+            span_by.setdefault(rate, {})[n] = span
+            print(f"{n:5d} {rate:9g} {span:10.1f} "
+                  f"{miss['p50'] * 1e3:16.4f} {hit['p50'] * 1e3:15.4f} "
+                  f"{rep.cache_hits:5d} {rep.n_rejected:4d} "
+                  f"{rep.n_retries:5d}")
+            rows.append((f"fleet_span_tok_s_f{n}_r{rate:g}", span,
+                         f"{n_req} reqs at {rate:g}/s over {n} engines"))
+            out["results"].append({
+                "fleet": n, "rate": rate, "span_tok_s": span,
+                "span_s": round(rep1.span_s, 6),
+                "total_tokens": rep1.total_tokens,
+                "ttft_hit_ms": {k: round(v * 1e3, 4)
+                                for k, v in hit.items()},
+                "ttft_miss_ms": {k: round(v * 1e3, 4)
+                                 for k, v in miss.items()},
+                "cache_hits": rep.cache_hits,
+                "cache_misses": rep.cache_misses,
+                "n_rejected": rep.n_rejected,
+                "n_retries": rep.n_retries,
+                "drained": rep.drained and rep1.drained,
+            })
+    for rate, curve in span_by.items():
+        base = curve[fleet_sizes[0]]
+        scaling = {f"fleet{n}": round(v / max(base, 1e-9), 3)
+                   for n, v in sorted(curve.items())}
+        out.setdefault("saturation", {})[f"{rate:g}"] = scaling
+        rows.append((f"fleet_scaling_r{rate:g}",
+                     "|".join(f"{k}={v}x" for k, v in scaling.items()),
+                     f"span throughput vs fleet={fleet_sizes[0]} at "
+                     f"{rate:g} req/s"))
+        print(f"# fleet saturation at {rate:g} req/s: {scaling}")
+
+    # ---- scenarios: loss/rejoin and draining, no drops -------------------
+    # Injection times are fractions of the *drained span*, calibrated
+    # off a clean run of the same stream: modeled decode steps are
+    # ~seconds while arrival spacing is ~microseconds, so arrival-
+    # indexed times would all land inside the first decode step and
+    # the loss would never be observed.
+    n = fleet_sizes[-1]
+    if n > 1:
+        gw = _fleet_gateway(cfg, params, plan, n, hw=hw)
+        _fleet_stream(cfg, gw, n_req, rates[0], max_new, seed=1)
+        span = gw.run_until_drained().span_s
+        gw.close()
+        hb = span / 200                # loss-detection latency << span
+        t_fail, t_back = 0.3 * span, 0.6 * span
+
+        gw = _fleet_gateway(cfg, params, plan, n, hw=hw, heartbeat_s=hb)
+        _fleet_stream(cfg, gw, n_req, rates[0], max_new, seed=1)
+        gw.fail_backend(1, at=t_fail)
+        gw.restore_backend(1, at=t_back)
+        # a second wave lands after the rejoin so the breaker's
+        # half-open canary path actually runs (the rejoined backend
+        # must serve again, not just flip alive)
+        import numpy as _np
+        rng2 = _np.random.default_rng(3)
+        for i in range(max(2, n_req // 4)):
+            gw.submit(rng2.integers(0, cfg.vocab_size, PROMPT_LEN),
+                      max_new=max_new,
+                      arrival_time=t_back + (i + 1) * hb)
+        rep = gw.run_until_drained()
+        check(rep, "loss_rejoin")
+        b1 = rep.per_backend[1]
+        out["scenarios"]["loss_rejoin"] = {
+            "fleet": n, "rate": rates[0], "t_fail": round(t_fail, 6),
+            "t_rejoin": round(t_back, 6), "n_retries": rep.n_retries,
+            "n_rejected": rep.n_rejected, "drained": rep.drained,
+            "lost_backend_completed": b1["completed"],
+            "lost_backend_breaker": b1["breaker"],
+        }
+        print(f"# loss/rejoin (fleet {n}): drained={rep.drained} "
+              f"retries={rep.n_retries} rejected={rep.n_rejected} "
+              f"lost backend completed {b1['completed']} "
+              f"(breaker {b1['breaker']})")
+        if rep.n_rejected:
+            failures.append("loss_rejoin: requests rejected")
+        if rep.n_retries == 0:
+            failures.append("loss_rejoin: no in-flight work was "
+                            "recalled — the loss was not exercised")
+        if b1["completed"] == 0:
+            failures.append("loss_rejoin: the rejoined backend never "
+                            "served again — the rejoin was not "
+                            "exercised")
+        gw.close()
+
+        gw = _fleet_gateway(cfg, params, plan, n, hw=hw, heartbeat_s=hb)
+        _fleet_stream(cfg, gw, n_req, rates[0], max_new, seed=2)
+        gw.drain_backend(1, at=t_fail)
+        rep = gw.run_until_drained()
+        check(rep, "draining")
+        b1 = rep.per_backend[1]
+        out["scenarios"]["draining"] = {
+            "fleet": n, "rate": rates[0], "t_drain": round(t_fail, 6),
+            "drained_backend_dispatched": b1["dispatched"],
+            "drained_backend_completed": b1["completed"],
+            "n_rejected": rep.n_rejected, "drained": rep.drained,
+        }
+        print(f"# draining (fleet {n}): drained={rep.drained} "
+              f"drained backend finished {b1['completed']}/"
+              f"{b1['dispatched']} dispatched, rejected={rep.n_rejected}")
+        if b1["completed"] != b1["dispatched"]:
+            failures.append("draining: drained backend dropped in-flight "
+                            "work")
+        if rep.n_rejected:
+            failures.append("draining: requests rejected")
+        gw.close()
+    return out, failures
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--devices", type=int, default=0,
@@ -115,6 +306,13 @@ def main(argv=None):
     ap.add_argument("--family", choices=("dense", "moe"), default="dense",
                     help="serving family: dense (smollm) or moe "
                          "(deepseek — tp is the expert-parallel axis)")
+    ap.add_argument("--fleet", type=int, default=0,
+                    help="fleet leg: sweep gateway fleets of 1..N "
+                         "engines x arrival rates instead of the mesh "
+                         "grid (emits a BENCH_fleet.json-shaped --json)")
+    ap.add_argument("--arrival-rate", default="20000,100000",
+                    help="comma-separated request rates (req/s on the "
+                         "fleet clock) for the --fleet sweep")
     ap.add_argument("--json", default=None,
                     help="write results JSON (BENCH_*.json artifact)")
     ap.add_argument("--kernel-calibration", default=None,
@@ -161,6 +359,23 @@ def main(argv=None):
         out["kernel_calibration"] = asdict(calib)
         print(f"# storage plane priced with measured kernel rates: "
               f"{hw.name}")
+
+    # ---- fleet leg: gateway sweep replaces the mesh grid -----------------
+    if args.fleet:
+        out, failures = _fleet_leg(args, cfg, params, plan, hw, rows)
+        if args.kernel_calibration:
+            out["kernel_calibration"] = dict(
+                (("hw", hw.name),)) if hw else None
+        emit(rows)
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump(out, f, indent=1)
+            print(f"# wrote {args.json}")
+        if failures:
+            for msg in failures:
+                print(f"FLEET FAILURE: {msg}", file=sys.stderr)
+            raise SystemExit(1)
+        return rows
 
     # ---- part 1: spec comparison, single device --------------------------
     print(f"{'system':16s} {'dp':>3s} {'tp':>3s} {'tok/s':>10s} "

@@ -9,7 +9,6 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Optional
 
 
 @dataclass(frozen=True)

@@ -15,7 +15,7 @@ shrinks it back when sequences complete (paper Fig 2 dynamics).
 from __future__ import annotations
 
 from collections import OrderedDict
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 
 @dataclass

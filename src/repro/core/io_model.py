@@ -13,7 +13,7 @@ Numbers for `UFS40` come straight from the paper:
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 import bisect
 
 

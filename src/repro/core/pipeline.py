@@ -20,8 +20,7 @@ from __future__ import annotations
 import heapq
 import threading
 from concurrent.futures import ThreadPoolExecutor
-from dataclasses import dataclass, field
-from typing import Optional
+from dataclasses import dataclass
 
 
 # ------------------------------------------------- discrete-event sim ----

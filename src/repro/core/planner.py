@@ -18,7 +18,7 @@ Pipeline: profile -> classify -> plan.
 from __future__ import annotations
 
 import json
-from dataclasses import dataclass, field, asdict
+from dataclasses import dataclass, asdict
 
 import jax
 import jax.numpy as jnp

@@ -7,7 +7,6 @@ DMA.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

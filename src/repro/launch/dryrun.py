@@ -20,7 +20,6 @@ import time              # noqa: E402
 import traceback         # noqa: E402
 
 import jax               # noqa: E402
-import jax.numpy as jnp  # noqa: E402
 
 from repro.configs import get_config, ASSIGNED_ARCHS, INPUT_SHAPES  # noqa: E402
 from repro.compat import set_mesh                                   # noqa: E402

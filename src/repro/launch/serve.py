@@ -23,6 +23,13 @@ expert-parallel degree — the same mesh 'model' axis --tp sets for the
 dense families (each shard owns E/N experts), so
 
   PYTHONPATH=src python -m repro.launch.serve --family moe --ep 2 --dp 2
+
+Fleet serving (DESIGN.md §11): --fleet N stands up N complete
+single-device engines behind the FleetGateway front door (weighted
+least-loaded dispatch, circuit breakers, response LRU, heartbeats) and
+serves the prompts as a request stream through it:
+
+  PYTHONPATH=src python -m repro.launch.serve --fleet 2 --bon 8
 """
 from __future__ import annotations
 
@@ -32,7 +39,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.core.baselines import ALL_SYSTEMS, POWERINFER2
+from repro.core.baselines import POWERINFER2
 from repro.core.io_model import UFS40, HOST_DMA
 from repro.core.planner import profile_activations
 from repro.serving.engine import ServeEngine
@@ -81,6 +88,28 @@ def build_engine(arch: str, reduced: bool = True, offload: float = 0.5,
                        **engine_kwargs), cfg
 
 
+def build_fleet(arch: str, n: int, reduced: bool = True,
+                offload: float = 0.5, spec=POWERINFER2, storage=UFS40,
+                seed: int = 0, backend: str = "jnp", **gateway_kwargs):
+    """N complete single-device engines behind a FleetGateway — the
+    --fleet front door (DESIGN.md §11). Engines share jit caches via
+    local_fleet, so fleet size never multiplies trace time."""
+    from repro.serving.gateway import FleetGateway, local_fleet
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    fam = serving_family(cfg)
+    model = fam.make_model(cfg)
+    params = model.init(jax.random.key(seed))
+    plan = fam.build_plan(cfg, backend=backend)
+    params = fam.prepare_params(params, plan)
+    engine_kwargs = {} if backend == "jnp" else {"backend": backend}
+    backends = local_fleet(cfg, params, plan, n, spec=spec,
+                           storage=storage, offload_ratio=offload,
+                           seed=seed, **engine_kwargs)
+    return FleetGateway(backends, **gateway_kwargs), cfg
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None,
@@ -104,6 +133,10 @@ def main():
                          "shard owns E/ep experts)")
     ap.add_argument("--dp", type=int, default=1,
                     help="data-parallel replicas (mesh 'data' axis)")
+    ap.add_argument("--fleet", type=int, default=0,
+                    help="serve through the fleet gateway over N "
+                         "complete single-device engines (DESIGN.md "
+                         "§11); mutually exclusive with --tp/--dp/--ep")
     ap.add_argument("--backend", choices=("jnp", "pallas"), default="jnp",
                     help="cold-path kernel backend: 'pallas' runs the "
                          "fused score->top-k->gather->FFN kernel "
@@ -125,6 +158,39 @@ def main():
     if args.backend == "pallas" and get_config(arch).num_experts:
         ap.error("--backend pallas is the dense-family fused cold-path "
                  "kernel; the moe family has no pallas backend")
+    if args.fleet:
+        if args.tp > 1 or args.dp > 1 or args.ep:
+            ap.error("--fleet members are single-device engines; "
+                     "mesh axes (--tp/--dp/--ep) don't apply")
+        import time
+        gw, cfg = build_fleet(arch, args.fleet, args.reduced,
+                              args.offload, storage=storage,
+                              backend=args.backend)
+        rng = np.random.default_rng(0)
+        prompt = rng.integers(0, cfg.vocab_size,
+                              (args.bon, args.prompt_len))
+        t0 = time.perf_counter()
+        for i in range(args.bon):
+            gw.submit(prompt[i].astype(np.int32), max_new=args.max_new,
+                      arrival_time=0.0)
+        rep = gw.run_until_drained()
+        wall = time.perf_counter() - t0
+        miss = rep.ttft_percentiles("miss")
+        print(f"arch={cfg.name} spec=powerinfer-2 storage={storage.name} "
+              f"fleet={args.fleet}")
+        print(f"modeled fleet serve: {rep.throughput_tok_s:.2f} tok/s "
+              f"over the {rep.span_s:.2f}s span | "
+              f"{rep.n_completed}/{rep.n_submitted} completed, "
+              f"{rep.n_rejected} rejected, {rep.n_retries} retries | "
+              f"cache {rep.cache_hits} hit / {rep.cache_misses} miss")
+        print(f"ttft ms (miss): mean {miss['mean']*1e3:.2f} "
+              f"p50 {miss['p50']*1e3:.2f} p99 {miss['p99']*1e3:.2f} | "
+              f"per-backend "
+              f"{[b['completed'] for b in rep.per_backend]} completed")
+        print(f"wall time {wall:.1f}s for {rep.total_tokens} tokens "
+              f"(CPU jit)")
+        gw.close()
+        return
     engine, cfg = build_engine(arch, args.reduced, args.offload,
                                storage=storage, profile=True, tp=tp,
                                dp=args.dp, backend=args.backend)

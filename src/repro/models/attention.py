@@ -6,7 +6,6 @@ RoPE is applied *before* caching, so cached K carries absolute positions.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -11,7 +11,7 @@ from repro.configs.base import ModelConfig
 from repro.core.sparse_ffn import init_ffn, ffn_spec, ffn_apply
 from repro.models.attention import (
     apply_rotary, decode_attention, flash_attention, maybe_qk_norm)
-from repro.models.modules import dense_init, rms_norm
+from repro.models.modules import dense_init
 from repro.sharding import constrain, BATCH
 
 

@@ -7,7 +7,7 @@ blocks. Layer params are stacked (leading L dim) and scanned.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable, Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp

@@ -17,11 +17,11 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.models import blocks, dense
-from repro.models.attention import rope_angles, flash_attention
+from repro.models.attention import rope_angles
 from repro.models.kv_cache import write_pos
 from repro.models.modules import (
     dtype_of, dense_init, embed_init, rms_norm, stack_layer_params)
-from repro.sharding import constrain, BATCH
+from repro.sharding import BATCH
 
 
 def init_enc_layer(key, cfg, dtype):

@@ -18,7 +18,6 @@ that replica's (1, n_model) submesh.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,6 @@ positions continuing after the image.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
@@ -60,7 +59,6 @@ def make_model(cfg: ModelConfig) -> dense.Model:
 
     base_forward = dense.make_forward(cfg, angles_fn=angles_fn,
                                       embed_fn=embed_fn)
-    base_prefill = dense.make_prefill(cfg, angles_fn=angles_fn)
     decode_step = dense.make_decode_step(cfg, angles_decode_fn=angles_decode_fn)
     init_cache, cache_spec = dense.make_cache_fns(cfg)
 

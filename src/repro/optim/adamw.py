@@ -7,7 +7,6 @@ mesh (DESIGN.md §5); small-model training uses fp32 moments.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -9,9 +9,7 @@ quantization: values are quantized/dequantized; storage is int8).
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 def quantize_groupwise_int4(w, group: int = 32):

@@ -356,6 +356,38 @@ class ServeEngine:
     def max_slots(self) -> int:
         return self._plane_owner.decoder.buckets[-1]
 
+    # --------------------------------------------- gateway reporting ----
+    # The fleet gateway (serving/gateway.py, DESIGN.md §11) routes on
+    # these two: the engine's reported load and its next modeled event
+    # time. Both delegate to the scheduler layer, so a replica-routed
+    # engine reports fleet-correct aggregates for free.
+    @property
+    def load(self) -> int:
+        """Outstanding requests (queued + running) — the per-backend
+        reported load weighted least-loaded dispatch divides by the
+        backend weight."""
+        return self.sched.load
+
+    def next_event_time(self) -> Optional[float]:
+        """When this engine's next decode event completes work on the
+        modeled clock: its clock while a batch is running, else the
+        head arrival it would jump to; None when drained. Replicated
+        engines report the earliest replica's event (the same rule
+        `_next_replica` steps by)."""
+        if self.replicas is not None:
+            best_t = None
+            for rep in self.replicas:
+                t = rep.next_event_time()
+                if t is not None and (best_t is None or t < best_t):
+                    best_t = t
+            return best_t
+        if not self.sched.has_work:
+            return None
+        if self.sched.running:
+            return self.clock_s
+        nxt = self.sched.next_arrival()
+        return max(self.clock_s, nxt) if nxt is not None else self.clock_s
+
     # ------------------------------------------------------- admission ----
     def submit(self, prompt, max_new: int = 32,
                arrival_time: float = None) -> int:

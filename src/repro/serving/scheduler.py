@@ -140,6 +140,13 @@ class BatchScheduler:
         return len(self.running)
 
     @property
+    def load(self) -> int:
+        """Outstanding work: submitted-but-unfinished requests — the
+        load this scheduler *reports* upward (the replica router and
+        the fleet gateway both route on it)."""
+        return len(self.queue) + len(self.running)
+
+    @property
     def has_work(self) -> bool:
         return bool(self.queue) or bool(self.running)
 
@@ -196,8 +203,7 @@ class ReplicaRouter:
     # ------------------------------------------------------- routing ----
     def load_of(self, r: int) -> int:
         """Outstanding load: submitted-but-unfinished requests."""
-        s = self.scheds[r]
-        return len(s.queue) + len(s.running)
+        return self.scheds[r].load
 
     def pick_replica(self) -> int:
         """Least-loaded replica; FIFO tiebreak (least recently
@@ -244,6 +250,12 @@ class ReplicaRouter:
     @property
     def has_work(self) -> bool:
         return any(s.has_work for s in self.scheds)
+
+    @property
+    def load(self) -> int:
+        """Fleet-facing load report: outstanding work summed over
+        every replica (same contract as BatchScheduler.load)."""
+        return sum(s.load for s in self.scheds)
 
     @property
     def batch_size(self) -> int:

@@ -1,6 +1,5 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches
 must see 1 device; only launch/dryrun.py forces 512 placeholder devices."""
-import jax
 import numpy as np
 import pytest
 

@@ -99,9 +99,6 @@ def test_rotary_preserves_norm_and_relative_phase():
                                np.linalg.norm(np.asarray(y), axis=-1),
                                atol=1e-4, rtol=1e-4)
     # inner products depend only on relative distance
-    q = apply_rotary(x, ang)
-    k = apply_rotary(x, ang)
-    dots = np.einsum("bshd,bthd->st", np.asarray(q), np.asarray(k))
     # <q_i, k_j> == <q_{i+1}, k_{j+1}> when inputs are identical rows
     x0 = jnp.broadcast_to(x[:, :1], x.shape)
     q0 = apply_rotary(x0, ang)

@@ -2,7 +2,6 @@
 storage plane's per-shard cache accounting (which slices the same
 NeuronCache per mesh device — no mesh needed to test the pricing)."""
 import numpy as np
-import pytest
 
 from repro.core.cache import NeuronCache
 

@@ -9,8 +9,7 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 from repro.core.cache import LRUSet, NeuronCache
 from repro.core.io_model import UFS40, UFS31, HOST_DMA, with_core, \
     with_queue_contention
-from repro.core.pipeline import ClusterTask, make_decode_tasks, \
-    simulate_pipeline
+from repro.core.pipeline import make_decode_tasks, simulate_pipeline
 
 
 # ------------------------------------------------------------ LRU/cache ----

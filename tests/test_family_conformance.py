@@ -11,7 +11,12 @@ The battery:
     wrapper vs the streaming submit/run_until_drained path;
   * empty-report stats (whole stream cancelled before any step);
   * KV-arena exhaustion guards (oversized requests rejected, slot
-    accounting conserved).
+    accounting conserved);
+  * fleet-gateway scenarios (DESIGN.md §11) over a two-engine fleet of
+    the family: circuit-breaker open -> half-open -> closed recovery
+    around a backend loss, response-LRU hits replaying the cached
+    request's exact tokens with zero extra decode work, and draining
+    (in-flight finishes, no new dispatches land).
 """
 import jax
 import numpy as np
@@ -154,6 +159,109 @@ def test_empty_report_stats(family_setup):
         assert rep.latency_percentiles()["p99"] == 0.0
     finally:
         eng.close()
+
+
+# ------------------------------------------- gateway battery (§11) ----
+
+def _fleet_gateway(setup, n=2, **kw):
+    from repro.serving.gateway import FleetGateway, local_fleet
+    _, cfg, params, plan, _ = setup
+    backends = local_fleet(cfg, params, plan, n, spec=POWERINFER2,
+                           offload_ratio=0.5, seed=0, buckets=(1, 2, 4),
+                           ctx_budget=32, temperature=0.8)
+    return FleetGateway(backends, heartbeat_s=0.001, **kw)
+
+
+def test_gateway_breaker_recovers_after_loss(family_setup):
+    """Backend loss mid-stream for every family: the heartbeat trips
+    the breaker open, recalled work redispatches and completes on the
+    survivor, and after restore the half-open canary closes the
+    breaker — the rejoined backend serves again. No request drops."""
+    from repro.serving.gateway import CLOSED
+    family, cfg, _, _, prompt = family_setup
+    gw = _fleet_gateway(family_setup)
+    gw.backends[1].breaker.open_timeout_s = 0.002
+    try:
+        rng = np.random.default_rng(1)
+        for i in range(6):
+            gw.submit(rng.integers(0, cfg.vocab_size, 12), max_new=3,
+                      arrival_time=0.0)
+        while not gw.backends[1].inflight:
+            assert gw.step()
+        lost = list(gw.backends[1].inflight.values())
+        gw.fail_backend(1)
+        gw.restore_backend(1, at=gw.clock_s + 0.004)
+        # traffic past the rejoin so the half-open canary path runs
+        for i in range(4):
+            gw.submit(rng.integers(0, cfg.vocab_size, 12), max_new=3,
+                      arrival_time=gw.clock_s + 0.005 + 0.001 * i)
+        rep = gw.run_until_drained()
+        assert rep.drained and rep.n_rejected == 0
+        assert rep.n_completed == 10
+        assert rep.n_retries >= len(lost) >= 1
+        assert all(gw.requests[u].done and not gw.requests[u].rejected
+                   for u in lost)
+        b1 = gw.backends[1]
+        assert b1.alive and b1.breaker.state == CLOSED
+        assert b1.n_completed >= 1          # served after rejoining
+    finally:
+        gw.close()
+
+
+def test_gateway_lru_hit_is_token_identical_no_second_decode(family_setup):
+    """A repeated request is a response-LRU hit for every family: it
+    replays the cached request's exact tokens and costs zero backend
+    decode steps (and zero submits)."""
+    family, cfg, _, _, prompt = family_setup
+    gw = _fleet_gateway(family_setup, cache_capacity=8)
+    try:
+        u1 = gw.submit(prompt[0], max_new=3, arrival_time=0.0)
+        gw.run_until_drained()
+        steps = sum(b.n_steps for b in gw.backends)
+        disp = sum(b.n_dispatched for b in gw.backends)
+        u2 = gw.submit(prompt[0], max_new=3, arrival_time=gw.clock_s)
+        rep = gw.run_until_drained()
+        assert gw.requests[u2].cache_hit
+        assert gw.requests[u2].tokens == gw.requests[u1].tokens
+        assert len(gw.requests[u2].tokens) == 3
+        assert sum(b.n_steps for b in gw.backends) == steps
+        assert sum(b.n_dispatched for b in gw.backends) == disp
+        assert rep.cache_hits == 1 and rep.drained
+        # the hit is instantaneous on the fleet clock; the miss wasn't
+        assert float(rep.ttft_hit[0]) == 0.0
+        assert float(rep.ttft_miss[0]) > 0.0
+    finally:
+        gw.close()
+
+
+def test_gateway_draining_backend_finishes_inflight_no_new(family_setup):
+    """Draining for every family: the drained backend completes its
+    in-flight requests, receives no new dispatches, and the stream
+    still drains without drops (the rolling-restart contract)."""
+    family, cfg, _, _, prompt = family_setup
+    gw = _fleet_gateway(family_setup)
+    try:
+        rng = np.random.default_rng(2)
+        for i in range(4):
+            gw.submit(rng.integers(0, cfg.vocab_size, 12), max_new=3,
+                      arrival_time=0.0)
+        while not gw.backends[1].inflight:
+            assert gw.step()
+        inflight = list(gw.backends[1].inflight.values())
+        disp_before = gw.backends[1].n_dispatched
+        gw.drain_backend(1)
+        for i in range(4):
+            gw.submit(rng.integers(0, cfg.vocab_size, 12), max_new=3,
+                      arrival_time=gw.clock_s)
+        rep = gw.run_until_drained()
+        assert rep.drained and rep.n_rejected == 0
+        assert rep.n_completed == 8
+        assert gw.backends[1].n_dispatched == disp_before
+        assert not gw.backends[1].inflight
+        assert all(gw.requests[u].done and not gw.requests[u].rejected
+                   for u in inflight)
+    finally:
+        gw.close()
 
 
 def test_kv_arena_exhaustion(family_setup):

@@ -1,0 +1,459 @@
+"""Fleet gateway tests (DESIGN.md §11): dispatch policy, circuit
+breaker state machine, response LRU, heartbeat loss/rejoin, draining,
+typed rejections, streaming passthrough, the async facade, and the
+fleet clock's determinism.
+
+The pure state machines (CircuitBreaker, ResponseLRU, canonical_key)
+are unit-tested with stub backends — no jax needed; the integration
+scenarios run real ServeEngines on the tiny reduced config.
+"""
+import numpy as np
+import pytest
+
+from repro.serving.gateway import (
+    CLOSED, HALF_OPEN, OPEN, AsyncGateway, Backend, BackendHandle,
+    BackendUnavailable, CircuitBreaker, FleetGateway,
+    ResponseLRU, canonical_key, local_fleet)
+
+# ---------------------------------------------------- pure state units ----
+
+
+def test_breaker_closed_to_open_on_consecutive_failures():
+    br = CircuitBreaker(failure_threshold=3, open_timeout_s=1.0)
+    assert br.state == CLOSED and br.allow(0.0)
+    br.record_failure(0.0)
+    br.record_failure(0.0)
+    br.record_success()                    # resets the consecutive count
+    br.record_failure(0.1)
+    br.record_failure(0.1)
+    assert br.state == CLOSED
+    br.record_failure(0.2)
+    assert br.state == OPEN
+    assert not br.allow(0.5)               # still inside the timeout
+
+
+def test_breaker_half_open_canary_closes_or_reopens():
+    br = CircuitBreaker(failure_threshold=1, open_timeout_s=1.0,
+                        half_open_probes=1)
+    br.record_failure(0.0)
+    assert br.state == OPEN
+    assert br.allow(1.5)                   # timeout passed -> half-open
+    assert br.state == HALF_OPEN
+    br.on_dispatch()
+    assert not br.allow(1.6)               # probe budget spent
+    br.record_success()                    # canary completed
+    assert br.state == CLOSED
+    # the reopen path: a half-open canary failing trips it again
+    br.record_failure(2.0)
+    assert br.allow(3.5) and br.state == HALF_OPEN
+    br.on_dispatch()
+    br.record_failure(3.6)
+    assert br.state == OPEN and br.opened_at == 3.6
+
+
+def test_response_lru_eviction_and_canonical_key():
+    lru = ResponseLRU(capacity=2)
+    ka = canonical_key([1, 2, 3], 4)
+    # canonicalization: list vs array vs dtype never splits the cache
+    assert ka == canonical_key(np.array([1, 2, 3], np.int64), 4)
+    assert ka != canonical_key([1, 2, 3], 5)
+    lru.put(ka, [7, 8])
+    kb = canonical_key([9], 4)
+    lru.put(kb, [1])
+    assert lru.get(ka) == [7, 8]           # touch: ka is now most recent
+    lru.put(canonical_key([5], 4), [2])    # evicts kb, not ka
+    assert lru.get(kb) is None
+    assert lru.get(ka) == [7, 8]
+    assert lru.hits == 2 and lru.misses == 1
+    off = ResponseLRU(capacity=0)
+    off.put(ka, [7])
+    assert off.get(ka) is None and len(off) == 0
+
+
+# ------------------------------------------------------- stub backends ----
+
+class StubBackend(BackendHandle):
+    """Scripted backend: each request decodes `max_new` tokens, one
+    per step of fixed `step_s` modeled seconds, FIFO one at a time."""
+
+    def __init__(self, step_s=0.01, tokens=(1, 2, 3, 4, 5, 6, 7, 8)):
+        self.step_s = step_s
+        self.toks = list(tokens)
+        self.clock_s = 0.0
+        self.queue = []                    # (local_uid, remaining, done)
+        self._uid = 0
+        self.lost = False
+        self.n_submits = 0
+
+    def submit(self, prompt, max_new, arrival_time):
+        if self.lost:
+            raise BackendUnavailable("down")
+        uid = self._uid
+        self._uid += 1
+        self.n_submits += 1
+        self.clock_s = max(self.clock_s, arrival_time)
+        self.queue.append([uid, int(max_new), 0])
+        return uid
+
+    def step(self):
+        from repro.serving.engine import StepResult
+        from repro.serving.storage_plane import TokenStats
+        if self.lost or not self.queue:
+            return None
+        uid, max_new, n = self.queue[0]
+        self.clock_s += self.step_s
+        self.queue[0][2] = n + 1
+        fin = []
+        if n + 1 >= max_new:
+            self.queue.pop(0)
+            fin = [uid]
+        st = TokenStats(compute_s=self.step_s, io_s=0.0,
+                        effective_s=self.step_s, cache_hit_rate=1.0,
+                        n_miss=0, batch=1)
+        return StepResult(stats=st, tokens={uid: self.toks[n]},
+                          finished=fin, t_s=self.clock_s)
+
+    def cancel(self, local_uids):
+        keep = [q for q in self.queue if q[0] not in set(local_uids)]
+        self.queue = keep
+
+    @property
+    def load(self):
+        return len(self.queue)
+
+    def next_event_time(self):
+        if self.lost or not self.queue:
+            return None
+        return self.clock_s + self.step_s
+
+
+def _gw(n=2, **kw):
+    kw.setdefault("heartbeat_s", 0.005)
+    kw.setdefault("cache_capacity", 0)
+    return FleetGateway([StubBackend() for _ in range(n)], **kw)
+
+
+# ----------------------------------------------------- dispatch policy ----
+
+def test_weighted_least_loaded_dispatch_shares_by_weight():
+    """A weight-2 backend absorbs ~2x the requests of a weight-1 one:
+    the router divides reported load by weight (the knob that absorbs
+    heterogeneous per-device throughput)."""
+    gw = FleetGateway([Backend(handle=StubBackend(), weight=2.0,
+                               max_concurrency=64),
+                       Backend(handle=StubBackend(), weight=1.0,
+                               max_concurrency=64)],
+                      heartbeat_s=0.0, cache_capacity=0)
+    for i in range(12):
+        gw.submit([i], max_new=2, arrival_time=0.0)
+    rep = gw.run_until_drained()
+    assert rep.drained and rep.n_completed == 12
+    d = [b["dispatched"] for b in rep.per_backend]
+    assert d[0] == 8 and d[1] == 4       # 2:1 split, deterministic
+
+
+def test_max_concurrency_cap_queues_at_gateway():
+    """A backend at its cap receives nothing more until a completion
+    frees a slot — the overflow waits at the gateway, uncounted as a
+    dispatch attempt (it is healthy queueing, not failure)."""
+    gw = FleetGateway([Backend(handle=StubBackend(), max_concurrency=2)],
+                      heartbeat_s=0.0, cache_capacity=0)
+    uids = [gw.submit([i], max_new=2, arrival_time=0.0) for i in range(5)]
+    # step until the first dispatch round has happened
+    gw.step()
+    b = gw.backends[0]
+    assert len(b.inflight) == 2 and len(gw.pending) == 3
+    rep = gw.run_until_drained()
+    assert rep.drained and rep.n_completed == 5 and rep.n_rejected == 0
+    assert all(gw.requests[u].attempts == 1 for u in uids)
+
+
+def test_idle_fleet_round_robins_fifo():
+    gw = _gw(3, heartbeat_s=0.0)
+    order = []
+    for i in range(6):
+        gw.submit([i], max_new=1, arrival_time=float(i))
+        gw.run_until_drained()
+        order.append([b.n_dispatched for b in gw.backends])
+    assert order[-1] == [2, 2, 2]
+
+
+# ----------------------------------------- failures, breaker, rejoin ----
+
+def test_dispatch_failure_trips_breaker_and_retries_elsewhere():
+    gw = _gw(2, heartbeat_s=0.0)
+    gw.backends[0].handle.lost = True      # not yet detected
+    uid = gw.submit([1], max_new=2, arrival_time=0.0)
+    rep = gw.run_until_drained()
+    assert rep.drained and rep.n_completed == 1
+    assert gw.requests[uid].retries >= 1 and rep.n_retries >= 1
+    assert not gw.backends[0].alive        # failure marked it dead
+    assert gw.backends[1].n_completed == 1
+
+
+def test_heartbeat_detects_loss_recalls_inflight_and_rejoins():
+    """The full scenario: backend dies mid-decode, the next heartbeat
+    recalls its in-flight work onto the healthy backend, and after
+    restore + breaker timeout the rejoined backend serves again
+    (half-open canary completing closes the breaker)."""
+    gw = FleetGateway(
+        [Backend(handle=StubBackend(), max_concurrency=4,
+                 breaker=CircuitBreaker(open_timeout_s=0.02))
+         for _ in range(2)],
+        heartbeat_s=0.01, cache_capacity=0)
+    for i in range(4):
+        gw.submit([i], max_new=4, arrival_time=0.0)
+    # let both backends take work, then kill backend 1
+    while not gw.backends[1].inflight:
+        assert gw.step()
+    lost_uids = list(gw.backends[1].inflight.values())
+    gw.backends[1].handle.lost = True
+    gw.restore_backend(1, at=0.05)
+    # keep traffic flowing past the rejoin so the canary path runs
+    for i in range(6):
+        gw.submit([10 + i], max_new=4, arrival_time=0.06 + 0.01 * i)
+    rep = gw.run_until_drained()
+    assert rep.drained and rep.n_rejected == 0
+    assert rep.n_retries >= len(lost_uids) >= 1
+    assert all(gw.requests[u].done and not gw.requests[u].rejected
+               for u in lost_uids)
+    b1 = gw.backends[1]
+    assert b1.alive and b1.breaker.state == CLOSED
+    assert b1.n_completed >= 1             # it served after rejoining
+
+
+def test_all_backends_down_surfaces_typed_rejection():
+    """The bugfix contract: every dispatch attempt hitting dead
+    backends/open breakers must end in a typed rejection — never a
+    hang, never an unhandled exception."""
+    gw = _gw(2, max_attempts=3, retry_backoff_s=0.001)
+    gw.backends[0].handle.lost = True
+    gw.backends[1].handle.lost = True
+    uid = gw.submit([1], max_new=4, arrival_time=0.0)
+    rep = gw.run_until_drained(max_events=10000)
+    assert rep.drained
+    assert rep.n_rejected == 1 and rep.n_completed == 0
+    rej = rep.rejected[0]
+    assert rej.uid == uid and rej.reason == "no_backend_available"
+    assert rej.attempts == 3
+    assert gw.requests[uid].rejected
+    # the typed rejection propagates through the streaming surface too
+    with pytest.raises(BackendUnavailable, match="no_backend_available"):
+        list(gw.stream(uid))
+
+
+def test_empty_fleet_rejects_and_report_has_no_div_by_zero():
+    gw = FleetGateway([], heartbeat_s=0.01)
+    gw.submit([1, 2], max_new=4)
+    rep = gw.run_until_drained()
+    assert rep.drained and rep.n_rejected == 1
+    assert rep.rejected[0].reason == "empty_fleet"
+    assert rep.throughput_tok_s == 0.0
+    assert rep.ttft_percentiles("hit")["p99"] == 0.0
+    assert rep.ttft_percentiles("miss")["mean"] == 0.0
+    # a fleet whose whole stream was rejected reports zeros the same way
+    assert FleetReport_zero_ok()
+
+
+def FleetReport_zero_ok():
+    from repro.serving.gateway import FleetReport
+    rep = FleetReport()
+    return (rep.throughput_tok_s == 0.0 and rep.drained
+            and rep.ttft_percentiles()["p50"] == 0.0)
+
+
+def test_fleet_stalled_guard_rejects_instead_of_spinning():
+    """No heartbeat, both backends dead with work in flight: the
+    deadlock guard recalls and rejects rather than spinning the
+    event loop forever."""
+    gw = FleetGateway([StubBackend(), StubBackend()], heartbeat_s=0.0,
+                      cache_capacity=0, max_attempts=2,
+                      retry_backoff_s=0.001)
+    uids = [gw.submit([i], max_new=4, arrival_time=0.0) for i in range(2)]
+    gw.step()                              # both dispatched
+    gw.backends[0].handle.lost = True
+    gw.backends[1].handle.lost = True
+    rep = gw.run_until_drained(max_events=10000)
+    assert rep.drained and rep.n_rejected == 2
+    assert all(gw.requests[u].done for u in uids)
+
+
+# ------------------------------------------------- draining lifecycle ----
+
+def test_draining_backend_finishes_inflight_receives_no_new():
+    gw = _gw(2, heartbeat_s=0.0)
+    for i in range(4):
+        gw.submit([i], max_new=3, arrival_time=0.0)
+    while not gw.backends[1].inflight:
+        gw.step()
+    inflight = list(gw.backends[1].inflight.values())
+    disp_before = gw.backends[1].n_dispatched
+    gw.drain_backend(1)
+    for i in range(4):
+        gw.submit([10 + i], max_new=3, arrival_time=gw.clock_s)
+    rep = gw.run_until_drained()
+    assert rep.drained and rep.n_rejected == 0
+    assert gw.backends[1].n_dispatched == disp_before
+    assert all(gw.requests[u].done and not gw.requests[u].rejected
+               for u in inflight)
+    # undrain readmits it
+    gw.undrain_backend(1)
+    gw.submit([99], max_new=1, arrival_time=gw.clock_s)
+    gw.run_until_drained()
+    assert gw.backends[1].n_dispatched == disp_before + 1
+
+
+# --------------------------------------------- cache + streaming + TTFT ----
+
+def test_response_lru_hit_skips_decode_and_splits_ttft():
+    gw = FleetGateway([StubBackend()], heartbeat_s=0.0,
+                      cache_capacity=8)
+    u1 = gw.submit([5, 6], max_new=3, arrival_time=0.0)
+    gw.run_until_drained()
+    toks = list(gw.requests[u1].tokens)
+    submits_before = gw.backends[0].handle.n_submits
+    u2 = gw.submit([5, 6], max_new=3, arrival_time=1.0)
+    rep = gw.run_until_drained()
+    assert gw.requests[u2].cache_hit
+    assert gw.requests[u2].tokens == toks
+    assert gw.backends[0].handle.n_submits == submits_before
+    assert rep.cache_hits == 1
+    # TTFT split: the hit is instantaneous on the fleet clock
+    assert rep.ttft_hit.size == 1 and float(rep.ttft_hit[0]) == 0.0
+    assert rep.ttft_miss.size == 1 and float(rep.ttft_miss[0]) > 0.0
+
+
+def test_streaming_passthrough_yields_tokens_in_decode_order():
+    gw = FleetGateway([StubBackend(step_s=0.01)], heartbeat_s=0.0,
+                      cache_capacity=8)
+    seen = []
+    gw.on_token(lambda uid, tok, t: seen.append((uid, tok)))
+    uid = gw.submit([1], max_new=4, arrival_time=0.0)
+    out = list(gw.stream(uid))
+    assert [tok for _, tok in out] == [1, 2, 3, 4]
+    ts = [t for t, _ in out]
+    assert ts == sorted(ts) and ts[0] > 0.0
+    assert seen == [(uid, t) for t in (1, 2, 3, 4)]
+    # a cached replay streams the same tokens with zero new events
+    uid2 = gw.submit([1], max_new=4, arrival_time=gw.clock_s)
+    assert [tok for _, tok in gw.stream(uid2)] == [1, 2, 3, 4]
+
+
+def test_fleet_clock_is_deterministic():
+    def once():
+        gw = _gw(3, heartbeat_s=0.004)
+        rng = np.random.default_rng(7)
+        arr = np.cumsum(rng.exponential(0.003, 10))
+        for i, t in enumerate(arr):
+            gw.submit([i % 4], max_new=3, arrival_time=float(t))
+        gw.fail_backend(2, at=float(arr[3]))
+        gw.restore_backend(2, at=float(arr[3]) + 0.05)
+        rep = gw.run_until_drained()
+        return (rep.span_s, rep.n_retries, rep.total_tokens,
+                tuple(b["dispatched"] for b in rep.per_backend))
+    assert once() == once()
+
+
+# ----------------------------------------------------- async facade ----
+
+def test_async_gateway_concurrent_generate_and_stream():
+    import asyncio
+    gw = FleetGateway([StubBackend(), StubBackend()], heartbeat_s=0.0,
+                      cache_capacity=8)
+    agw = AsyncGateway(gw)
+
+    async def main():
+        stream_toks = []
+
+        async def consume():
+            async for tok in agw.stream([9], max_new=3):
+                stream_toks.append(tok)
+
+        outs = await asyncio.gather(
+            agw.generate([1], max_new=4),
+            agw.generate([2], max_new=2),
+            consume())
+        return outs[0], outs[1], stream_toks
+
+    a, b, c = asyncio.run(main())
+    assert a == [1, 2, 3, 4] and b == [1, 2] and c == [1, 2, 3]
+    assert gw.report().drained
+
+    async def rejected():
+        gw.backends[0].handle.lost = True
+        gw.backends[1].handle.lost = True
+        await agw.generate([3], max_new=2)
+
+    with pytest.raises(BackendUnavailable):
+        asyncio.run(rejected())
+
+
+# --------------------------------------------- real-engine integration ----
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    import jax
+    from repro.configs import get_config
+    from repro.serving.families import serving_family
+    cfg = get_config("smollm-135m").reduced()
+    fam = serving_family(cfg)
+    model = fam.make_model(cfg)
+    params = model.init(jax.random.key(0))
+    plan = fam.build_plan(cfg)
+    return cfg, fam.prepare_params(params, plan), plan
+
+
+def _engine_fleet(tiny_setup, n, **kw):
+    from repro.core.baselines import POWERINFER2
+    cfg, params, plan = tiny_setup
+    return local_fleet(cfg, params, plan, n, spec=POWERINFER2,
+                       offload_ratio=0.5, seed=0, buckets=(1, 2, 4),
+                       ctx_budget=32, temperature=0.8, **kw)
+
+
+def test_engine_fleet_scales_and_survives_loss(tiny_setup):
+    """Real engines behind the gateway: a saturating stream drains
+    completely with span throughput scaling fleet 1 -> 2, including a
+    mid-stream backend loss/rejoin on the larger fleet."""
+    cfg, _, _ = tiny_setup
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, 12) for _ in range(16)]
+
+    def run(n, lose=False):
+        gw = FleetGateway(_engine_fleet(tiny_setup, n),
+                          heartbeat_s=0.0005)
+        arr = np.cumsum(rng.exponential(1e-5, 16))
+        for i, t in enumerate(arr):
+            gw.submit(prompts[i], max_new=5, arrival_time=float(t))
+        if lose:
+            gw.fail_backend(1, at=0.001)
+            gw.restore_backend(1, at=0.003)
+        rep = gw.run_until_drained()
+        gw.close()
+        return rep
+
+    r1, r2 = run(1), run(2, lose=True)
+    assert r1.drained and r1.n_rejected == 0
+    assert r2.drained and r2.n_rejected == 0
+    assert r2.throughput_tok_s > r1.throughput_tok_s
+    assert r2.n_completed == 16
+
+
+def test_engine_fleet_lru_hit_is_token_identical(tiny_setup):
+    """Sequential identical requests through real engines: the second
+    is a cache hit replaying the first's exact tokens, with no second
+    decode (backend step count unchanged)."""
+    cfg, _, _ = tiny_setup
+    gw = FleetGateway(_engine_fleet(tiny_setup, 2), heartbeat_s=0.001,
+                      cache_capacity=8)
+    prompt = np.random.default_rng(1).integers(0, cfg.vocab_size, 12)
+    u1 = gw.submit(prompt, max_new=4, arrival_time=0.0)
+    gw.run_until_drained()
+    steps = sum(b.n_steps for b in gw.backends)
+    u2 = gw.submit(prompt, max_new=4, arrival_time=gw.clock_s)
+    rep = gw.run_until_drained()
+    assert gw.requests[u2].cache_hit
+    assert gw.requests[u2].tokens == gw.requests[u1].tokens
+    assert sum(b.n_steps for b in gw.backends) == steps
+    assert rep.cache_hits == 1 and rep.drained
+    gw.close()

@@ -1,7 +1,6 @@
 """Launch layer: spec fitting, input specs, collective parsing,
 roofline math — all without touching the 512-device dry-run."""
 import jax
-import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 

@@ -20,8 +20,7 @@ import pytest
 from repro.configs import get_config
 from repro.core.baselines import POWERINFER2
 from repro.core.clusters import HybridPlan
-from repro.core.planner import build_moe_plan, moe_synthetic_frequencies, \
-    permute_moe_params
+from repro.core.planner import build_moe_plan, permute_moe_params
 from repro.serving.engine import ServeEngine
 from repro.serving.families import serving_family
 from repro.serving.storage_plane import MoEStorageView
@@ -125,7 +124,8 @@ def test_trace_cold_ids_two_level_mapping():
     plan = HybridPlan(n_hot=S + CS, k_cold=CS, cluster_size=CS,
                       n_expert_hot=CS, n_pinned=S + 2 * CS)
     ncc = (f - CS) // CS                         # 1 cold cluster/expert
-    trace = np.array([[3, 1], [0, 0]], np.int32)  # (E, 1+ncc)
+    trace = np.array([[3, 1], [0, 0]], np.int32)
+    assert trace.shape == (cfg.num_experts, 1 + ncc)
     ids = view.trace_cold_ids(trace, plan)
     # expert 0's single cold cluster: rows [S + n_hot_e, S + f)
     np.testing.assert_array_equal(ids, np.arange(S + CS, S + f))

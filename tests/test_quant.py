@@ -6,7 +6,7 @@ import pytest
 
 from repro.quant.quantize import (
     bundle_nbytes_int4, dequantize_groupwise_int4, dequantize_mixed,
-    dequantize_per_channel_int4, quant_error, quantize_groupwise_int4,
+    quant_error, quantize_groupwise_int4,
     quantize_mixed, quantize_per_channel_int4)
 
 

@@ -312,7 +312,7 @@ def test_dp_head_of_line_engine_vs_single(setup):
     eng1 = ServeEngine(cfg, params, plan, spec=POWERINFER2,
                        offload_ratio=0.5, buckets=(1, 2),
                        ctx_budget=40, temperature=0.8)
-    a1 = eng1.submit(prompts[0], max_new=4, arrival_time=50.0)
+    eng1.submit(prompts[0], max_new=4, arrival_time=50.0)
     b1 = eng1.submit(prompts[1], max_new=4, arrival_time=0.0)
     eng1.run_until_drained()
     # single replica: FIFO head A blocks B past A's arrival

@@ -6,7 +6,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs.base import SparseFFNConfig
 from repro.core.clusters import HybridPlan, make_plan, scale_plan_for_batch
 from repro.core.sparse_ffn import ffn_dense, ffn_hybrid, init_ffn
 from repro.core.predictor import predict_scores

@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint.ckpt import restore_checkpoint, save_checkpoint
 from repro.data.pipeline import DataConfig, SyntheticTokens

@@ -2,7 +2,6 @@
 train -> plan -> permute -> serve, on one reduced model."""
 import jax
 import numpy as np
-import pytest
 
 from repro.configs import get_config
 from repro.core.baselines import POWERINFER2
