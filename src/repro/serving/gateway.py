@@ -34,7 +34,7 @@ needs:
   replays the recorded token stream with zero decode work.
 * **token streaming passthrough** — every decoded token is forwarded
   to the request's event stream the moment its backend step completes;
-  `stream()` yields (token, t_s) pairs live while driving the fleet,
+  `stream()` yields (t_s, token) events live while driving the fleet,
   and `AsyncGateway` exposes the same as an async iterator.
 
 The **fleet clock** is modeled exactly the way the engine models the
@@ -162,7 +162,9 @@ class ResponseLRU:
         self.misses = 0
 
     def get(self, key):
-        if self.capacity and key in self._d:
+        if not self.capacity:       # disabled: no hit/miss accounting
+            return None
+        if key in self._d:
             self._d.move_to_end(key)
             self.hits += 1
             return self._d[key]
@@ -787,6 +789,9 @@ def local_fleet(cfg, params, plan, n: int, *, weights=None,
     arena / key-chain / clock state) so fleet size never multiplies
     trace time. Lazy engine import keeps this module importable
     engine-free."""
+    if weights is not None and len(weights) != n:
+        raise ValueError(
+            f"weights has {len(weights)} entries for {n} engines")
     from repro.serving.engine import ServeEngine
     engines = [ServeEngine(cfg, params, plan, **engine_kwargs)
                for _ in range(n)]
@@ -856,6 +861,8 @@ class AsyncGateway:
                     sent += 1
                 if req.done:
                     break
+                if driver.done():
+                    driver.result()    # crashed driver raises here
                 await asyncio.sleep(0)
         finally:
             if req.done and not self.gw.has_work:

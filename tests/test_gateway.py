@@ -68,6 +68,13 @@ def test_response_lru_eviction_and_canonical_key():
     off = ResponseLRU(capacity=0)
     off.put(ka, [7])
     assert off.get(ka) is None and len(off) == 0
+    # a disabled cache reports no traffic at all, not all-misses
+    assert off.hits == 0 and off.misses == 0
+
+
+def test_local_fleet_rejects_mismatched_weights():
+    with pytest.raises(ValueError, match="weights"):
+        local_fleet(None, None, None, n=2, weights=[1.0])
 
 
 # ------------------------------------------------------- stub backends ----
@@ -386,6 +393,24 @@ def test_async_gateway_concurrent_generate_and_stream():
 
     with pytest.raises(BackendUnavailable):
         asyncio.run(rejected())
+
+
+def test_async_gateway_crashed_driver_propagates():
+    """A driver coroutine that dies mid-drive must raise in the
+    waiting client, not leave it spinning on an unfinished request."""
+    import asyncio
+    gw = FleetGateway([StubBackend()], heartbeat_s=0.0)
+    agw = AsyncGateway(gw)
+
+    def boom():
+        raise RuntimeError("driver crashed")
+    gw.step = boom
+
+    async def main():
+        await agw.generate([1], max_new=4)
+
+    with pytest.raises(RuntimeError, match="driver crashed"):
+        asyncio.run(main())
 
 
 # --------------------------------------------- real-engine integration ----
