@@ -87,7 +87,7 @@ def bench_bucket(params, cfg, plan, batch: int, reps: int):
            "k_cold": plan.k_cold,
            "clusters_in_flight": plan.clusters_per_group}
     for name, fn in fns.items():
-        row[name] = timeit(lambda: jax.block_until_ready(fn()),
+        row[name] = timeit(lambda fn=fn: jax.block_until_ready(fn()),
                            n=reps, warmup=1)
     # the backends must agree while they race — a bench that silently
     # compared a wrong kernel would calibrate garbage

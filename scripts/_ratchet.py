@@ -1,0 +1,51 @@
+"""Shared helpers for the repo's ratchet-style gates.
+
+Three gates share one shape — compare a fresh run against a committed
+baseline, fail on anything *new*, and fail on *stale* baseline entries
+too so the baseline only ever shrinks (prune via each gate's
+--update):
+
+* scripts/check_regressions.py   — test failures vs tests/known_failures.json
+* scripts/check_bench_trend.py   — bench metrics vs benchmarks/baselines/
+* scripts/repro_analyze.py       — static findings vs tests/analysis_allowlist.json
+
+This module holds the mechanics they share: baseline JSON I/O (one
+canonical on-disk format so --update rewrites are diff-stable) and the
+new/stale set split.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+_REQUIRED = object()
+
+
+def load_json(path: str, default=_REQUIRED):
+    """Read a JSON baseline. A missing file returns `default` when one
+    is given (gates treat absent baselines as empty); without a
+    default, missing is an error — fresh artifacts must exist."""
+    if not os.path.exists(path):
+        if default is _REQUIRED:
+            raise FileNotFoundError(path)
+        return default
+    with open(path, encoding="utf-8") as f:
+        return json.load(f)
+
+
+def dump_json(path: str, obj) -> None:
+    """Write a baseline in the gates' canonical format: indent=1,
+    sorted keys, trailing newline — so --update rewrites produce
+    minimal diffs."""
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(obj, f, indent=1, sort_keys=True)
+        f.write("\n")
+
+
+def diff_ratchet(current, allowed) -> tuple:
+    """Split a fresh result set against a baseline set. Returns
+    (new, stale), both sorted: `new` entries fail the gate outright;
+    `stale` baseline entries no longer occur and fail it too until
+    pruned — the ratchet only moves forward."""
+    cur, base = set(current), set(allowed)
+    return sorted(cur - base), sorted(base - cur)

@@ -31,9 +31,11 @@ direction) exits nonzero here, so CI runs it next to the real check.
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from _ratchet import dump_json, load_json  # noqa: E402
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DEFAULT_BASELINE_DIR = os.path.join(REPO, "benchmarks", "baselines")
@@ -186,11 +188,6 @@ def inject_regression(metrics: dict, tol: float) -> dict:
     return bad
 
 
-def _load(path: str) -> dict:
-    with open(path) as f:
-        return json.load(f)
-
-
 def _self_test(name: str, fresh: dict, tol: float) -> int:
     ok_probs, _ = compare(fresh, fresh, tol)
     bad_probs, _ = compare(inject_regression(fresh, tol), fresh, tol)
@@ -249,7 +246,7 @@ def main() -> int:
             )
             rc = 1
             continue
-        payload = _load(path)
+        payload = load_json(path)
         fresh = extract(payload, path)
         name = os.path.basename(path)
         bpath = os.path.join(args.baseline_dir, name)
@@ -260,9 +257,7 @@ def main() -> int:
 
         if args.update:
             os.makedirs(args.baseline_dir, exist_ok=True)
-            with open(bpath, "w") as f:
-                json.dump(payload, f, indent=1, sort_keys=True)
-                f.write("\n")
+            dump_json(bpath, payload)
             print(
                 f"[check_bench_trend] baseline <- {name} ({len(fresh)} gated metrics)"
             )
@@ -275,7 +270,7 @@ def main() -> int:
             )
             rc = 1
             continue
-        base = extract(_load(bpath), bpath)
+        base = extract(load_json(bpath), bpath)
         problems, notes = compare(fresh, base, args.tolerance)
         print(
             f"[check_bench_trend] {name}: {len(base)} baseline "

@@ -26,12 +26,14 @@ floor with --update.
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import subprocess
 import sys
 import tempfile
 import xml.etree.ElementTree as ET
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from _ratchet import diff_ratchet, dump_json, load_json  # noqa: E402
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DEFAULT_BASELINE = os.path.join(REPO, "tests", "known_failures.json")
@@ -77,13 +79,6 @@ def run_pytest(extra: list) -> tuple:
         return failed, total
 
 
-def load_baseline(path: str) -> dict:
-    if not os.path.exists(path):
-        return {}
-    with open(path) as f:
-        return json.load(f)
-
-
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--baseline", default=DEFAULT_BASELINE)
@@ -98,7 +93,7 @@ def main() -> int:
 
     series = jax_series()
     failed, total = run_pytest(args.pytest_args)
-    baseline_all = load_baseline(args.baseline)
+    baseline_all = load_json(args.baseline, default={})
     known = set(baseline_all.get(series, baseline_all.get("default", [])))
     # the collected floor only means anything for a full-suite run:
     # forwarded pytest args select a subset, which must neither trip
@@ -108,8 +103,7 @@ def main() -> int:
     floor = int(floors.get(series, min(floors.values(), default=0))) \
         if full_suite else 0
 
-    new = sorted(failed - known)
-    stale = sorted(known - failed)
+    new, stale = diff_ratchet(failed, known)
     print(f"\n[check_regressions] jax {series}: {total} tests, "
           f"{len(failed)} failed ({len(known)} known, "
           f"collected floor {floor})")
@@ -120,9 +114,7 @@ def main() -> int:
             baseline_all.pop(series)
         if full_suite:
             baseline_all.setdefault("_min_collected", {})[series] = total
-        with open(args.baseline, "w") as f:
-            json.dump(baseline_all, f, indent=1, sort_keys=True)
-            f.write("\n")
+        dump_json(args.baseline, baseline_all)
         print(f"[check_regressions] baseline[{series}] <- "
               f"{len(failed)} entries, _min_collected <- {total} "
               f"({args.baseline})")

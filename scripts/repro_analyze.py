@@ -1,0 +1,135 @@
+"""repro-analyze: jax/pallas-aware static analysis gate.
+
+Runs the checker battery in src/repro/analysis/ over the tree and
+fails on any finding that is neither inline-suppressed
+(`# repro: ignore[rule]` with a justification on the offending line or
+the line above) nor ratcheted in the committed allowlist
+(tests/analysis_allowlist.json, keyed "path:rule" -> reason). Like the
+repo's other gates, the allowlist only moves forward: a stale entry —
+one that no longer matches any finding — fails the gate until pruned
+with --update.
+
+Rules (see DESIGN.md §12): collective-axis / collective-budget /
+collective-fp32, dma-pairing / semaphore-scope / vmem-budget,
+wall-clock / py-random / tracer-branch / jit-static-args,
+protocol-method / family-fields, registry-drift / bench-gate-drift.
+
+  python scripts/repro_analyze.py                   # gate (CI)
+  python scripts/repro_analyze.py src/repro/kernels # subset
+  python scripts/repro_analyze.py --update          # re-ratchet
+  python scripts/repro_analyze.py --self-test       # prove rules fire
+
+--self-test analyzes the seeded-violation fixtures under
+src/repro/analysis/selftest/: every rule must fire where seeded, the
+clean fixtures must stay clean, and inline suppression must hold — a
+checker whose AST match rots fails here, not silently in the gate.
+
+Exit codes: 0 clean, 1 findings / stale entries / self-test failure,
+2 internal error (unparseable allowlist, bad arguments).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+REPO = os.path.dirname(_HERE)
+sys.path.insert(0, _HERE)
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+from _ratchet import dump_json, load_json  # noqa: E402
+from repro.analysis import (AnalysisConfig, all_rules,  # noqa: E402
+                            analyze_paths, apply_allowlist)
+
+DEFAULT_ALLOWLIST = os.path.join(REPO, "tests", "analysis_allowlist.json")
+_TAG = "[repro_analyze]"
+
+
+def run_self_test() -> int:
+    from repro.analysis.selftest import run_self_test as run
+    ok, lines = run()
+    for line in lines:
+        print(f"{_TAG} SELF-TEST {line}")
+    print(f"{_TAG} SELF-TEST "
+          f"{'OK: every rule fires' if ok else 'FAILED'} "
+          f"({len(all_rules())} rules)")
+    return 0 if ok else 1
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("paths", nargs="*",
+                    help="repo-relative files/dirs to scan "
+                         "(default: the whole tree)")
+    ap.add_argument("--allowlist", default=DEFAULT_ALLOWLIST)
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the allowlist to the current finding "
+                         "set (prunes stale entries, ratchets new ones)")
+    ap.add_argument("--allow-stale", action="store_true",
+                    help="stale allowlist entries warn instead of fail")
+    ap.add_argument("--self-test", action="store_true",
+                    help="run the seeded-violation fixtures instead of "
+                         "scanning the tree")
+    ap.add_argument("--psum-budget", type=int, default=1,
+                    help="max psums per shard_map body path (default 1)")
+    ap.add_argument("--vmem-cap-bytes", type=int,
+                    default=16 * 1024 * 1024,
+                    help="static VMEM estimate cap per kernel function")
+    args = ap.parse_args()
+
+    if args.self_test:
+        return run_self_test()
+
+    config = AnalysisConfig(psum_budget=args.psum_budget,
+                            vmem_cap_bytes=args.vmem_cap_bytes)
+    findings = analyze_paths(REPO, args.paths or None, config)
+    try:
+        allow = load_json(args.allowlist, default={})
+    except ValueError as e:
+        print(f"{_TAG} allowlist {args.allowlist} is not valid JSON: "
+              f"{e}", file=sys.stderr)
+        return 2
+    kept, allowed, stale = apply_allowlist(findings, allow)
+
+    if args.update:
+        fresh = {}
+        for f in findings:
+            fresh.setdefault(
+                f.key, allow.get(f.key,
+                                 "ratcheted legacy finding; fix, then "
+                                 "prune with --update"))
+        dump_json(args.allowlist, fresh)
+        print(f"{_TAG} allowlist <- {len(fresh)} entr"
+              f"{'y' if len(fresh) == 1 else 'ies'} "
+              f"({len(stale)} stale pruned) -> {args.allowlist}")
+        return 0
+
+    print(f"{_TAG} scanned tree: {len(findings)} finding(s), "
+          f"{len(allowed)} allowlisted, {len(stale)} stale "
+          f"allowlist entr{'y' if len(stale) == 1 else 'ies'}")
+    rc = 0
+    if kept:
+        rc = 1
+        for f in kept:
+            print(f"  FINDING {f}")
+        print(f"{_TAG} {len(kept)} finding(s): fix, add an inline "
+              f"`# repro: ignore[rule]` with a justification, or "
+              f"ratchet with --update")
+    if stale:
+        for key in stale:
+            print(f"  stale allowlist entry: {key} "
+                  f"({allow.get(key, '')!r})")
+        if not args.allow_stale:
+            print(f"{_TAG} stale entries fail the gate (the ratchet "
+                  f"only moves forward) — prune with --update")
+            rc = 1
+    if rc == 0:
+        print(f"{_TAG} OK: tree is clean under the committed allowlist")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,38 @@
+"""repro-analyze: jax/pallas-aware static analysis (DESIGN.md §12).
+
+The repo's three invariant families — shard-local collective
+discipline (§3/§8/§10), paired DMA start/wait + VMEM-bounded double
+buffering in the fused cluster kernel (§10, the executable form of the
+paper's §4.3 I/O pipeline), and the deterministic event clock every
+golden token-identity test leans on (§7/§11) — are *sampled* by tests
+but can rot silently between the sampled points. This package proves
+whole classes of those regressions absent at lint time.
+
+Layout:
+  framework.py       Finding/SourceFile/checker registry, inline
+                     `# repro: ignore[rule]` suppression, allowlist
+                     ratchet (scripts/_ratchet.py semantics).
+  collectives.py     collective-axis / collective-budget /
+                     collective-fp32 inside shard_map bodies.
+  kernel_hygiene.py  dma-pairing / semaphore-scope / vmem-budget for
+                     kernels/*.py.
+  trace_hazards.py   wall-clock / py-random / tracer-branch /
+                     jit-static-args in clock-driven + traced code.
+  protocol.py        protocol-method (BackendHandle impls) /
+                     family-fields (ServingFamily registrations).
+  drift.py           registry-drift (families vs conformance battery) /
+                     bench-gate-drift (BENCH kinds vs trend gate).
+  selftest/          seeded-violation fixtures proving every rule
+                     fires (scripts/repro_analyze.py --self-test);
+                     excluded from repo-wide scans.
+
+Entry point: scripts/repro_analyze.py (CI `static-analysis` job).
+"""
+from repro.analysis.framework import (
+    AnalysisConfig, Finding, SourceFile, all_rules, analyze_files,
+    analyze_paths, analyze_source, apply_allowlist, checkers,
+)
+
+__all__ = ["AnalysisConfig", "Finding", "SourceFile", "all_rules",
+           "analyze_files", "analyze_paths", "analyze_source",
+           "apply_allowlist", "checkers"]

@@ -1,0 +1,238 @@
+"""Collective discipline inside shard_map bodies (DESIGN.md §3/§8/§10).
+
+The mesh design holds every decode path to *shard-local* math plus
+exactly one fp32 psum per layer (the output reduction), with id-only
+all_gathers allowed on the side. Three rules make that checkable:
+
+* collective-axis   — every collective (psum / all_gather /
+                      psum_scatter / axis_index / ...) inside a
+                      shard_map body names an axis bound by that
+                      shard_map's `axis_names`; collectives *outside*
+                      any shard_map body have no bound axis at all.
+* collective-budget — no execution path through a shard_map body
+                      issues more than `psum_budget` psums (default 1
+                      — the one-fp32-psum-per-layer invariant; a psum
+                      inside a loop counts double so a looped
+                      reduction always trips).
+* collective-fp32   — psum operands are explicitly reduced in fp32
+                      (`.astype(jnp.float32)` somewhere in the
+                      operand): XLA:CPU's AllReducePromotion crashes
+                      on bf16 all-reduce inside partial-manual
+                      shard_map, and fp32 reduction is the numerics
+                      the goldens were recorded with.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.framework import (AnalysisConfig, Checker, Finding,
+                                      SourceFile, register_checker)
+
+# collectives whose axis argument we resolve; value = positional index
+# of the axis name when not passed as axis_name=
+_COLLECTIVES = {"psum": 1, "psum_scatter": 1, "all_gather": 1,
+                "pmean": 1, "pmax": 1, "pmin": 1, "all_to_all": 1,
+                "ppermute": 1, "axis_index": 0}
+_PSUMS = ("psum", "psum_scatter")
+
+
+def _call_name(call: ast.Call) -> str:
+    f = call.func
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    if isinstance(f, ast.Name):
+        return f.id
+    return ""
+
+
+def _iter_skip_defs(node):
+    """Walk a subtree without descending into nested function/class
+    definitions (their bodies only run when called)."""
+    stack = [node]
+    while stack:
+        n = stack.pop()
+        yield n
+        for child in ast.iter_child_nodes(n):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.Lambda, ast.ClassDef)):
+                continue
+            stack.append(child)
+
+
+def _collective_calls(node, include_defs=True):
+    it = ast.walk(node) if include_defs else _iter_skip_defs(node)
+    for n in it:
+        if isinstance(n, ast.Call) and _call_name(n) in _COLLECTIVES:
+            yield n
+
+
+def _axis_consts(call: ast.Call):
+    """The statically-resolvable axis names a collective call uses."""
+    name = _call_name(call)
+    pos = _COLLECTIVES[name]
+    cands = []
+    if len(call.args) > pos:
+        cands.append(call.args[pos])
+    for kw in call.keywords:
+        if kw.arg in ("axis_name", "axis"):
+            cands.append(kw.value)
+    axes = []
+    for c in cands:
+        if isinstance(c, ast.Constant) and isinstance(c.value, str):
+            axes.append(c.value)
+        elif isinstance(c, (ast.Tuple, ast.List, ast.Set)):
+            axes.extend(e.value for e in c.elts
+                        if isinstance(e, ast.Constant)
+                        and isinstance(e.value, str))
+    return axes
+
+
+def _count_psums(node) -> int:
+    return sum(1 for c in _collective_calls(node, include_defs=False)
+               if _call_name(c) in _PSUMS)
+
+
+def _max_path_psums(stmts) -> tuple:
+    """(max psums along any execution path, every path terminates).
+    Branch-aware so exclusive if/else arms (e.g. the pallas vs jnp
+    backend split, each ending in its own return) don't double-count."""
+    cur = 0
+    for i, s in enumerate(stmts):
+        if isinstance(s, ast.If):
+            t = _count_psums(s.test)
+            b, bret = _max_path_psums(s.body)
+            o, oret = _max_path_psums(s.orelse)
+            rest, rret = _max_path_psums(stmts[i + 1:])
+            outs, term = [], True
+            for cnt, ret in ((b, bret), (o, oret)):
+                if ret:
+                    outs.append(cur + t + cnt)
+                else:
+                    outs.append(cur + t + cnt + rest)
+                    term = term and rret
+            return max(outs), term
+        if isinstance(s, (ast.Return, ast.Raise)):
+            return cur + _count_psums(s), True
+        if isinstance(s, (ast.For, ast.AsyncFor, ast.While)):
+            body, _ = _max_path_psums(s.body)
+            orelse, _ = _max_path_psums(s.orelse)
+            head = s.test if isinstance(s, ast.While) else s.iter
+            # a psum in a loop body may run every iteration: double it
+            # so any looped reduction exceeds a budget of 1
+            cur += 2 * body + orelse + _count_psums(head)
+        elif isinstance(s, (ast.With, ast.AsyncWith)):
+            b, bret = _max_path_psums(s.body)
+            cur += b
+            if bret:
+                return cur, True
+        elif isinstance(s, ast.Try):
+            b, _ = _max_path_psums(s.body)
+            h = max((_max_path_psums(x.body)[0] for x in s.handlers),
+                    default=0)
+            f, _ = _max_path_psums(s.finalbody)
+            cur += b + h + f
+        elif isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef,
+                            ast.ClassDef)):
+            continue
+        else:
+            cur += _count_psums(s)
+    return cur, False
+
+
+def _shard_map_sites(tree):
+    """Yield (call, body_node, bound_axes) per shard_map call. The
+    body is the first positional arg: a lambda inline, or a FunctionDef
+    resolved by name anywhere in the module (shard_map bodies are
+    defined right next to their call in this codebase)."""
+    defs = {}
+    for n in ast.walk(tree):
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            defs[n.name] = n
+    for n in ast.walk(tree):
+        if not (isinstance(n, ast.Call)
+                and _call_name(n).endswith("shard_map")):
+            continue
+        if not n.args:
+            continue
+        target = n.args[0]
+        body = None
+        if isinstance(target, ast.Lambda):
+            body = target
+        elif isinstance(target, ast.Name):
+            body = defs.get(target.id)
+        axes = set()
+        spec_consts = set()
+        for kw in n.keywords:
+            if kw.arg == "axis_names":
+                for e in ast.walk(kw.value):
+                    if isinstance(e, ast.Constant) \
+                            and isinstance(e.value, str):
+                        axes.add(e.value)
+            elif kw.arg in ("in_specs", "out_specs"):
+                for e in ast.walk(kw.value):
+                    if isinstance(e, ast.Constant) \
+                            and isinstance(e.value, str):
+                        spec_consts.add(e.value)
+        if not axes:
+            axes = spec_consts      # pre-axis_names shard_map fallback
+        yield n, body, axes
+
+
+@register_checker
+class CollectiveChecker(Checker):
+    name = "collectives"
+    rules = ("collective-axis", "collective-budget", "collective-fp32")
+    scope = ("src/repro/",)
+
+    def check(self, src: SourceFile, config: AnalysisConfig) -> list:
+        findings = []
+        bodies = []          # (body_node, axes)
+        in_body = set()      # ids of collective calls inside some body
+        for _, body, axes in _shard_map_sites(src.tree):
+            if body is None:
+                continue
+            bodies.append((body, axes))
+            for c in _collective_calls(body):
+                in_body.add(id(c))
+
+        for body, axes in bodies:
+            for c in _collective_calls(body):
+                for ax in _axis_consts(c):
+                    if ax not in axes:
+                        findings.append(Finding(
+                            "collective-axis", src.path, c.lineno,
+                            f"{_call_name(c)} over axis {ax!r} which the "
+                            f"enclosing shard_map does not bind "
+                            f"(bound: {sorted(axes) or 'none'})"))
+            stmts = body.body if not isinstance(body, ast.Lambda) else []
+            n_psum, _ = _max_path_psums(stmts) if stmts else (
+                _count_psums(body.body), True)
+            if n_psum > config.psum_budget:
+                findings.append(Finding(
+                    "collective-budget", src.path, body.lineno,
+                    f"shard_map body issues up to {n_psum} psums on one "
+                    f"path (budget: {config.psum_budget} — DESIGN.md "
+                    f"one-fp32-psum-per-layer)"))
+            for c in _collective_calls(body):
+                if _call_name(c) not in _PSUMS or not c.args:
+                    continue
+                operand = c.args[0]
+                fp32 = any(isinstance(x, ast.Attribute)
+                           and x.attr == "float32"
+                           for x in ast.walk(operand))
+                if not fp32:
+                    findings.append(Finding(
+                        "collective-fp32", src.path, c.lineno,
+                        f"{_call_name(c)} operand is not explicitly "
+                        f"reduced in fp32 (.astype(jnp.float32)) — "
+                        f"bf16 all-reduce miscompiles on XLA:CPU and "
+                        f"drifts from the recorded goldens"))
+
+        for c in _collective_calls(src.tree):
+            if id(c) not in in_body:
+                findings.append(Finding(
+                    "collective-axis", src.path, c.lineno,
+                    f"{_call_name(c)} outside any shard_map body: no "
+                    f"axis is bound here (collectives live in the "
+                    f"shard-local bodies, DESIGN.md §3)"))
+        return findings

@@ -1,0 +1,155 @@
+"""Config/registry drift across gate boundaries.
+
+Two registries in this repo have a *shadow copy* that must track them
+by hand: the family registry (serving/families.py) is exercised by the
+conformance battery's own FAMILY_ARCHS map, and every benchmark's
+`"bench": <kind>` artifact kind must be named in check_bench_trend.py's
+EXTRACTORS table or its regressions sail through the trend gate
+unexamined. Both drifts are invisible to the test suite (the stale
+copy just silently covers less), so they are checked statically:
+
+* registry-drift   — every family name passed to register_family(...)
+                     (resolving one level of helper indirection: the
+                     `family=` kwarg of the ServingFamily construction
+                     inside the helper, mapped back through the
+                     helper's parameters to the call-site constant)
+                     appears as a string literal in the conformance
+                     battery.
+* bench-gate-drift — every `"bench": <kind>` emitted under
+                     benchmarks/ is a key of EXTRACTORS in
+                     scripts/check_bench_trend.py.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.framework import (AnalysisConfig, Finding,
+                                      RepoChecker, register_checker)
+
+_FUNCS = (ast.FunctionDef, ast.AsyncFunctionDef)
+
+
+def _call_name(call: ast.Call) -> str:
+    f = call.func
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    if isinstance(f, ast.Name):
+        return f.id
+    return ""
+
+
+def _const_str(node):
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    return None
+
+
+def _registered_families(tree):
+    """Yield (family_name, lineno) per register_family(...) call,
+    resolving one level of helper indirection."""
+    defs = {n.name: n for n in ast.walk(tree) if isinstance(n, _FUNCS)}
+    for call in ast.walk(tree):
+        if not (isinstance(call, ast.Call)
+                and _call_name(call) == "register_family" and call.args):
+            continue
+        arg = call.args[0]
+        # direct: register_family(ServingFamily(family="dense", ...))
+        if isinstance(arg, ast.Call) \
+                and _call_name(arg) == "ServingFamily":
+            for kw in arg.keywords:
+                if kw.arg == "family":
+                    name = _const_str(kw.value)
+                    if name:
+                        yield name, call.lineno
+            continue
+        # indirect: register_family(_dense_family("dense", ...))
+        if not isinstance(arg, ast.Call):
+            continue
+        helper = defs.get(_call_name(arg))
+        if helper is None:
+            continue
+        params = [a.arg for a in helper.args.posonlyargs
+                  + helper.args.args]
+        for ctor in ast.walk(helper):
+            if not (isinstance(ctor, ast.Call)
+                    and _call_name(ctor) == "ServingFamily"):
+                continue
+            for kw in ctor.keywords:
+                if kw.arg != "family":
+                    continue
+                name = _const_str(kw.value)
+                if name:                      # family="moe" in helper
+                    yield name, call.lineno
+                elif isinstance(kw.value, ast.Name) \
+                        and kw.value.id in params:
+                    # family=<param>: read the call-site argument
+                    i = params.index(kw.value.id)
+                    site = None
+                    if i < len(arg.args):
+                        site = _const_str(arg.args[i])
+                    for akw in arg.keywords:
+                        if akw.arg == kw.value.id:
+                            site = _const_str(akw.value)
+                    if site:
+                        yield site, call.lineno
+
+
+@register_checker
+class DriftChecker(RepoChecker):
+    name = "drift"
+    rules = ("registry-drift", "bench-gate-drift")
+
+    def check_repo(self, files: dict, config: AnalysisConfig) -> list:
+        findings = []
+        findings.extend(self._check_registry(files, config))
+        findings.extend(self._check_bench_gate(files, config))
+        return findings
+
+    # ------------------------------------------- family registry ----
+    def _check_registry(self, files: dict,
+                        config: AnalysisConfig) -> list:
+        fam_src = files.get(config.families_path)
+        conf_src = files.get(config.conformance_path)
+        if fam_src is None or conf_src is None:
+            return []
+        covered = {n.value for n in ast.walk(conf_src.tree)
+                   if isinstance(n, ast.Constant)
+                   and isinstance(n.value, str)}
+        return [Finding(
+            "registry-drift", config.families_path, line,
+            f"family {name!r} is registered but never named in "
+            f"{config.conformance_path}: the conformance battery "
+            f"silently skips it")
+            for name, line in _registered_families(fam_src.tree)
+            if name not in covered]
+
+    # ------------------------------------------------ bench gate ----
+    def _check_bench_gate(self, files: dict,
+                          config: AnalysisConfig) -> list:
+        gate_src = files.get(config.bench_gate_path)
+        if gate_src is None:
+            return []
+        gated = set()
+        for n in ast.walk(gate_src.tree):
+            if isinstance(n, ast.Assign) and isinstance(n.value, ast.Dict):
+                if any(isinstance(t, ast.Name) and t.id == "EXTRACTORS"
+                       for t in n.targets):
+                    gated = {k.value for k in n.value.keys
+                             if isinstance(k, ast.Constant)}
+        findings = []
+        for path, src in sorted(files.items()):
+            if not path.startswith(config.bench_emitter_prefix):
+                continue
+            for n in ast.walk(src.tree):
+                if not isinstance(n, ast.Dict):
+                    continue
+                for k, v in zip(n.keys, n.values):
+                    if _const_str(k) == "bench":
+                        kind = _const_str(v)
+                        if kind and kind not in gated:
+                            findings.append(Finding(
+                                "bench-gate-drift", path, v.lineno,
+                                f"bench kind {kind!r} has no extractor "
+                                f"in {config.bench_gate_path}: its "
+                                f"artifacts bypass the trend gate"))
+        return findings

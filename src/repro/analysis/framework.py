@@ -1,0 +1,251 @@
+"""Checker framework: findings, suppression, registry, allowlist.
+
+A checker is a small AST pass owning one or more *rules*. File
+checkers run per source file (scoped by path patterns); repo checkers
+run once over the whole parsed file set (cross-file invariants like
+protocol conformance and registry drift).
+
+Suppression is two-tier, mirroring the repo's other gates:
+
+* inline — a `# repro: ignore[rule]` comment on the finding's line
+  (or the line above it) suppresses that rule there; `ignore[*]`
+  suppresses every rule. Inline ignores are for *intentional*
+  violations and should carry a one-line justification.
+* allowlist — a committed JSON file mapping "path:rule" keys to a
+  reason, for bulk-ratcheting legacy findings. Like
+  tests/known_failures.json, the allowlist only ratchets forward:
+  an entry that no longer matches any finding is *stale* and fails
+  the gate until pruned (scripts/repro_analyze.py --update).
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+from dataclasses import dataclass, field
+
+__all__ = ["Finding", "SourceFile", "AnalysisConfig", "Checker",
+           "RepoChecker", "register_checker", "checkers", "all_rules",
+           "analyze_files", "analyze_paths", "analyze_source",
+           "apply_allowlist", "iter_python_files"]
+
+# paths containing any of these segments are never scanned repo-wide
+EXCLUDED_SEGMENTS = ("__pycache__", "analysis/selftest")
+
+_IGNORE_RE = re.compile(r"#\s*repro:\s*ignore\[([^\]]+)\]")
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One rule violation at a source location."""
+    rule: str
+    path: str        # repo-relative posix path
+    line: int        # 1-based
+    message: str
+
+    @property
+    def key(self) -> str:
+        """Allowlist key: line-insensitive so line churn above a
+        ratcheted finding does not invalidate the entry."""
+        return f"{self.path}:{self.rule}"
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+class SourceFile:
+    """One parsed source file plus its inline suppressions."""
+
+    def __init__(self, path: str, text: str):
+        self.path = path.replace(os.sep, "/")
+        self.text = text
+        self.tree = ast.parse(text, filename=path)
+        self.ignores: dict = {}          # line (1-based) -> set of rules
+        for i, raw in enumerate(text.splitlines(), start=1):
+            m = _IGNORE_RE.search(raw)
+            if m:
+                rules = {r.strip() for r in m.group(1).split(",")}
+                self.ignores[i] = rules
+
+    def suppressed(self, finding: Finding) -> bool:
+        for line in (finding.line, finding.line - 1):
+            rules = self.ignores.get(line)
+            if rules and (finding.rule in rules or "*" in rules):
+                return True
+        return False
+
+
+def _default_dims() -> dict:
+    # worst-case symbolic dims for the static VMEM estimate: serving
+    # bucket batches stay small, cluster tiles are 128-row MXU-aligned,
+    # d_model caps at the largest config the kernels serve. Unresolvable
+    # dims (attribute/subscript shapes) fall back to default_dim each.
+    return {"B": 16, "D": 2048, "d": 2048, "d_model": 2048, "cs": 256,
+            "cluster_size": 256, "R": 3, "r": 64, "rank": 64,
+            "nc_g": 64, "kc": 8, "G": 8, "groups": 8}
+
+
+@dataclass
+class AnalysisConfig:
+    """Tunables shared by the checkers. `scopes` overrides a checker's
+    default path patterns (the self-test points every checker at its
+    fixture files through this)."""
+    psum_budget: int = 1                 # max psums per shard_map body path
+    vmem_cap_bytes: int = 16 * 1024 * 1024   # one TPU core's VMEM
+    dim_assumptions: dict = field(default_factory=_default_dims)
+    default_dim: int = 128               # unresolvable symbolic dim
+    dtype_bytes: int = 4                 # estimate dtype (fp32 worst case)
+    scopes: dict = field(default_factory=dict)   # checker name -> patterns
+    # repo-checker inputs (repo-relative); drift/protocol read these
+    families_path: str = "src/repro/serving/families.py"
+    conformance_path: str = "tests/test_family_conformance.py"
+    bench_gate_path: str = "scripts/check_bench_trend.py"
+    bench_emitter_prefix: str = "benchmarks/"
+
+
+class Checker:
+    """Per-file AST pass. Subclasses set `name`, `rules`, default
+    `scope` (path substrings; empty = every file) and implement
+    `check`."""
+    name: str = ""
+    rules: tuple = ()
+    scope: tuple = ()
+
+    def applies(self, path: str, config: AnalysisConfig) -> bool:
+        patterns = config.scopes.get(self.name, self.scope)
+        if not patterns:
+            return True
+        return any(p in path for p in patterns)
+
+    def check(self, src: SourceFile, config: AnalysisConfig) -> list:
+        raise NotImplementedError
+
+
+class RepoChecker:
+    """Whole-tree pass over every parsed file (cross-file rules)."""
+    name: str = ""
+    rules: tuple = ()
+
+    def check_repo(self, files: dict, config: AnalysisConfig) -> list:
+        raise NotImplementedError
+
+
+_CHECKERS: list = []
+
+
+def register_checker(cls):
+    """Class decorator: instantiate and register a checker."""
+    _CHECKERS.append(cls())
+    return cls
+
+
+def checkers() -> list:
+    _ensure_loaded()
+    return list(_CHECKERS)
+
+
+def all_rules() -> tuple:
+    return tuple(sorted({r for c in checkers() for r in c.rules}))
+
+
+def _ensure_loaded():
+    # import the checker modules for their registration side effects
+    from repro.analysis import (collectives, drift, kernel_hygiene,  # noqa: F401
+                                protocol, trace_hazards)
+
+
+# ------------------------------------------------------------ running ----
+
+def analyze_files(files: dict, config: AnalysisConfig = None) -> list:
+    """Run every applicable checker over {path: source_text}. Returns
+    findings not suppressed inline, sorted by (path, line, rule)."""
+    config = config or AnalysisConfig()
+    parsed: dict = {}
+    findings: list = []
+    for path, text in files.items():
+        try:
+            parsed[path] = SourceFile(path, text)
+        except SyntaxError as e:
+            findings.append(Finding("syntax-error", path,
+                                    e.lineno or 1, str(e.msg)))
+    for checker in checkers():
+        if isinstance(checker, RepoChecker):
+            findings.extend(checker.check_repo(parsed, config))
+        else:
+            for path, src in parsed.items():
+                if checker.applies(path, config):
+                    findings.extend(checker.check(src, config))
+    kept = [f for f in findings
+            if f.path not in parsed or not parsed[f.path].suppressed(f)]
+    return sorted(kept, key=lambda f: (f.path, f.line, f.rule))
+
+
+def analyze_source(text: str, path: str,
+                   config: AnalysisConfig = None) -> list:
+    """Single-snippet entry for unit tests: file checkers only (repo
+    checkers need the cross-file context analyze_files provides)."""
+    config = config or AnalysisConfig()
+    src = SourceFile(path, text)
+    findings = []
+    for checker in checkers():
+        if isinstance(checker, RepoChecker):
+            continue
+        if checker.applies(src.path, config):
+            findings.extend(checker.check(src, config))
+    return sorted((f for f in findings if not src.suppressed(f)),
+                  key=lambda f: (f.line, f.rule))
+
+
+def iter_python_files(root: str, paths: list = None):
+    """Yield (repo-relative path, absolute path) for every scannable
+    .py file under `paths` (repo-relative; default: the whole tree)."""
+    roots = paths or ["."]
+    seen = set()
+    for rel_root in roots:
+        top = os.path.join(root, rel_root)
+        if os.path.isfile(top):
+            cands = [top]
+        else:
+            cands = []
+            for dirpath, dirnames, filenames in os.walk(top):
+                dirnames[:] = sorted(
+                    d for d in dirnames
+                    if not d.startswith(".") and d != "__pycache__")
+                cands.extend(os.path.join(dirpath, f)
+                             for f in sorted(filenames)
+                             if f.endswith(".py"))
+        for abspath in cands:
+            rel = os.path.relpath(abspath, root).replace(os.sep, "/")
+            if rel in seen:
+                continue
+            if any(seg in rel for seg in EXCLUDED_SEGMENTS):
+                continue
+            seen.add(rel)
+            yield rel, abspath
+
+
+def analyze_paths(root: str, paths: list = None,
+                  config: AnalysisConfig = None) -> list:
+    files = {}
+    for rel, abspath in iter_python_files(root, paths):
+        with open(abspath, encoding="utf-8") as f:
+            files[rel] = f.read()
+    return analyze_files(files, config)
+
+
+# ---------------------------------------------------------- allowlist ----
+
+def apply_allowlist(findings: list, allow: dict) -> tuple:
+    """Split findings against an allowlist of {key: reason}. Returns
+    (kept, allowed, stale_keys): `kept` must be fixed, `allowed` are
+    ratcheted, `stale_keys` no longer match anything and fail the gate
+    until pruned (ratchet semantics, scripts/_ratchet.py)."""
+    kept, allowed, used = [], [], set()
+    for f in findings:
+        if f.key in allow:
+            allowed.append(f)
+            used.add(f.key)
+        else:
+            kept.append(f)
+    stale = sorted(set(allow) - used)
+    return kept, allowed, stale

@@ -1,0 +1,247 @@
+"""Pallas kernel hygiene (DESIGN.md §10, the paper's §4.3 pipeline).
+
+The fused cluster kernel hand-drives its I/O: explicit
+`pltpu.make_async_copy` DMAs double-buffered through a VMEM scratch,
+synchronized by DMA semaphores. Nothing at trace time catches a DMA
+that is started and never waited (a race on the destination buffer) or
+a scratch that outgrows VMEM (a compile failure only on real TPUs —
+CI runs interpret mode, which happily "allocates" anything). Three
+rules:
+
+* dma-pairing     — every DMA descriptor (a direct make_async_copy or
+                    a local helper returning one) has both `.start()`
+                    and `.wait()` call sites in its defining top-level
+                    function; a start-only descriptor races its
+                    consumer, a wait-only one deadlocks, an unused one
+                    is dead I/O code.
+* semaphore-scope — DMA semaphores are allocated only through
+                    `pl.run_scoped(...)` (or pallas_call
+                    scratch_shapes), never ad hoc: scoped allocation
+                    is what guarantees the semaphore outlives every
+                    in-flight copy that signals it.
+* vmem-budget     — a static estimate of each top-level function's
+                    VMEM footprint (run_scoped VMEM allocations +
+                    BlockSpec tile shapes; dims resolved from literals
+                    and the configured symbol assumptions, x dtype
+                    bytes — buffer slots are just the leading shape
+                    dim) stays under `vmem_cap_bytes`.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.framework import (AnalysisConfig, Checker, Finding,
+                                      SourceFile, register_checker)
+
+_FUNCS = (ast.FunctionDef, ast.AsyncFunctionDef)
+
+
+def _attr_name(func) -> str:
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    if isinstance(func, ast.Name):
+        return func.id
+    return ""
+
+
+def _is_make_async_copy(node) -> bool:
+    return isinstance(node, ast.Call) \
+        and _attr_name(node.func) == "make_async_copy"
+
+
+def _iter_skip_defs(node):
+    """Walk without descending into nested function/class defs."""
+    stack = [node]
+    while stack:
+        n = stack.pop()
+        yield n
+        for child in ast.iter_child_nodes(n):
+            if isinstance(child, _FUNCS + (ast.Lambda, ast.ClassDef)):
+                continue
+            stack.append(child)
+
+
+def _returns_dma(fn) -> bool:
+    """Does this function's *own* body (nested defs excluded) return a
+    make_async_copy descriptor?"""
+    return any(isinstance(n, ast.Return) and _is_make_async_copy(n.value)
+               for n in _iter_skip_defs(fn))
+
+
+def _resolve_dims(node, config: AnalysisConfig) -> list:
+    """Flatten a shape expression into a list of estimated dims."""
+    if isinstance(node, (ast.Tuple, ast.List)):
+        dims = []
+        for e in node.elts:
+            dims.extend(_resolve_dims(e, config))
+        return dims
+    if isinstance(node, ast.BinOp) and isinstance(node.op, ast.Add):
+        # tuple concatenation, e.g. (2, cs) + w.shape[1:]
+        return (_resolve_dims(node.left, config)
+                + _resolve_dims(node.right, config))
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return [node.value]
+    if isinstance(node, ast.Name):
+        return [config.dim_assumptions.get(node.id, config.default_dim)]
+    if isinstance(node, ast.BinOp) and isinstance(node.op, ast.Mult):
+        left = _resolve_dims(node.left, config)
+        right = _resolve_dims(node.right, config)
+        if len(left) == 1 and len(right) == 1:
+            return [left[0] * right[0]]
+    # attribute / subscript / call: not statically resolvable
+    return [config.default_dim]
+
+
+def _shape_bytes(node, config: AnalysisConfig) -> int:
+    total = config.dtype_bytes
+    for d in _resolve_dims(node, config):
+        total *= max(int(d), 1)
+    return total
+
+
+@register_checker
+class KernelHygieneChecker(Checker):
+    name = "kernel-hygiene"
+    rules = ("dma-pairing", "semaphore-scope", "vmem-budget")
+    scope = ("src/repro/kernels/",)
+
+    def check(self, src: SourceFile, config: AnalysisConfig) -> list:
+        findings = []
+        tops = [n for n in src.tree.body if isinstance(n, _FUNCS)]
+        for cls in src.tree.body:
+            if isinstance(cls, ast.ClassDef):
+                tops.extend(n for n in cls.body if isinstance(n, _FUNCS))
+        for fn in tops:
+            findings.extend(self._check_dma(fn, src))
+            findings.extend(self._check_vmem(fn, src, config))
+        findings.extend(self._check_semaphores(src))
+        return findings
+
+    # ------------------------------------------------- dma pairing ----
+    def _check_dma(self, fn, src: SourceFile) -> list:
+        """Pair every DMA descriptor constructed anywhere under `fn`
+        (helpers may be nested arbitrarily deep — the fused kernel
+        defines its constructor inside a run_scoped body) with its
+        .start()/.wait() call sites in the same top-level function."""
+        helpers = {d.name: d for d in ast.walk(fn)
+                   if isinstance(d, _FUNCS) and d is not fn
+                   and _returns_dma(d)}
+        helper_nodes = set()
+        for d in helpers.values():
+            helper_nodes.update(id(n) for n in _iter_skip_defs(d))
+
+        def ctor_identity(call):
+            if not isinstance(call, ast.Call):
+                return None
+            if _is_make_async_copy(call):
+                return "<make_async_copy>"
+            name = _attr_name(call.func)
+            return name if name in helpers else None
+
+        started, waited, seen = {}, {}, {}
+        assigned = {}          # var name -> identity
+        for n in ast.walk(fn):
+            if isinstance(n, ast.Assign) and isinstance(n.value, ast.Call):
+                ident = ctor_identity(n.value)
+                if ident is not None:
+                    for t in n.targets:
+                        if isinstance(t, ast.Name):
+                            assigned[t.id] = ident
+                            seen.setdefault(ident, n.lineno)
+            if not isinstance(n, ast.Call):
+                continue
+            op = _attr_name(n.func)
+            ident = None
+            if isinstance(n.func, ast.Attribute):
+                base = n.func.value
+                if isinstance(base, ast.Call):
+                    ident = ctor_identity(base)
+                elif isinstance(base, ast.Name):
+                    ident = assigned.get(base.id)
+            if ident is not None:
+                seen.setdefault(ident, n.lineno)
+                if op == "start":
+                    started[ident] = n.lineno
+                elif op == "wait":
+                    waited[ident] = n.lineno
+            cident = ctor_identity(n)
+            # a make_async_copy inside a helper's own body is that
+            # helper's descriptor, not an anonymous one
+            if cident == "<make_async_copy>" and id(n) in helper_nodes:
+                cident = None
+            if cident is not None:
+                seen.setdefault(cident, n.lineno)
+        for h, hdef in helpers.items():
+            seen.setdefault(h, hdef.lineno)
+
+        findings = []
+        for ident, line in sorted(seen.items(), key=lambda kv: kv[1]):
+            has_start, has_wait = ident in started, ident in waited
+            if has_start and has_wait:
+                continue
+            label = (f"DMA helper {ident!r}" if ident in helpers
+                     else "make_async_copy descriptor")
+            if has_start:
+                msg = (f"{label} in {fn.name} is .start()ed but never "
+                       f".wait()ed: the copy races its consumer")
+            elif has_wait:
+                msg = (f"{label} in {fn.name} is .wait()ed but never "
+                       f".start()ed: the wait deadlocks")
+            else:
+                msg = (f"{label} in {fn.name} is constructed but "
+                       f"neither .start()ed nor .wait()ed (dead DMA)")
+            findings.append(Finding("dma-pairing", src.path, line, msg))
+        return findings
+
+    # ------------------------------------------------- vmem budget ----
+    def _check_vmem(self, fn, src: SourceFile,
+                    config: AnalysisConfig) -> list:
+        total, parts = 0, []
+        for n in ast.walk(fn):
+            if not isinstance(n, ast.Call):
+                continue
+            name = _attr_name(n.func)
+            if name == "VMEM" and n.args:
+                b = _shape_bytes(n.args[0], config)
+                total += b
+                parts.append(f"VMEM scratch ~{b // 1024}KiB "
+                             f"(line {n.lineno})")
+            elif name == "BlockSpec" and n.args \
+                    and isinstance(n.args[0], (ast.Tuple, ast.List)):
+                b = _shape_bytes(n.args[0], config)
+                total += b
+                parts.append(f"block ~{b // 1024}KiB (line {n.lineno})")
+        if total > config.vmem_cap_bytes:
+            return [Finding(
+                "vmem-budget", src.path, fn.lineno,
+                f"{fn.name}: estimated VMEM footprint "
+                f"{total / 2**20:.1f}MiB exceeds the "
+                f"{config.vmem_cap_bytes / 2**20:.0f}MiB cap "
+                f"({'; '.join(parts)})")]
+        return []
+
+    # -------------------------------------------------- semaphores ----
+    def _check_semaphores(self, src: SourceFile) -> list:
+        scoped = set()
+        for n in ast.walk(src.tree):
+            if isinstance(n, ast.Call) \
+                    and _attr_name(n.func) in ("run_scoped",
+                                               "pallas_call"):
+                regions = list(n.args) if _attr_name(
+                    n.func) == "run_scoped" else []
+                regions += [kw.value for kw in n.keywords
+                            if _attr_name(n.func) == "run_scoped"
+                            or kw.arg == "scratch_shapes"]
+                for region in regions:
+                    scoped.update(id(sub) for sub in ast.walk(region))
+        findings = []
+        for n in ast.walk(src.tree):
+            if isinstance(n, ast.Attribute) \
+                    and n.attr == "SemaphoreType" and id(n) not in scoped:
+                findings.append(Finding(
+                    "semaphore-scope", src.path, n.lineno,
+                    "DMA semaphore allocated outside pl.run_scoped / "
+                    "pallas_call scratch_shapes: scoped allocation is "
+                    "what keeps the semaphore alive for every "
+                    "in-flight copy that signals it"))
+        return findings

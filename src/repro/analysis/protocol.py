@@ -1,0 +1,233 @@
+"""Protocol conformance: BackendHandle impls + ServingFamily entries.
+
+The gateway dispatches over the narrow `BackendHandle` surface and the
+engine serves whatever the `ServingFamily` registry provides — both
+are duck-typed, so a drifted signature (an added parameter, a method
+renamed, a property turned method) only explodes at dispatch time, on
+whichever path the conformance battery happens to exercise. Two rules:
+
+* protocol-method — every class subclassing a protocol base (default:
+                    BackendHandle) overrides each abstract method
+                    (body raises NotImplementedError in the base) with
+                    a compatible signature: same required positional
+                    arity, extra parameters only with defaults,
+                    property-ness preserved.
+* family-fields   — every `ServingFamily(...)` construction passes the
+                    full required field set (all dataclass fields
+                    without defaults), and any field value resolvable
+                    to a local def/lambda accepts the registry's
+                    documented call shape (families.py field
+                    comments): make_model(cfg) / make_decode_step(cfg)
+                    / build_plan(cfg, freqs=, hw=, backend=) /
+                    prepare_params(params, plan).
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.framework import (AnalysisConfig, Finding,
+                                      RepoChecker, register_checker)
+
+_FUNCS = (ast.FunctionDef, ast.AsyncFunctionDef)
+
+# field -> (min required positional args, required keyword names)
+_FAMILY_CALL_SHAPES = {
+    "make_model": (1, ()),
+    "make_decode_step": (1, ()),
+    "build_plan": (1, ("freqs", "hw", "backend")),
+    "prepare_params": (2, ()),
+}
+
+
+def _attr_name(func) -> str:
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    if isinstance(func, ast.Name):
+        return func.id
+    return ""
+
+
+def _is_property(fn) -> bool:
+    return any(_attr_name(d) == "property" for d in fn.decorator_list)
+
+
+def _raises_not_implemented(fn) -> bool:
+    for n in fn.body:
+        if isinstance(n, ast.Raise):
+            exc = n.exc
+            name = _attr_name(exc.func) if isinstance(exc, ast.Call) \
+                else _attr_name(exc) if exc is not None else ""
+            if name == "NotImplementedError":
+                return True
+    return False
+
+
+def _signature(fn) -> tuple:
+    """(required positional names, optional count, has *args,
+    has **kwargs) — self excluded."""
+    pos = [a.arg for a in fn.args.posonlyargs + fn.args.args]
+    if pos and pos[0] in ("self", "cls"):
+        pos = pos[1:]
+    n_opt = len(fn.args.defaults)
+    required = pos[:len(pos) - n_opt] if n_opt else pos
+    return (tuple(required), n_opt,
+            fn.args.vararg is not None, fn.args.kwarg is not None)
+
+
+def _accepts(fn, n_pos: int, kwnames: tuple) -> bool:
+    """Can `fn` be called with n_pos positional args plus the given
+    keyword names (each possibly omitted)?"""
+    required, n_opt, varargs, varkw = _signature(fn)
+    total_pos = len(required) + n_opt
+    if len(required) > n_pos and not all(
+            r in kwnames for r in required[n_pos:]):
+        return False
+    if n_pos > total_pos and not varargs:
+        return False
+    if varkw:
+        return True
+    pos = [a.arg for a in fn.args.posonlyargs + fn.args.args]
+    kwonly = [a.arg for a in fn.args.kwonlyargs]
+    accept = set(pos + kwonly)
+    return all(k in accept for k in kwnames) or not kwnames
+
+
+@register_checker
+class ProtocolChecker(RepoChecker):
+    name = "protocol"
+    rules = ("protocol-method", "family-fields")
+
+    def check_repo(self, files: dict, config: AnalysisConfig) -> list:
+        findings = []
+        findings.extend(self._check_protocols(files, config))
+        findings.extend(self._check_families(files, config))
+        return findings
+
+    # -------------------------------------------- protocol bases ----
+    def _check_protocols(self, files: dict,
+                         config: AnalysisConfig) -> list:
+        # find protocol base classes: any class named *Handle defining
+        # at least one NotImplementedError method
+        bases = {}          # name -> (path, {method: (fn, is_prop, abstract)})
+        for path, src in files.items():
+            for cls in ast.walk(src.tree):
+                if not isinstance(cls, ast.ClassDef):
+                    continue
+                methods = {n.name: (n, _is_property(n),
+                                    _raises_not_implemented(n))
+                           for n in cls.body if isinstance(n, _FUNCS)}
+                if any(abst for _, _, abst in methods.values()) \
+                        and cls.name.endswith("Handle"):
+                    bases[cls.name] = (path, methods)
+
+        findings = []
+        for path, src in files.items():
+            for cls in ast.walk(src.tree):
+                if not isinstance(cls, ast.ClassDef):
+                    continue
+                for base in cls.bases:
+                    bname = _attr_name(base)
+                    if bname not in bases:
+                        continue
+                    findings.extend(self._check_impl(
+                        cls, bases[bname], bname, path))
+        return findings
+
+    def _check_impl(self, cls, base_entry, bname, path) -> list:
+        _, base_methods = base_entry
+        impl = {n.name: n for n in cls.body if isinstance(n, _FUNCS)}
+        findings = []
+        for mname, (bfn, bprop, abstract) in sorted(base_methods.items()):
+            if not abstract:
+                continue            # base provides a default body
+            if mname not in impl:
+                findings.append(Finding(
+                    "protocol-method", path, cls.lineno,
+                    f"{cls.name} ({bname} impl) does not override "
+                    f"abstract {'property' if bprop else 'method'} "
+                    f"{mname!r}: dispatch raises NotImplementedError "
+                    f"at runtime"))
+                continue
+            ifn = impl[mname]
+            if _is_property(ifn) != bprop:
+                findings.append(Finding(
+                    "protocol-method", path, ifn.lineno,
+                    f"{cls.name}.{mname} "
+                    f"{'drops' if bprop else 'adds'} @property vs "
+                    f"{bname}.{mname}: callers access it the other "
+                    f"way"))
+                continue
+            breq, _, _, _ = _signature(bfn)
+            ireq, _, ivar, _ = _signature(ifn)
+            if not ivar and len(ireq) != len(breq):
+                findings.append(Finding(
+                    "protocol-method", path, ifn.lineno,
+                    f"{cls.name}.{mname} requires {len(ireq)} "
+                    f"positional args where {bname}.{mname} declares "
+                    f"{len(breq)} ({', '.join(breq) or 'none'}): "
+                    f"dispatch sites pass exactly the protocol shape"))
+        return findings
+
+    # ------------------------------------------- family registry ----
+    def _check_families(self, files: dict,
+                        config: AnalysisConfig) -> list:
+        src = files.get(config.families_path)
+        if src is None:
+            return []
+        findings = []
+        # required fields = dataclass fields without defaults
+        required = []
+        for cls in ast.walk(src.tree):
+            if isinstance(cls, ast.ClassDef) \
+                    and cls.name == "ServingFamily":
+                for n in cls.body:
+                    if isinstance(n, ast.AnnAssign) \
+                            and isinstance(n.target, ast.Name) \
+                            and n.value is None:
+                        required.append(n.target.id)
+        if not required:
+            return []
+        defs = {n.name: n for n in ast.walk(src.tree)
+                if isinstance(n, _FUNCS)}
+        for call in ast.walk(src.tree):
+            if not (isinstance(call, ast.Call)
+                    and _attr_name(call.func) == "ServingFamily"):
+                continue
+            given = {kw.arg for kw in call.keywords if kw.arg}
+            n_pos = len(call.args)
+            missing = [f for f in required[n_pos:] if f not in given]
+            if missing:
+                findings.append(Finding(
+                    "family-fields", config.families_path, call.lineno,
+                    f"ServingFamily(...) misses required field(s) "
+                    f"{', '.join(missing)}: the registry entry fails "
+                    f"at first use, not at registration"))
+            for kw in call.keywords:
+                shape = _FAMILY_CALL_SHAPES.get(kw.arg)
+                if shape is None:
+                    continue
+                fn = None
+                if isinstance(kw.value, ast.Name):
+                    fn = defs.get(kw.value.id)
+                elif isinstance(kw.value, ast.Lambda):
+                    fn = kw.value
+                if fn is None or isinstance(fn, ast.Lambda):
+                    # lambdas: check positional arity only
+                    if isinstance(fn, ast.Lambda):
+                        n_req = len(fn.args.args) - len(fn.args.defaults)
+                        if n_req > shape[0]:
+                            findings.append(Finding(
+                                "family-fields", config.families_path,
+                                kw.value.lineno,
+                                f"{kw.arg} lambda requires {n_req} "
+                                f"positional args; the engine calls it "
+                                f"with {shape[0]}"))
+                    continue
+                if not _accepts(fn, shape[0], shape[1]):
+                    findings.append(Finding(
+                        "family-fields", config.families_path,
+                        kw.value.lineno,
+                        f"{kw.arg}={fn.name} does not accept the "
+                        f"registry call shape ({shape[0]} positional"
+                        f"{' + kw ' + ','.join(shape[1]) if shape[1] else ''})"))
+        return findings

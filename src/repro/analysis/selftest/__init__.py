@@ -1,0 +1,110 @@
+"""Seeded-violation self-test: proves every rule actually fires.
+
+Each `bad_*.py` / `*_bad.py` fixture in this directory seeds specific
+violations; the clean fixtures must produce zero findings (including
+one whose violation carries an inline `# repro: ignore[...]`, proving
+suppression end to end). `run_self_test()` analyzes the fixture set
+with every checker's scope pointed here and asserts the rule<->fixture
+map below — a checker whose rule stops firing (a refactor broke its
+AST match) fails the self-test, not silently the repo gate.
+
+This directory is in `framework.EXCLUDED_SEGMENTS`: fixtures are never
+scanned repo-wide, never imported, never executed.
+"""
+from __future__ import annotations
+
+import os
+
+from repro.analysis.framework import (AnalysisConfig, all_rules,
+                                      analyze_files)
+
+_DIR = os.path.dirname(os.path.abspath(__file__))
+
+# rule -> fixture file its seeded violation lives in
+EXPECTED = {
+    "collective-axis": "bad_collectives.py",
+    "collective-budget": "bad_collectives.py",
+    "collective-fp32": "bad_collectives.py",
+    "dma-pairing": "bad_kernels.py",
+    "semaphore-scope": "bad_kernels.py",
+    "vmem-budget": "bad_kernels.py",
+    "wall-clock": "bad_trace.py",
+    "py-random": "bad_trace.py",
+    "tracer-branch": "bad_trace.py",
+    "jit-static-args": "bad_trace.py",
+    "protocol-method": "bad_handle.py",
+    "family-fields": "families_bad.py",
+    "registry-drift": "families_bad.py",
+    "bench-gate-drift": "bench_emit_bad.py",
+}
+
+CLEAN = ("good_all.py", "suppressed.py", "conformance.py",
+         "bench_gate.py")
+
+# unparseable source must surface as a finding, not an exception
+_BROKEN = "def broken(:\n"
+
+
+def fixture_config() -> AnalysisConfig:
+    scopes = {name: ("selftest/",)
+              for name in ("collectives", "kernel-hygiene",
+                           "trace-hazards")}
+    return AnalysisConfig(
+        scopes=scopes,
+        families_path="selftest/families_bad.py",
+        conformance_path="selftest/conformance.py",
+        bench_gate_path="selftest/bench_gate.py",
+        bench_emitter_prefix="selftest/bench_emit",
+    )
+
+
+def load_fixtures() -> dict:
+    files = {}
+    for fname in sorted(os.listdir(_DIR)):
+        if fname.endswith(".py") and fname != "__init__.py":
+            with open(os.path.join(_DIR, fname), encoding="utf-8") as fh:
+                files[f"selftest/{fname}"] = fh.read()
+    files["selftest/broken_syntax.py"] = _BROKEN
+    return files
+
+
+def run_self_test():
+    """Returns (ok, report_lines)."""
+    findings = analyze_files(load_fixtures(), fixture_config())
+    by_file: dict = {}
+    for f in findings:
+        by_file.setdefault(f.path, []).append(f)
+
+    ok, lines = True, []
+    for rule in sorted(set(EXPECTED) | set(all_rules())):
+        want = EXPECTED.get(rule)
+        if want is None:
+            ok = False
+            lines.append(f"FAIL {rule}: no fixture seeds this rule")
+            continue
+        hits = [f for f in by_file.get(f"selftest/{want}", [])
+                if f.rule == rule]
+        if hits:
+            lines.append(f"ok   {rule}: fires in {want} "
+                         f"(line {hits[0].line})")
+        else:
+            ok = False
+            lines.append(f"FAIL {rule}: seeded violation in {want} "
+                         f"did not fire")
+    for fname in CLEAN:
+        extra = by_file.get(f"selftest/{fname}", [])
+        if extra:
+            ok = False
+            lines.append(f"FAIL clean fixture {fname} produced: "
+                         + "; ".join(str(f) for f in extra))
+        else:
+            lines.append(f"ok   clean fixture {fname}: no findings")
+    if any(f.rule == "syntax-error"
+           for f in by_file.get("selftest/broken_syntax.py", [])):
+        lines.append("ok   syntax-error: unparseable source reported "
+                     "as a finding")
+    else:
+        ok = False
+        lines.append("FAIL syntax-error: unparseable source not "
+                     "reported")
+    return ok, lines

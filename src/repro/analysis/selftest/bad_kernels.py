@@ -1,0 +1,19 @@
+"""Seeded violations: dma-pairing, semaphore-scope, vmem-budget.
+Fixture only — never imported or executed."""
+import jax.experimental.pallas as pl
+import jax.numpy as jnp
+from jax.experimental.pallas import tpu as pltpu
+
+
+def leaky_kernel(x_ref, o_ref, w_hbm):
+    sem = pltpu.SemaphoreType.DMA((2,))     # ad hoc, outside run_scoped
+    cp = pltpu.make_async_copy(w_hbm, o_ref, sem)
+    cp.start()                              # started but never waited
+    o_ref[...] = x_ref[...]
+
+
+def huge_scratch(body):
+    return pl.run_scoped(
+        body,
+        buf=pltpu.VMEM((4, 4096, 4096), jnp.float32),   # ~256MiB scratch
+    )

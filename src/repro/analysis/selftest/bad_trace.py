@@ -1,0 +1,22 @@
+"""Seeded violations: wall-clock, py-random, tracer-branch,
+jit-static-args. Fixture only — never imported or executed."""
+import functools
+import random
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "missing"))
+def decode_step(x, mode="greedy"):
+    y = jnp.tanh(x)
+    if y:                       # Python truthiness on a traced value
+        y = y + 1.0
+    return y if mode == "greedy" else -y
+
+
+def sample_delay():
+    t0 = time.perf_counter()    # wall clock in clock-driven code
+    jitter = random.random()    # global-state RNG
+    return t0 + jitter

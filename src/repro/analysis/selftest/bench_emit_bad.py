@@ -1,0 +1,6 @@
+"""Seeded violation: bench-gate-drift (emits a kind the gate fixture
+has no extractor for). Fixture only — never imported or executed."""
+
+
+def emit():
+    return {"bench": "rogue", "metrics": {"tok_s": 0.0}}

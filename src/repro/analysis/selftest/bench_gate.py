@@ -1,0 +1,9 @@
+"""Clean fixture: the trend gate's extractor table (gates 'serving'
+only, so bench_emit_bad's 'rogue' kind drifts)."""
+
+
+def _serving(doc):
+    return doc
+
+
+EXTRACTORS = {"serving": _serving}

@@ -1,0 +1,4 @@
+"""Clean fixture: the conformance battery's family parametrization
+(covers 'dense' only, so families_bad's 'ghost' drifts)."""
+
+FAMILY_ARCHS = {"dense": "tiny"}

@@ -1,0 +1,34 @@
+"""Seeded violations: family-fields (missing field, wrong call
+shapes), registry-drift (family absent from the conformance fixture).
+Fixture only — never imported or executed."""
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ServingFamily:
+    family: str
+    make_model: object
+    make_decode_step: object
+    build_plan: object
+    prepare_params: object
+    default_arch: str = ""
+
+
+def register_family(fam):
+    return fam
+
+
+def _make_model(cfg):
+    return cfg
+
+
+def _plan_two(cfg, extra):
+    return (cfg, extra)
+
+
+register_family(ServingFamily(
+    family="ghost",             # never named in the conformance fixture
+    make_model=_make_model,
+    build_plan=_plan_two,       # cannot accept (cfg, freqs=, hw=, backend=)
+    prepare_params=_make_model,     # needs to accept (params, plan)
+))                              # make_decode_step missing entirely

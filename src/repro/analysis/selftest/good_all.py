@@ -1,0 +1,31 @@
+"""Clean fixture: disciplined collectives, paired DMA, scoped
+semaphores, small scratch — must produce zero findings."""
+import jax
+import jax.experimental.pallas as pl
+import jax.numpy as jnp
+from jax.experimental.pallas import tpu as pltpu
+
+
+def local(x):
+    y = jax.lax.psum(x.astype(jnp.float32), "model")
+    idx = jax.lax.all_gather(y, "model")
+    return y, idx
+
+
+def build(mesh, shard_map):
+    return shard_map(local, mesh=mesh, in_specs=("model",),
+                     out_specs=("model",), axis_names={"model"})
+
+
+def pipelined(x_ref, o_ref, w_hbm):
+    def body(buf, sem):
+        cp = pltpu.make_async_copy(w_hbm, buf.at[0], sem.at[0])
+        cp.start()
+        cp.wait()
+        o_ref[...] = x_ref[...] + buf[0]
+
+    return pl.run_scoped(
+        body,
+        buf=pltpu.VMEM((2, 256, 128), jnp.float32),
+        sem=pltpu.SemaphoreType.DMA((2,)),
+    )

@@ -1,0 +1,8 @@
+"""Clean fixture: a real violation carrying an inline ignore — proves
+`# repro: ignore[rule]` suppression works end to end."""
+import time
+
+
+def observe():
+    # observability stat, not the modeled clock
+    return time.perf_counter()  # repro: ignore[wall-clock]

@@ -1,0 +1,305 @@
+"""Trace/determinism hazards in clock-driven and traced code.
+
+Two determinism contracts hold the golden tests together: the modeled
+clocks (engine device clock §7, gateway fleet clock §11) are the ONLY
+time source in serving code, and every traced decode path is a pure
+function of (params, tokens, rng-key chain). Wall-clock reads, global
+RNG state, or Python control flow on tracer values each break one of
+them — silently, until a golden flakes. Four rules:
+
+* wall-clock      — no time.time/perf_counter/monotonic or
+                    datetime.now in the scanned set: modeled clocks
+                    only (intentional observability reads carry an
+                    inline ignore).
+* py-random       — no stdlib `random.*` and no numpy global-state RNG
+                    (`np.random.<fn>`); `np.random.default_rng(seed)`
+                    with an explicit seed is fine (deterministic), a
+                    seedless `default_rng()` is not. jax.random is
+                    threaded-key and always fine.
+* tracer-branch   — inside traced functions (jit-decorated, shard_map
+                    bodies, pallas kernels, and their nested defs), no
+                    Python `if`/`while`/`assert`/`bool()` on a value
+                    produced by a jnp/jax call: tracer truthiness
+                    either crashes or, worse, burns one trace's branch
+                    into every execution.
+* jit-static-args — `static_argnames` entries must exist in the jitted
+                    function's signature and must not default to a
+                    non-hashable (list/dict/set) value;
+                    `static_argnums` must be in positional range. A
+                    drifted static name silently stops being static
+                    (retrace per call) or throws at first call.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.framework import (AnalysisConfig, Checker, Finding,
+                                      SourceFile, register_checker)
+
+_FUNCS = (ast.FunctionDef, ast.AsyncFunctionDef)
+
+_TIME_ATTRS = {"time", "time_ns", "perf_counter", "perf_counter_ns",
+               "monotonic", "monotonic_ns", "process_time", "clock"}
+_DATETIME_ATTRS = {"now", "utcnow", "today"}
+
+
+def _attr_name(func) -> str:
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    if isinstance(func, ast.Name):
+        return func.id
+    return ""
+
+
+def _root_name(node) -> str:
+    while isinstance(node, ast.Attribute):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else ""
+
+
+def _module_aliases(tree) -> dict:
+    """Names bound to imported modules: {'np': 'numpy', 'random':
+    'random', ...} — so a local variable named `random` never trips
+    the RNG rule."""
+    aliases = {}
+    for n in ast.walk(tree):
+        if isinstance(n, ast.Import):
+            for a in n.names:
+                aliases[a.asname or a.name.split(".")[0]] = a.name
+        elif isinstance(n, ast.ImportFrom) and n.module:
+            for a in n.names:
+                aliases.setdefault(a.asname or a.name,
+                                   f"{n.module}.{a.name}")
+    return aliases
+
+
+def _is_jax_call(call: ast.Call) -> bool:
+    return _root_name(call.func) in ("jnp", "jax", "lax")
+
+
+@register_checker
+class TraceHazardChecker(Checker):
+    name = "trace-hazards"
+    rules = ("wall-clock", "py-random", "tracer-branch",
+             "jit-static-args")
+    scope = ("src/repro/serving/", "src/repro/core/sparse_ffn.py",
+             "src/repro/kernels/")
+
+    def check(self, src: SourceFile, config: AnalysisConfig) -> list:
+        findings = []
+        aliases = _module_aliases(src.tree)
+        findings.extend(self._check_clock_and_rng(src, aliases))
+        findings.extend(self._check_tracer_branches(src))
+        findings.extend(self._check_jit_static(src))
+        return findings
+
+    # --------------------------------------------- clock + rng ----
+    def _check_clock_and_rng(self, src: SourceFile,
+                             aliases: dict) -> list:
+        findings = []
+        for n in ast.walk(src.tree):
+            if not (isinstance(n, ast.Call)
+                    and isinstance(n.func, ast.Attribute)):
+                continue
+            attr, base = n.func.attr, n.func.value
+            base_root = _root_name(base)
+            base_mod = aliases.get(base_root, "")
+            if attr in _TIME_ATTRS and base_mod == "time":
+                findings.append(Finding(
+                    "wall-clock", src.path, n.lineno,
+                    f"time.{attr}() in clock-driven code: the modeled "
+                    f"event clock (DESIGN.md §7/§11) is the only time "
+                    f"source the deterministic goldens allow"))
+            elif attr in _DATETIME_ATTRS \
+                    and "datetime" in (base_mod,
+                                       getattr(base, "attr", "")):
+                findings.append(Finding(
+                    "wall-clock", src.path, n.lineno,
+                    f"datetime {attr}() in clock-driven code: use the "
+                    f"modeled event clock"))
+            elif base_mod == "random":
+                findings.append(Finding(
+                    "py-random", src.path, n.lineno,
+                    f"stdlib random.{attr}() draws from global mutable "
+                    f"state: thread a jax key or a seeded "
+                    f"np.random.default_rng through instead"))
+            elif isinstance(base, ast.Attribute) \
+                    and base.attr == "random" \
+                    and aliases.get(_root_name(base), "") == "numpy":
+                if attr == "default_rng" and (n.args or n.keywords):
+                    continue           # explicitly seeded: deterministic
+                how = ("() without a seed" if attr == "default_rng"
+                       else " global-state RNG")
+                findings.append(Finding(
+                    "py-random", src.path, n.lineno,
+                    f"np.random.{attr}{how}: serving determinism "
+                    f"requires an explicit seed"))
+        return findings
+
+    # ------------------------------------------- tracer branches ----
+    def _traced_functions(self, tree) -> list:
+        """Functions whose bodies run under a jax trace: jit-decorated,
+        shard_map bodies, pallas kernels — plus everything nested in
+        them."""
+        defs = {n.name: n for n in ast.walk(tree)
+                if isinstance(n, _FUNCS)}
+        traced = []
+        for fn in defs.values():
+            for dec in fn.decorator_list:
+                names = {_attr_name(x) for x in ast.walk(dec)
+                         if isinstance(x, (ast.Attribute, ast.Name))}
+                if "jit" in names:
+                    traced.append(fn)
+        for n in ast.walk(tree):
+            if not isinstance(n, ast.Call):
+                continue
+            fname = _attr_name(n.func)
+            target = None
+            if fname.endswith("shard_map") and n.args:
+                target = n.args[0]
+            elif fname == "pallas_call" and n.args:
+                target = n.args[0]
+                # pallas kernels are usually partial(_kernel, ...)
+                if isinstance(target, ast.Call) and target.args:
+                    target = target.args[0]
+            if isinstance(target, ast.Name) and target.id in defs:
+                traced.append(defs[target.id])
+        out, seen = [], set()
+        for fn in traced:
+            for sub in ast.walk(fn):
+                if isinstance(sub, _FUNCS) and id(sub) not in seen:
+                    seen.add(id(sub))
+                    out.append(sub)
+        return out
+
+    def _check_tracer_branches(self, src: SourceFile) -> list:
+        findings = []
+        for fn in self._traced_functions(src.tree):
+            traced_names = set()
+            for n in ast.walk(fn):
+                if isinstance(n, (ast.Assign, ast.AugAssign,
+                                  ast.AnnAssign)):
+                    value = n.value
+                    if value is None:
+                        continue
+                    tainted = any(
+                        (isinstance(x, ast.Call) and _is_jax_call(x))
+                        or (isinstance(x, ast.Name)
+                            and x.id in traced_names)
+                        for x in ast.walk(value))
+                    if not tainted:
+                        continue
+                    targets = n.targets if isinstance(n, ast.Assign) \
+                        else [n.target]
+                    for t in targets:
+                        for leaf in ast.walk(t):
+                            if isinstance(leaf, ast.Name):
+                                traced_names.add(leaf.id)
+
+            def tests(node):
+                for x in ast.walk(node):
+                    if isinstance(x, (ast.If, ast.While)):
+                        yield x.test, type(x).__name__.lower()
+                    elif isinstance(x, ast.Assert):
+                        yield x.test, "assert"
+                    elif isinstance(x, ast.Call) \
+                            and _attr_name(x.func) == "bool" and x.args:
+                        yield x.args[0], "bool()"
+
+            for test, kind in tests(fn):
+                hot = [x.id for x in ast.walk(test)
+                       if isinstance(x, ast.Name)
+                       and x.id in traced_names]
+                if hot:
+                    findings.append(Finding(
+                        "tracer-branch", src.path, test.lineno,
+                        f"Python {kind} on {hot[0]!r}, a value produced "
+                        f"by a jnp/jax call inside traced function "
+                        f"{fn.name!r}: tracer truthiness burns one "
+                        f"trace's branch into every execution (use "
+                        f"jnp.where / lax.cond)"))
+        return findings
+
+    # ------------------------------------------- jit static args ----
+    def _check_jit_static(self, src: SourceFile) -> list:
+        findings = []
+        for fn in ast.walk(src.tree):
+            if not isinstance(fn, _FUNCS):
+                continue
+            params = [a.arg for a in (fn.args.posonlyargs + fn.args.args
+                                      + fn.args.kwonlyargs)]
+            defaults = {}
+            pos = fn.args.posonlyargs + fn.args.args
+            for a, d in zip(pos[len(pos) - len(fn.args.defaults):],
+                            fn.args.defaults):
+                defaults[a.arg] = d
+            for a, d in zip(fn.args.kwonlyargs, fn.args.kw_defaults):
+                if d is not None:
+                    defaults[a.arg] = d
+            for dec in fn.decorator_list:
+                for call in ast.walk(dec):
+                    if not isinstance(call, ast.Call):
+                        continue
+                    in_jit = "jit" in {
+                        _attr_name(x) for x in ast.walk(call.func)
+                        if isinstance(x, (ast.Attribute, ast.Name))} \
+                        or any(_attr_name(a) == "jit"
+                               for a in call.args
+                               if isinstance(a, (ast.Attribute,
+                                                 ast.Name)))
+                    if not in_jit:
+                        continue
+                    for kw in call.keywords:
+                        if kw.arg == "static_argnames":
+                            findings.extend(self._static_names(
+                                kw.value, params, defaults, fn, src))
+                        elif kw.arg == "static_argnums":
+                            findings.extend(self._static_nums(
+                                kw.value, pos, fn, src))
+        return findings
+
+    def _static_names(self, value, params, defaults, fn,
+                      src: SourceFile) -> list:
+        findings = []
+        names = []
+        if isinstance(value, ast.Constant) \
+                and isinstance(value.value, str):
+            names = [(value.value, value.lineno)]
+        elif isinstance(value, (ast.Tuple, ast.List, ast.Set)):
+            names = [(e.value, e.lineno) for e in value.elts
+                     if isinstance(e, ast.Constant)
+                     and isinstance(e.value, str)]
+        for name, line in names:
+            if name not in params:
+                findings.append(Finding(
+                    "jit-static-args", src.path, line,
+                    f"static_argnames names {name!r} which is not a "
+                    f"parameter of {fn.name}: the jit silently "
+                    f"ignores it (or errors, depending on version)"))
+                continue
+            d = defaults.get(name)
+            if isinstance(d, (ast.List, ast.Dict, ast.Set)) \
+                    or (isinstance(d, ast.Call)
+                        and _attr_name(d.func) in ("list", "dict",
+                                                   "set")):
+                findings.append(Finding(
+                    "jit-static-args", src.path, line,
+                    f"static arg {name!r} of {fn.name} defaults to a "
+                    f"non-hashable {type(d).__name__.lower()}: jit "
+                    f"static args must be hashable"))
+        return findings
+
+    def _static_nums(self, value, pos, fn, src: SourceFile) -> list:
+        nums = []
+        if isinstance(value, ast.Constant) \
+                and isinstance(value.value, int):
+            nums = [(value.value, value.lineno)]
+        elif isinstance(value, (ast.Tuple, ast.List)):
+            nums = [(e.value, e.lineno) for e in value.elts
+                    if isinstance(e, ast.Constant)
+                    and isinstance(e.value, int)]
+        return [Finding(
+            "jit-static-args", src.path, line,
+            f"static_argnums {i} is out of positional range for "
+            f"{fn.name} ({len(pos)} positional params)")
+            for i, line in nums if i >= len(pos)]

@@ -390,7 +390,7 @@ def model_traffic_bytes(hlo_text: str) -> float:
         return n
 
     total = 0.0
-    for name, ts, kind, operands in ops:
+    for _name, ts, kind, operands in ops:
         if kind in _SKIP_OPS:
             continue
         rb = _shape_bytes(ts)

@@ -129,7 +129,7 @@ def scan_over(body, carry, xs, length=None):
     n = length if length is not None else jax.tree.leaves(xs)[0].shape[0]
     ys = []
     for i in range(n):
-        x_i = jax.tree.map(lambda a: a[i], xs)
+        x_i = jax.tree.map(lambda a, i=i: a[i], xs)
         carry, y = body(carry, x_i)
         ys.append(y)
     if ys and jax.tree.leaves(ys[0]):

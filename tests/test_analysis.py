@@ -1,0 +1,594 @@
+"""Unit tests for the repro-analyze checker battery (DESIGN.md §12).
+
+Each checker gets a violating and a clean inline snippet; the ratchet
+(inline ignores, allowlist, stale-entry failure) is exercised through
+both the library API and the CLI; and the repo-self-check asserts the
+committed tree is clean under the committed allowlist — the same gate
+CI's static-analysis job runs.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import (AnalysisConfig, Finding, all_rules,
+                            analyze_files, analyze_source,
+                            apply_allowlist)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+CLI = os.path.join(REPO, "scripts", "repro_analyze.py")
+
+sys.path.insert(0, os.path.join(REPO, "scripts"))
+from _ratchet import diff_ratchet, dump_json, load_json  # noqa: E402
+
+
+def rules_of(findings):
+    return {f.rule for f in findings}
+
+
+def run_cli(*args):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    return subprocess.run([sys.executable, CLI, *args], cwd=REPO,
+                          env=env, capture_output=True, text=True)
+
+
+# ------------------------------------------------------ collectives ----
+
+SHARD_MAP_TAIL = """
+def build(mesh, shard_map):
+    return shard_map(local, mesh=mesh, in_specs=("model",),
+                     out_specs=("model",), axis_names={"model"})
+"""
+
+
+def test_collective_wrong_axis_fires():
+    src = """
+import jax
+import jax.numpy as jnp
+
+def local(x):
+    return jax.lax.psum(x.astype(jnp.float32), "data")
+""" + SHARD_MAP_TAIL
+    assert "collective-axis" in rules_of(
+        analyze_source(src, "src/repro/x.py"))
+
+
+def test_collective_outside_shard_map_fires():
+    src = """
+import jax
+
+def free(x):
+    return jax.lax.all_gather(x, "model")
+"""
+    assert "collective-axis" in rules_of(
+        analyze_source(src, "src/repro/x.py"))
+
+
+def test_collective_budget_sequential_psums_fire():
+    src = """
+import jax
+import jax.numpy as jnp
+
+def local(x):
+    a = jax.lax.psum(x.astype(jnp.float32), "model")
+    b = jax.lax.psum(a.astype(jnp.float32), "model")
+    return b
+""" + SHARD_MAP_TAIL
+    assert "collective-budget" in rules_of(
+        analyze_source(src, "src/repro/x.py"))
+
+
+def test_collective_budget_exclusive_branches_pass():
+    # the sparse_ffn pattern: one psum per backend arm, never both
+    src = """
+import jax
+import jax.numpy as jnp
+
+def local(x, flag):
+    if flag:
+        return jax.lax.psum(x.astype(jnp.float32), "model")
+    return jax.lax.psum((x * 2).astype(jnp.float32), "model")
+""" + SHARD_MAP_TAIL
+    assert "collective-budget" not in rules_of(
+        analyze_source(src, "src/repro/x.py"))
+
+
+def test_collective_budget_looped_psum_fires():
+    src = """
+import jax
+import jax.numpy as jnp
+
+def local(x):
+    for _ in range(3):
+        x = jax.lax.psum(x.astype(jnp.float32), "model")
+    return x
+""" + SHARD_MAP_TAIL
+    assert "collective-budget" in rules_of(
+        analyze_source(src, "src/repro/x.py"))
+
+
+def test_collective_fp32_required():
+    src = """
+import jax
+
+def local(x):
+    return jax.lax.psum(x, "model")
+""" + SHARD_MAP_TAIL
+    assert "collective-fp32" in rules_of(
+        analyze_source(src, "src/repro/x.py"))
+
+
+def test_collective_clean_body_passes():
+    src = """
+import jax
+import jax.numpy as jnp
+
+def local(x):
+    y = jax.lax.psum(x.astype(jnp.float32), "model")
+    idx = jax.lax.all_gather(y, "model")
+    return y, idx
+""" + SHARD_MAP_TAIL
+    assert analyze_source(src, "src/repro/x.py") == []
+
+
+# --------------------------------------------------- kernel hygiene ----
+
+def test_dma_start_without_wait_fires():
+    src = """
+from jax.experimental.pallas import tpu as pltpu
+
+def kernel(x_ref, o_ref, sem):
+    cp = pltpu.make_async_copy(x_ref, o_ref, sem)
+    cp.start()
+"""
+    found = analyze_source(src, "src/repro/kernels/x.py")
+    assert "dma-pairing" in rules_of(found)
+    assert any("races" in f.message for f in found)
+
+
+def test_dma_wait_without_start_fires():
+    src = """
+from jax.experimental.pallas import tpu as pltpu
+
+def kernel(x_ref, o_ref, sem):
+    pltpu.make_async_copy(x_ref, o_ref, sem).wait()
+"""
+    found = analyze_source(src, "src/repro/kernels/x.py")
+    assert "dma-pairing" in rules_of(found)
+    assert any("deadlock" in f.message for f in found)
+
+
+def test_dma_nested_helper_pattern_passes():
+    # the fused kernel's shape: constructor helper nested inside the
+    # run_scoped body, started and waited through separate call sites
+    src = """
+import jax.experimental.pallas as pl
+import jax.numpy as jnp
+from jax.experimental.pallas import tpu as pltpu
+
+def kernel(w_hbm, o_ref):
+    def body(buf, sem):
+        def cluster_dma(slot, k):
+            return pltpu.make_async_copy(
+                w_hbm.at[k], buf.at[slot], sem.at[slot])
+        cluster_dma(0, 0).start()
+
+        def consume(k, slot):
+            cluster_dma(slot, k).wait()
+        consume(0, 0)
+
+    pl.run_scoped(body,
+                  buf=pltpu.VMEM((2, 8), jnp.float32),
+                  sem=pltpu.SemaphoreType.DMA((2,)))
+"""
+    assert analyze_source(src, "src/repro/kernels/x.py") == []
+
+
+def test_semaphore_outside_run_scoped_fires():
+    src = """
+from jax.experimental.pallas import tpu as pltpu
+
+def kernel():
+    return pltpu.SemaphoreType.DMA((2,))
+"""
+    assert "semaphore-scope" in rules_of(
+        analyze_source(src, "src/repro/kernels/x.py"))
+
+
+def test_vmem_budget_cap_fires_and_scales():
+    src = """
+import jax.experimental.pallas as pl
+import jax.numpy as jnp
+from jax.experimental.pallas import tpu as pltpu
+
+def kernel(body):
+    pl.run_scoped(body, buf=pltpu.VMEM((4, 1024, 1024), jnp.float32))
+"""
+    # 16MiB of scratch: over a 8MiB cap, under a 32MiB one
+    tight = AnalysisConfig(vmem_cap_bytes=8 * 2**20)
+    roomy = AnalysisConfig(vmem_cap_bytes=32 * 2**20)
+    assert "vmem-budget" in rules_of(
+        analyze_source(src, "src/repro/kernels/x.py", tight))
+    assert "vmem-budget" not in rules_of(
+        analyze_source(src, "src/repro/kernels/x.py", roomy))
+
+
+def test_vmem_symbolic_dims_use_assumptions():
+    src = """
+import jax.experimental.pallas as pl
+import jax.numpy as jnp
+from jax.experimental.pallas import tpu as pltpu
+
+def kernel(body, w_hbm, cs):
+    pl.run_scoped(body,
+                  buf=pltpu.VMEM((2, cs) + w_hbm.shape[1:], jnp.float32))
+"""
+    # cs=256 (assumed), trailing dims default to 128: 2*256*128*4 =
+    # 256KiB — under any sane cap
+    assert "vmem-budget" not in rules_of(
+        analyze_source(src, "src/repro/kernels/x.py"))
+
+
+# ---------------------------------------------------- trace hazards ----
+
+def test_wall_clock_fires_in_serving():
+    src = """
+import time
+
+def tick():
+    return time.monotonic()
+"""
+    assert "wall-clock" in rules_of(
+        analyze_source(src, "src/repro/serving/x.py"))
+
+
+def test_wall_clock_scope_excludes_models():
+    src = """
+import time
+
+def tick():
+    return time.monotonic()
+"""
+    assert analyze_source(src, "src/repro/models/x.py") == []
+
+
+def test_py_random_global_state_fires():
+    src = """
+import random
+import numpy as np
+
+def draw():
+    return random.random() + np.random.rand()
+"""
+    found = analyze_source(src, "src/repro/serving/x.py")
+    assert sum(f.rule == "py-random" for f in found) == 2
+
+
+def test_py_random_seeded_default_rng_passes():
+    src = """
+import numpy as np
+
+def draw(seed):
+    return np.random.default_rng(seed).random(4)
+"""
+    assert analyze_source(src, "src/repro/serving/x.py") == []
+
+
+def test_py_random_unseeded_default_rng_fires():
+    src = """
+import numpy as np
+
+def draw():
+    return np.random.default_rng().random(4)
+"""
+    assert "py-random" in rules_of(
+        analyze_source(src, "src/repro/serving/x.py"))
+
+
+def test_local_variable_named_random_is_not_flagged():
+    src = """
+def pick(random):
+    return random.choice()
+"""
+    assert analyze_source(src, "src/repro/serving/x.py") == []
+
+
+def test_tracer_branch_fires_in_jit():
+    src = """
+import jax
+import jax.numpy as jnp
+
+@jax.jit
+def f(x):
+    y = jnp.tanh(x)
+    if y:
+        y = y + 1.0
+    return y
+"""
+    assert "tracer-branch" in rules_of(
+        analyze_source(src, "src/repro/serving/x.py"))
+
+
+def test_tracer_branch_static_values_pass():
+    src = """
+import jax
+import jax.numpy as jnp
+
+@jax.jit
+def f(x, n):
+    y = jnp.tanh(x)
+    if n > 2:
+        y = y + 1.0
+    return y
+"""
+    assert analyze_source(src, "src/repro/serving/x.py") == []
+
+
+def test_jit_static_argnames_must_exist():
+    src = """
+import functools
+import jax
+
+@functools.partial(jax.jit, static_argnames=("mode", "ghost"))
+def f(x, mode="a"):
+    return x
+"""
+    found = analyze_source(src, "src/repro/serving/x.py")
+    assert [f.rule for f in found] == ["jit-static-args"]
+    assert "ghost" in found[0].message
+
+
+def test_jit_static_arg_nonhashable_default_fires():
+    src = """
+import functools
+import jax
+
+@functools.partial(jax.jit, static_argnames=("opts",))
+def f(x, opts=[]):
+    return x
+"""
+    assert "jit-static-args" in rules_of(
+        analyze_source(src, "src/repro/serving/x.py"))
+
+
+def test_jit_static_argnums_range():
+    src = """
+import functools
+import jax
+
+@functools.partial(jax.jit, static_argnums=(5,))
+def f(x, y):
+    return x + y
+"""
+    assert "jit-static-args" in rules_of(
+        analyze_source(src, "src/repro/serving/x.py"))
+
+
+# --------------------------------------------- protocol conformance ----
+
+HANDLE_SRC = """
+class FooHandle:
+    def submit(self, prompt, max_new):
+        raise NotImplementedError
+
+    @property
+    def load(self):
+        raise NotImplementedError
+
+    def close(self):
+        return None
+
+
+class GoodImpl(FooHandle):
+    def submit(self, prompt, max_new, extra=None):
+        return prompt
+
+    @property
+    def load(self):
+        return 0.0
+
+
+class BadImpl(FooHandle):
+    def submit(self, prompt):
+        return prompt
+
+    def load(self):
+        return 0.0
+"""
+
+
+def test_protocol_method_drift_fires_only_for_bad_impl():
+    found = analyze_files({"src/handles.py": HANDLE_SRC})
+    assert rules_of(found) == {"protocol-method"}
+    # BadImpl: submit arity + load property-ness; GoodImpl clean
+    assert len(found) == 2
+    assert all("BadImpl" in f.message for f in found)
+
+
+def test_family_fields_missing_and_shape():
+    src = """
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ServingFamily:
+    family: str
+    make_model: object
+    build_plan: object
+    default_arch: str = ""
+
+
+def _mk(cfg):
+    return cfg
+
+
+def _plan(cfg, freqs=None, hw=None, backend=None):
+    return cfg
+
+
+def _bad_plan(cfg, extra):
+    return cfg
+
+
+ok = ServingFamily(family="a", make_model=_mk, build_plan=_plan)
+missing = ServingFamily(family="b", make_model=_mk)
+shape = ServingFamily(family="c", make_model=_mk, build_plan=_bad_plan)
+"""
+    config = AnalysisConfig(families_path="fam.py")
+    found = analyze_files({"fam.py": src}, config)
+    assert sum(f.rule == "family-fields" for f in found) == 2
+
+
+# --------------------------------------------------- registry drift ----
+
+FAMILIES_SRC = """
+def register_family(fam):
+    return fam
+
+
+def _mk(name, arch):
+    return ServingFamily(family=name, arch=arch)
+
+
+class ServingFamily:
+    pass
+
+
+register_family(_mk("dense", "tiny"))
+register_family(ServingFamily(family="moe"))
+"""
+
+
+def _drift_files(conformance):
+    return {
+        "fam.py": FAMILIES_SRC,
+        "conf.py": conformance,
+        "gate.py": "EXTRACTORS = {'serving': None}\n",
+        "bench/emit.py": "DOC = {'bench': 'serving'}\n",
+    }
+
+
+def _drift_config():
+    return AnalysisConfig(families_path="fam.py",
+                          conformance_path="conf.py",
+                          bench_gate_path="gate.py",
+                          bench_emitter_prefix="bench/")
+
+
+def test_registry_drift_fires_per_missing_family():
+    found = analyze_files(
+        _drift_files("ARCHS = {'dense': 'tiny'}\n"), _drift_config())
+    drifts = [f for f in found if f.rule == "registry-drift"]
+    assert len(drifts) == 1 and "moe" in drifts[0].message
+
+
+def test_registry_drift_clean_when_covered():
+    found = analyze_files(
+        _drift_files("ARCHS = {'dense': 1, 'moe': 2}\n"),
+        _drift_config())
+    assert "registry-drift" not in rules_of(found)
+
+
+def test_bench_gate_drift_fires_for_ungated_kind():
+    files = _drift_files("ARCHS = {'dense': 1, 'moe': 2}\n")
+    files["bench/emit.py"] = "DOC = {'bench': 'rogue'}\n"
+    found = analyze_files(files, _drift_config())
+    drifts = [f for f in found if f.rule == "bench-gate-drift"]
+    assert len(drifts) == 1 and "rogue" in drifts[0].message
+
+
+# ------------------------------------------- suppression + ratchet ----
+
+def test_inline_ignore_same_line_and_line_above():
+    src = """
+import time
+
+
+def a():
+    return time.time()  # repro: ignore[wall-clock] justified
+
+
+def b():
+    # repro: ignore[wall-clock] justified
+    return time.time()
+
+
+def c():
+    return time.time()  # repro: ignore[py-random] wrong rule
+"""
+    found = analyze_source(src, "src/repro/serving/x.py")
+    assert [f.rule for f in found] == ["wall-clock"]
+    assert found[0].line == 15
+
+
+def test_inline_ignore_wildcard():
+    src = """
+import time
+
+
+def a():
+    return time.time()  # repro: ignore[*] kill everything here
+"""
+    assert analyze_source(src, "src/repro/serving/x.py") == []
+
+
+def test_apply_allowlist_splits_kept_allowed_stale():
+    f1 = Finding("wall-clock", "src/a.py", 3, "m")
+    f2 = Finding("py-random", "src/b.py", 7, "m")
+    allow = {"src/a.py:wall-clock": "legacy", "src/gone.py:dma-pairing": "?"}
+    kept, allowed, stale = apply_allowlist([f1, f2], allow)
+    assert kept == [f2]
+    assert allowed == [f1]
+    assert stale == ["src/gone.py:dma-pairing"]
+
+
+def test_syntax_error_is_a_finding_not_a_crash():
+    found = analyze_files({"src/broken.py": "def broken(:\n"})
+    assert rules_of(found) == {"syntax-error"}
+
+
+def test_ratchet_helpers_roundtrip(tmp_path):
+    p = str(tmp_path / "base.json")
+    assert load_json(p, default={}) == {}
+    with pytest.raises(FileNotFoundError):
+        load_json(p)
+    dump_json(p, {"b": 2, "a": 1})
+    assert load_json(p) == {"a": 1, "b": 2}
+    new, stale = diff_ratchet({"x", "y"}, {"y", "z"})
+    assert new == ["x"] and stale == ["z"]
+
+
+# --------------------------------------------------- CLI + repo gate ----
+
+def test_cli_self_test_proves_every_rule_fires():
+    r = run_cli("--self-test")
+    assert r.returncode == 0, r.stdout + r.stderr
+    for rule in all_rules():
+        assert f"ok   {rule}" in r.stdout
+
+
+def test_repo_tree_clean_under_committed_allowlist():
+    r = run_cli()
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "OK" in r.stdout
+
+
+def test_cli_stale_allowlist_entry_fails_gate(tmp_path):
+    allow = tmp_path / "allow.json"
+    allow.write_text('{"src/gone.py:wall-clock": "fixed ages ago"}\n')
+    r = run_cli("--allowlist", str(allow), "scripts")
+    assert r.returncode == 1
+    assert "stale" in r.stdout
+    r2 = run_cli("--allowlist", str(allow), "--allow-stale", "scripts")
+    assert r2.returncode == 0, r2.stdout + r2.stderr
+
+
+def test_cli_update_prunes_stale_and_records_current(tmp_path):
+    allow = tmp_path / "allow.json"
+    allow.write_text('{"src/gone.py:wall-clock": "stale"}\n')
+    r = run_cli("--allowlist", str(allow), "--update", "scripts")
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert load_json(str(allow)) == {}   # scripts/ is clean, stale pruned

@@ -48,7 +48,7 @@ def test_capacity_never_exceeded_through_grow_shrink_cycle():
         # saturate both regions with traffic at the new split
         for l in range(LAYERS):
             c.admit_cold(l, rng.integers(0, N, 600))
-            for cl in range(40):
+            for _cl in range(40):
                 c.admit_hot_cluster(l, int(rng.integers(0, N // CS)))
         assert len(c.cold) <= c.cold.capacity
         assert len(c.hot) <= c.hot.capacity

@@ -183,7 +183,7 @@ def test_gateway_breaker_recovers_after_loss(family_setup):
     gw.backends[1].breaker.open_timeout_s = 0.002
     try:
         rng = np.random.default_rng(1)
-        for i in range(6):
+        for _i in range(6):
             gw.submit(rng.integers(0, cfg.vocab_size, 12), max_new=3,
                       arrival_time=0.0)
         while not gw.backends[1].inflight:
@@ -242,7 +242,7 @@ def test_gateway_draining_backend_finishes_inflight_no_new(family_setup):
     gw = _fleet_gateway(family_setup)
     try:
         rng = np.random.default_rng(2)
-        for i in range(4):
+        for _i in range(4):
             gw.submit(rng.integers(0, cfg.vocab_size, 12), max_new=3,
                       arrival_time=0.0)
         while not gw.backends[1].inflight:
@@ -250,7 +250,7 @@ def test_gateway_draining_backend_finishes_inflight_no_new(family_setup):
         inflight = list(gw.backends[1].inflight.values())
         disp_before = gw.backends[1].n_dispatched
         gw.drain_backend(1)
-        for i in range(4):
+        for _i in range(4):
             gw.submit(rng.integers(0, cfg.vocab_size, 12), max_new=3,
                       arrival_time=gw.clock_s)
         rep = gw.run_until_drained()

@@ -229,8 +229,8 @@ def test_permutation_preserves_moe_output(trained):
     p2 = permute_moe_params(params, plan.neuron_order)
     x = jax.random.normal(jax.random.key(5), (4, cfg.d_model)) * 0.1
     for l in range(cfg.num_layers):
-        l0 = jax.tree.map(lambda a: a[l], params["layers"]["moe"])
-        l1 = jax.tree.map(lambda a: a[l], p2["layers"]["moe"])
+        l0 = jax.tree.map(lambda a, l=l: a[l], params["layers"]["moe"])
+        l1 = jax.tree.map(lambda a, l=l: a[l], p2["layers"]["moe"])
         y0, _ = apply_moe_ffn(l0, x, cfg)
         y1, _ = apply_moe_ffn(l1, x, cfg)
         np.testing.assert_allclose(np.asarray(y0), np.asarray(y1),

@@ -65,8 +65,8 @@ def test_permutation_preserves_dense_ffn(relu_model):
     p2 = permute_ffn_params(params, plan.neuron_order)
     x = jax.random.normal(jax.random.key(5), (2, 8, cfg.d_model)) * 0.1
     for l in range(cfg.num_layers):
-        l0 = jax.tree.map(lambda a: a[l], params["layers"]["ffn"])
-        l1 = jax.tree.map(lambda a: a[l], p2["layers"]["ffn"])
+        l0 = jax.tree.map(lambda a, l=l: a[l], params["layers"]["ffn"])
+        l1 = jax.tree.map(lambda a, l=l: a[l], p2["layers"]["ffn"])
         y0 = ffn_dense(l0, x, cfg.activation)
         y1 = ffn_dense(l1, x, cfg.activation)
         np.testing.assert_allclose(np.asarray(y0), np.asarray(y1),

@@ -154,7 +154,7 @@ def _reference_generate(cfg, params, plan, prompt, max_new, temperature,
     active = list(range(B))
     n_gen = {i: 0 for i in active}
     last = logits[:, -1]
-    for step in range(max_new):
+    for _step in range(max_new):
         if not active:
             break
         _, step_fn = decoder.executable_for(len(active))
@@ -265,7 +265,7 @@ def test_replica_router_least_loaded_fifo_tiebreak():
     scheds = [BatchScheduler(), BatchScheduler()]
     router = ReplicaRouter(scheds)
     picks = []
-    for i in range(4):
+    for _i in range(4):
         r = router.pick_replica()
         picks.append(r)
         local = scheds[r].submit(np.arange(4), 8).uid
