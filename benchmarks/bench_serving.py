@@ -296,6 +296,121 @@ def _fleet_leg(args, cfg, params, plan, hw, rows):
     return out, failures
 
 
+def _quant_leg(args, rows):
+    """Storage-dtype leg (§7.6 + §4.4): quant x family x parallelism.
+
+    The SAME briefly-trained params decode with cold bundles declared
+    fp16 / int8 / int4-mixed; the data plane dequantizes at the gather
+    boundary and the storage plane prices bundle I/O and cache
+    residency at the declared dtype. Reports modeled cold-store
+    bytes/token per cell, the fp16/int4 byte ratio (the paper's 3x
+    bundle shrink — §4.4's 24KB vs 8KB at deployment constants),
+    token agreement vs the fp16 decode, and Table-7 quant-error
+    proxies on the real trained bundles.
+    """
+    import copy
+    import dataclasses
+    import jax
+    import numpy as np
+    from benchmarks.common import engine_setup, paper_timing
+    from repro.core.baselines import POWERINFER2
+    from repro.launch.mesh import make_serving_mesh
+    from repro.quant.quantize import quant_error
+    from repro.quant.storage import quantize_plan_params
+    from repro.serving.engine import ServeEngine
+
+    dtypes = (("fp16", "int8", "int4-mixed")
+              if args.storage_dtype == "all"
+              else ("fp16",) if args.storage_dtype == "fp16"
+              else ("fp16", args.storage_dtype))
+    # 87.5% offload: at int4 the ~3x residency gain must not make the
+    # cold region fully resident — 0 cold bytes/token would turn the
+    # byte ratio into a degenerate metric
+    offload = 0.875
+    max_new = 8 if args.tiny else 16
+    train_steps = 10 if args.tiny else 40
+    out = {"bench": "serving_quant", "tiny": bool(args.tiny),
+           "device_count": jax.device_count(), "offload": offload,
+           "results": [], "quant_error": {}, "ratios": {}}
+
+    print(f"{'family':6s} {'dtype':11s} {'dp':>3s} {'tp':>3s} "
+          f"{'tok/s':>8s} {'coldB/tok':>11s} {'bundleB':>8s} {'agree':>6s}")
+    for family, arch in (("dense", "smollm-135m"),
+                         ("moe", "deepseek-moe-16b")):
+        if family == "moe":
+            cfg, _, params, plan, _ = engine_setup(
+                arch, train_steps=train_steps)
+            w0 = params["layers"]["moe"]["experts"][0, 0, :, 0]
+        else:
+            cfg, _, params, plan, _ = engine_setup(
+                arch, activation="relu2", mode="relu",
+                train_steps=train_steps)
+            w0 = params["layers"]["ffn"]["w"][0, :, 0]
+        # Table-7 proxies on the real trained layer-0 gate bundles
+        out["quant_error"][family] = {
+            s: round(quant_error(w0, s), 6)
+            for s in ("group32", "per_channel", "mixed")}
+        prompt = np.random.default_rng(0).integers(
+            0, cfg.vocab_size, (2, PROMPT_LEN)).astype(np.int32)
+        cells = [(1, 1)]
+        if family == "dense" and jax.device_count() >= 2:
+            cells.append((1, 2))
+        ref_toks, cold_bt = {}, {}
+        for dt in dtypes:
+            plan_q = copy.copy(plan)
+            plan_q.plans = {
+                b: dataclasses.replace(p, storage_dtype=dt)
+                for b, p in plan.plans.items()}
+            params_q = quantize_plan_params(params, plan_q)
+            for d, t in cells:
+                mesh = make_serving_mesh(t, d) if d * t > 1 else None
+                eng = ServeEngine(cfg, params_q, plan_q, spec=POWERINFER2,
+                                  offload_ratio=offload,
+                                  timing=paper_timing(family),
+                                  buckets=BUCKETS,
+                                  ctx_budget=PROMPT_LEN + max_new,
+                                  temperature=0.0, seed=0, mesh=mesh)
+                res = eng.generate(prompt, max_new=max_new,
+                                   temperature=0.0)
+                n = sum(s.batch for s in res.stats)
+                toks = np.asarray(res.tokens)
+                ref = ref_toks.setdefault((d, t), toks)
+                agree = float((toks == ref).mean())
+                cell = {
+                    "family": family, "storage_dtype": dt, "dp": d,
+                    "tp": t,
+                    "tok_s": round(res.tokens_per_s, 2),
+                    "cold_bytes_per_tok": round(
+                        eng.coldstore.total_bytes / max(n, 1), 1),
+                    "bundle_bytes": eng.storage.bundle_bytes,
+                    "resident_neurons":
+                        eng.storage.resident_capacity_neurons,
+                    "token_agreement": round(agree, 4),
+                }
+                cold_bt[(dt, d, t)] = cell["cold_bytes_per_tok"]
+                out["results"].append(cell)
+                print(f"{family:6s} {dt:11s} {d:3d} {t:3d} "
+                      f"{cell['tok_s']:8.1f} "
+                      f"{cell['cold_bytes_per_tok']:11.0f} "
+                      f"{cell['bundle_bytes']:8d} {agree:6.3f}")
+                rows.append((
+                    f"serving_quant_{family}_{dt}_dp{d}_tp{t}_tok_s",
+                    cell["tok_s"],
+                    f"cold {cell['cold_bytes_per_tok']:.0f} B/tok, "
+                    f"agreement {agree}"))
+                eng.close()
+        for dt in dtypes[1:]:
+            ratio = cold_bt[("fp16", 1, 1)] / max(cold_bt[(dt, 1, 1)],
+                                                  1e-9)
+            key = f"{family}_fp16_over_{dt.replace('-', '_')}_cold_bytes"
+            out["ratios"][key] = round(ratio, 4)
+            rows.append((f"serving_quant_{key}", round(ratio, 4),
+                         "modeled cold-store bytes/token, fp16 vs "
+                         "quantized bundles on the same stream"))
+            print(f"# {family}: fp16/{dt} cold-byte ratio {ratio:.3f}x")
+    return out
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--devices", type=int, default=0,
@@ -310,6 +425,15 @@ def main(argv=None):
                     help="fleet leg: sweep gateway fleets of 1..N "
                          "engines x arrival rates instead of the mesh "
                          "grid (emits a BENCH_fleet.json-shaped --json)")
+    ap.add_argument("--storage-dtype", default=None,
+                    choices=("fp16", "int8", "int4-mixed", "all"),
+                    help="storage-dtype leg: decode the same params "
+                         "with cold bundles declared at this dtype "
+                         "(plus the fp16 reference) across both "
+                         "families, reporting modeled cold bytes/token "
+                         "and token agreement (emits a "
+                         "BENCH_serving_quant.json-shaped --json; "
+                         "--family is ignored)")
     ap.add_argument("--arrival-rate", default="20000,100000",
                     help="comma-separated request rates (req/s on the "
                          "fleet clock) for the --fleet sweep")
@@ -335,6 +459,17 @@ def main(argv=None):
     from benchmarks.common import emit, engine_setup
     from repro.core.baselines import LLAMACPP, POWERINFER2
     from repro.launch.mesh import make_serving_mesh
+
+    # ---- storage-dtype leg: quant x family grid replaces the rest --------
+    if args.storage_dtype:
+        rows = []
+        out = _quant_leg(args, rows)
+        emit(rows)
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump(out, f, indent=1)
+            print(f"# wrote {args.json}")
+        return rows
 
     n_req = 4 if args.tiny else N_REQUESTS
     max_new_hi = 8 if args.tiny else 14

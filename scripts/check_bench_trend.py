@@ -80,6 +80,27 @@ def _moe_sparse_metrics(p: dict) -> dict:
     return m
 
 
+def _quant_metrics(p: dict) -> dict:
+    """bench_serving --storage-dtype: per (family, dtype, dp, tp) cell
+    the modeled throughput must not drop and cold-store bytes/token
+    must not rise; bundle_bytes is pure §4.4 accounting (exact);
+    fp16/quantized byte ratios and token agreement must not sag, and
+    the Table-7 quant-error proxies must not grow."""
+    m = {}
+    for r in p.get("results", []):
+        tag = f"{r['family']}_{r['storage_dtype']}_dp{r['dp']}_tp{r['tp']}"
+        m[f"{tag}_tok_s"] = (r["tok_s"], HIGHER, 1.0)
+        m[f"{tag}_cold_bytes_per_tok"] = (r["cold_bytes_per_tok"], LOWER, 1.0)
+        m[f"{tag}_bundle_bytes"] = (r["bundle_bytes"], LOWER, 0.0)
+        m[f"{tag}_token_agreement"] = (r["token_agreement"], HIGHER, 1.0)
+    for name, v in p.get("ratios", {}).items():
+        m[f"ratio_{name}"] = (v, HIGHER, 1.0)
+    for fam, errs in p.get("quant_error", {}).items():
+        for scheme, v in errs.items():
+            m[f"quant_error_{fam}_{scheme}"] = (v, LOWER, 1.0)
+    return m
+
+
 def _fleet_metrics(p: dict) -> dict:
     """bench_serving --fleet: the saturation curve must not sag, the
     TTFT split must not rise, nothing may be rejected or undrained —
@@ -117,6 +138,7 @@ def _kernels_metrics(p: dict) -> dict:
 EXTRACTORS = {
     "serving": _serving_metrics,
     "serving_moe_sparse": _moe_sparse_metrics,
+    "serving_quant": _quant_metrics,
     "fleet": _fleet_metrics,
     "kernels": _kernels_metrics,
 }

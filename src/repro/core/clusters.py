@@ -45,6 +45,12 @@ class HybridPlan:
     # n_pinned = shared + E*n_expert_hot sizes residency.
     n_expert_hot: int = 0
     n_pinned: int = 0
+    # On-storage dtype of the *cold* bundles (§7.6 hybrid quantization):
+    # 'fp16' | 'int8' | 'int4-mixed'. The hot/pinned prefix always stays
+    # fp (the paper keeps dense-activation weights high-precision on the
+    # NPU); the storage plane prices cold I/O and residency at this
+    # dtype and prepare_params quantizes the cold rows to match.
+    storage_dtype: str = "fp16"
 
     @property
     def total_cold(self) -> int:
@@ -63,7 +69,8 @@ class HybridPlan:
 
 def make_plan(n_neurons: int, hot_ratio: float, cold_active_ratio: float,
               cluster_size: int, groups: int = 1,
-              backend: str = "jnp") -> HybridPlan:
+              backend: str = "jnp",
+              storage_dtype: str = "fp16") -> HybridPlan:
     """Build a hybrid plan with cluster- and group-aligned sizes.
 
     The cold suffix (n_neurons - n_hot) must be a multiple of
@@ -77,7 +84,8 @@ def make_plan(n_neurons: int, hot_ratio: float, cold_active_ratio: float,
     k_total = max(k_total, align) if n_cold >= align else 0
     return HybridPlan(n_hot=n_hot, k_cold=k_total // groups,
                       groups=groups, backend=backend,
-                      cluster_size=cluster_size)
+                      cluster_size=cluster_size,
+                      storage_dtype=storage_dtype)
 
 
 def scale_plan_for_batch(base: HybridPlan, n_neurons: int, batch: int,
@@ -96,4 +104,5 @@ def scale_plan_for_batch(base: HybridPlan, n_neurons: int, batch: int,
     hot_ratio = base_ratio + (0.7 - base_ratio) * t
     cold_ratio = (base.total_cold / max(n_neurons - base.n_hot, 1)) * (1.0 + t)
     return make_plan(n_neurons, hot_ratio, min(cold_ratio, 1.0),
-                     cluster_size, base.groups, base.backend)
+                     cluster_size, base.groups, base.backend,
+                     storage_dtype=base.storage_dtype)

@@ -278,12 +278,15 @@ def synthetic_frequencies(cfg: ModelConfig, seed: int = 0,
 def classify_neurons(freqs: np.ndarray, cfg: ModelConfig,
                      hw: HardwareProfile,
                      batch_buckets=(1, 2, 4, 8, 16, 32),
-                     groups: int = 1, backend: str = "jnp"):
+                     groups: int = 1, backend: str = "jnp",
+                     storage_dtype: str = "fp16"):
     """freqs (L, N) per-token activation frequency -> (order, plans).
 
     Hot threshold: union activation probability at the bucket's batch
     size exceeds 0.5. I/O cap: the hot prefix must be prefetchable
-    within one attention block at sequential bandwidth.
+    within one attention block at sequential bandwidth — priced at the
+    declared storage dtype, so int4 bundles shift the hot/cold boundary
+    outward (more neurons fit the same prefetch window, §7.6).
     """
     L, N = freqs.shape
     order = np.argsort(-freqs, axis=1).astype(np.int32)     # hot-first
@@ -291,7 +294,7 @@ def classify_neurons(freqs: np.ndarray, cfg: ModelConfig,
     mean_f = sorted_f.mean(axis=0)                          # (N,) layer-avg
 
     sc = cfg.sparse_ffn
-    io_cap = hot_io_cap(cfg, hw)
+    io_cap = hot_io_cap(cfg, hw, storage_dtype)
 
     plans = {}
     for b in batch_buckets:
@@ -303,24 +306,32 @@ def classify_neurons(freqs: np.ndarray, cfg: ModelConfig,
         cold_union = union[n_hot:] if n_hot < N else np.array([0.0])
         cold_ratio = float(np.clip(cold_union.mean() * 2.0, 0.02, 1.0))
         plans[b] = make_plan(N, hot_ratio, cold_ratio, sc.cluster_size,
-                             groups=groups, backend=backend)
+                             groups=groups, backend=backend,
+                             storage_dtype=storage_dtype)
     return order, np.ascontiguousarray(sorted_f), plans
 
 
-def _bundle_bytes(cfg: ModelConfig) -> int:
+def _bundle_bytes(cfg: ModelConfig, storage_dtype: str = "fp16") -> int:
     from repro.core.sparse_ffn import ffn_rows
+    from repro.quant.quantize import bundle_nbytes
     R = ffn_rows(cfg.activation)
     itemsize = 2 if cfg.param_dtype == "bfloat16" else 4
-    return R * cfg.d_model * itemsize
+    return bundle_nbytes(cfg.d_model, storage_dtype, rows=R,
+                         itemsize=itemsize)
 
 
-def hot_io_cap(cfg: ModelConfig, hw: HardwareProfile) -> int:
+def hot_io_cap(cfg: ModelConfig, hw: HardwareProfile,
+               storage_dtype: str = "fp16") -> int:
     """I/O-aware hot-prefix cap (§5 "carefully balances"): the pinned
     hot region must be prefetchable within one attention block at
     sequential bandwidth. Shared by the dense classifier and the
     two-level MoE plan (there the cap bounds the *total* pinned
-    prefix: shared experts + every routed expert's hot rows)."""
-    return int(hw.seq_bw * hw.attn_time_s / max(_bundle_bytes(cfg), 1))
+    prefix: shared experts + every routed expert's hot rows).
+    The prefetch stream is priced at `storage_dtype` bundle bytes —
+    int4-mixed bundles are 3x smaller at deployment d_model, so the
+    same attention window prefetches ~3x more neurons."""
+    return int(hw.seq_bw * hw.attn_time_s
+               / max(_bundle_bytes(cfg, storage_dtype), 1))
 
 
 # ------------------------------------------------------------- assembly ----
@@ -347,12 +358,14 @@ def permute_ffn_params(params, order: np.ndarray):
 
 def build_plan(cfg: ModelConfig, freqs: np.ndarray = None,
                hw: HardwareProfile = None, groups: int = 1,
-               backend: str = "jnp") -> ExecutionPlan:
+               backend: str = "jnp",
+               storage_dtype: str = "fp16") -> ExecutionPlan:
     hw = hw or HardwareProfile()
     if freqs is None:
         freqs = synthetic_frequencies(cfg)
     order, sorted_f, plans = classify_neurons(freqs, cfg, hw,
-                                              groups=groups, backend=backend)
+                                              groups=groups, backend=backend,
+                                              storage_dtype=storage_dtype)
     return ExecutionPlan(
         arch=cfg.name, n_neurons=freqs.shape[1],
         cluster_size=cfg.sparse_ffn.cluster_size,
@@ -404,7 +417,8 @@ def permute_moe_params(params, order: np.ndarray):
 
 def build_moe_plan(cfg: ModelConfig, freqs: np.ndarray = None,
                    hw: HardwareProfile = None,
-                   batch_buckets=(1, 2, 4, 8, 16, 32)) -> ExecutionPlan:
+                   batch_buckets=(1, 2, 4, 8, 16, 32),
+                   storage_dtype: str = "fp16") -> ExecutionPlan:
     """Execution plan for the MoE family.
 
     Whole-expert mode (DESIGN.md §8, `cfg.moe_intra_expert=False`):
@@ -445,7 +459,8 @@ def build_moe_plan(cfg: ModelConfig, freqs: np.ndarray = None,
 
     if not cfg.moe_intra_expert:
         plans = {b: HybridPlan(n_hot=S, k_cold=expert_union(b) * f,
-                               groups=1, cluster_size=f)
+                               groups=1, cluster_size=f,
+                               storage_dtype=storage_dtype)
                  for b in batch_buckets}
         # shared experts always fire; each routed expert at rate ~k/E
         fr = np.concatenate([np.ones((S,), np.float32),
@@ -473,7 +488,7 @@ def build_moe_plan(cfg: ModelConfig, freqs: np.ndarray = None,
     order_e = np.argsort(-per_exp, axis=2).astype(np.int32)  # hot-first
     sorted_f = np.take_along_axis(per_exp, order_e, axis=2)
     mean_f = sorted_f.mean(axis=(0, 1))         # (f,) layer+expert profile
-    cap_e = max((hot_io_cap(cfg, hw) - S) // E, 0)
+    cap_e = max((hot_io_cap(cfg, hw, storage_dtype) - S) // E, 0)
 
     plans = {}
     for b in batch_buckets:
@@ -489,7 +504,8 @@ def build_moe_plan(cfg: ModelConfig, freqs: np.ndarray = None,
         plans[b] = HybridPlan(
             n_hot=S + n_act * n_hot_e, k_cold=n_act * k_cold_e,
             groups=1, cluster_size=cs,
-            n_expert_hot=n_hot_e, n_pinned=S + E * n_hot_e)
+            n_expert_hot=n_hot_e, n_pinned=S + E * n_hot_e,
+            storage_dtype=storage_dtype)
 
     # flat order: identity shared prefix, then each expert's rows
     # hot-first within its contiguous block (prepare_params applies

@@ -92,6 +92,39 @@ def ffn_dense(params, x, activation: str):
     return constrain(y, P(BATCH, *([None] * (y.ndim - 1))))
 
 
+def _gather_quant(wq, wsc, wout, cidx):
+    """Gather selected cold clusters from the stored quantized
+    representation and dequantize at the gather boundary (§7.6):
+    int8 codes * per-row scale (+ fp16 outlier sidecar for
+    int4-mixed) — the exact formula the pallas fused kernel applies
+    after its int8 DMA, so backends stay token-identical.
+
+    wq (G, nc_g, cs, R, D) int8; wsc (G, nc_g, cs, R) f32;
+    wout same shape as wq or None; cidx (G, kc) -> (G, kc, cs, R, D).
+    """
+    q = jnp.take_along_axis(wq, cidx[:, :, None, None, None], axis=1)
+    sc = jnp.take_along_axis(wsc, cidx[:, :, None, None], axis=1)
+    deq = q.astype(jnp.float32) * sc[..., None]
+    if wout is not None:
+        o = jnp.take_along_axis(wout, cidx[:, :, None, None, None],
+                                axis=1)
+        deq = deq + o.astype(jnp.float32)
+    return deq
+
+
+def _quant_operands(params, n_hot: int, shape) -> dict:
+    """Cold slices of the stored quantized containers, shaped for the
+    fused kernel ((G, nc_g, cs, R, D) codes / (G, nc_g, cs, R) scales);
+    empty for fp16 plans."""
+    if "wq" not in params:
+        return {}
+    ops = {"wq": params["wq"][n_hot:].reshape(shape),
+           "wsc": params["wsc"][n_hot:].reshape(shape[:-1])}
+    if "wout" in params:
+        ops["wout"] = params["wout"][n_hot:].reshape(shape)
+    return ops
+
+
 def _use_shard_map(groups: int) -> bool:
     from repro.sharding import current_mesh
     m = current_mesh()
@@ -132,10 +165,21 @@ def _cold_path_shard_map(params, x, activation: str, mode: str,
     wc = w[n_hot:].reshape(G * nc_g, cs, R, D)        # row-sharded 'model'
     A = params["pred"]["A"]
     Bp = params["pred"]["B"][:, n_hot:]               # (r, Nc) col-sharded
+    quant = "wq" in params
 
-    def local(xl, wcl, Al, Bl, maskl):
+    def _local_quant(qops):
+        """Shard-local quantized cold containers, kernel-shaped."""
+        q = {"wq": qops[0].reshape(g_loc, nc_g, cs, R, D),
+             "wsc": qops[1].reshape(g_loc, nc_g, cs, R)}
+        if len(qops) == 3:
+            q["wout"] = qops[2].reshape(g_loc, nc_g, cs, R, D)
+        return q
+
+    def local(xl, wcl, Al, Bl, maskl, *qops):
         # xl (B, D) replicated over model; wcl (g_loc*nc_g, cs, R, D)
-        # local clusters; Bl (r, Nc_local) local predictor columns.
+        # local clusters; Bl (r, Nc_local) local predictor columns;
+        # qops: the shard-local quantized containers when the plan
+        # stores int8/int4-mixed bundles.
         if plan.backend == "pallas":
             # the fused kernel IS the shard-local math: selection never
             # crosses groups, so running it over the shard's g_loc
@@ -145,7 +189,8 @@ def _cold_path_shard_map(params, x, activation: str, mode: str,
             y, idx = kops.fused_cold_ffn(
                 xl, wcl.reshape(g_loc, nc_g, cs, R, D), Al, Bl,
                 activation=activation, mode=mode, kc=kc,
-                active_mask=maskl)
+                active_mask=maskl,
+                **(_local_quant(qops) if quant else {}))
             return (jax.lax.psum(y.astype(jnp.float32), "model"),
                     jax.lax.all_gather(idx, "model").reshape(G, kc))
         h = jnp.einsum("bd,dr->br", xl.astype(jnp.float32),
@@ -156,9 +201,14 @@ def _cold_path_shard_map(params, x, activation: str, mode: str,
         cscore = union.reshape(g_loc * nc_g, cs).max(axis=-1)
         _, idx = jax.lax.top_k(cscore.reshape(g_loc, nc_g),
                                kc)                    # (g_loc, kc)
-        gath = jnp.take_along_axis(
-            wcl.reshape(g_loc, nc_g, cs, R, D),
-            idx[:, :, None, None, None], axis=1)      # (g_loc,kc,cs,R,D)
+        if quant:
+            lq = _local_quant(qops)
+            gath = _gather_quant(lq["wq"], lq["wsc"], lq.get("wout"),
+                                 idx).astype(w.dtype)
+        else:
+            gath = jnp.take_along_axis(
+                wcl.reshape(g_loc, nc_g, cs, R, D),
+                idx[:, :, None, None, None], axis=1)  # (g_loc,kc,cs,R,D)
         gath = gath.reshape(g_loc * kc * cs, R, D)
         g = jnp.einsum("bd,kd->bk", xl, gath[:, 0])
         if R == 3:
@@ -179,13 +229,25 @@ def _cold_path_shard_map(params, x, activation: str, mode: str,
 
     if active_mask is None:
         active_mask = jnp.ones((x.shape[0],), bool)
+    operands = [x, wc, A, Bp, active_mask]
+    in_specs = [PS(None, None), PS("model", None, None, None),
+                PS(None, None), PS(None, "model"), PS(None)]
+    if quant:
+        # stored containers shard exactly like the fp cold rows
+        operands += [params["wq"][n_hot:].reshape(G * nc_g, cs, R, D),
+                     params["wsc"][n_hot:].reshape(G * nc_g, cs, R)]
+        in_specs += [PS("model", None, None, None),
+                     PS("model", None, None)]
+        if "wout" in params:
+            operands.append(
+                params["wout"][n_hot:].reshape(G * nc_g, cs, R, D))
+            in_specs.append(PS("model", None, None, None))
     fn = shard_map(
         local, mesh=mesh,
-        in_specs=(PS(None, None), PS("model", None, None, None),
-                  PS(None, None), PS(None, "model"), PS(None)),
+        in_specs=tuple(in_specs),
         out_specs=(PS(None, None), PS(None, None)),
         axis_names={"model"}, check_vma=False)
-    return fn(x, wc, A, Bp, active_mask)
+    return fn(*operands)
 
 
 def ffn_hybrid(params, x, activation: str, mode: str, plan: HybridPlan,
@@ -236,13 +298,15 @@ def ffn_hybrid(params, x, activation: str, mode: str, plan: HybridPlan,
                 x, wc, params["pred"]["A"],
                 params["pred"]["B"][:, n_hot:],
                 activation=activation, mode=mode, kc=kc,
-                active_mask=active_mask)
+                active_mask=active_mask,
+                **_quant_operands(params, n_hot, (G, nc_g, cs, R, D)))
             y += y_cold.astype(jnp.float32)
             y = constrain(y.astype(x.dtype), P(BATCH, None))
             if return_indices:
                 return y, cidx
             return y
         scores = predict_scores(params["pred"], x)[:, n_hot:]   # (B, Nc) fp32
+        quant = "wq" in params
         # Batch union (paper fn.1: a neuron is active if any token in
         # the batch triggers it), then *cluster*-granular selection —
         # the neuron cluster is the basic unit (§3.1).
@@ -254,10 +318,22 @@ def ffn_hybrid(params, x, activation: str, mode: str, plan: HybridPlan,
         cscore = union.reshape(G, nc_g, cs).max(axis=-1)        # (G, nc_g)
         cscore = constrain(cscore, P("model", None))
         _, cidx = jax.lax.top_k(cscore, kc)                     # (G, kc)
-        wc = w[n_hot:].reshape(G, nc_g, cs, R, D)
-        wc = constrain(wc, P("model", None, None, None, None))
-        gath = jnp.take_along_axis(
-            wc, cidx[:, :, None, None, None], axis=1)   # (G,kc,cs,R,D)
+        if quant:
+            # gather the *stored* int8 codes and dequantize right at
+            # the gather boundary (cast back to w.dtype so downstream
+            # compute matches the in-place roundtrip held by w)
+            wq = params["wq"][n_hot:].reshape(G, nc_g, cs, R, D)
+            wq = constrain(wq, P("model", None, None, None, None))
+            wsc = params["wsc"][n_hot:].reshape(G, nc_g, cs, R)
+            wout = params.get("wout")
+            if wout is not None:
+                wout = wout[n_hot:].reshape(G, nc_g, cs, R, D)
+            gath = _gather_quant(wq, wsc, wout, cidx).astype(w.dtype)
+        else:
+            wc = w[n_hot:].reshape(G, nc_g, cs, R, D)
+            wc = constrain(wc, P("model", None, None, None, None))
+            gath = jnp.take_along_axis(
+                wc, cidx[:, :, None, None, None], axis=1)  # (G,kc,cs,R,D)
         gath = gath.reshape(G, kc * cs, R, D)
         act = activation_fn(activation)
         g = jnp.einsum("bd,gkd->bgk", x, gath[:, :, 0])

@@ -122,9 +122,8 @@ def cluster_gather_ffn(x, w, cluster_idx, *, activation: str,
 _NEG = float(jnp.finfo(jnp.float32).min)
 
 
-def _fused_kernel(x_ref, w_hbm, a_ref, b_ref, mask_ref, y_ref, idx_ref, *,
-                  activation: str, gated: bool, cats: bool,
-                  kc: int, nc_g: int, cs: int):
+def _fused_kernel(*refs, activation: str, gated: bool, cats: bool,
+                  kc: int, nc_g: int, cs: int, quant: bool, mixed: bool):
     """One grid step = one neuron group: score -> top-k -> gathered FFN.
 
     x_ref (B, D) VMEM; w_hbm (G*nc_g*cs, R, D) stays in HBM (ANY) —
@@ -132,14 +131,33 @@ def _fused_kernel(x_ref, w_hbm, a_ref, b_ref, mask_ref, y_ref, idx_ref, *,
     (D, r) / b_ref (r, nc_g*cs) the predictor slice for this group;
     mask_ref (B, 1) live-row mask; y_ref (B, D) fp32 accumulator over
     groups; idx_ref (G, kc) SMEM selected-cluster output.
+
+    Quantized storage (§7.6, plan.storage_dtype != 'fp16'): w_hbm
+    holds the *stored* int8 codes — the cluster DMA moves int8 (3-4x
+    fewer HBM bytes per bundle) and dequantize happens in VMEM right
+    before the gated FFN dots: codes * per-row scale (wsc_ref, this
+    group's (nc_g*cs, R) block) plus, for int4-mixed, the FP16 outlier
+    sidecar (wout_hbm, double-buffered alongside the codes). The
+    formula matches sparse_ffn._gather_quant exactly, so jnp and
+    pallas decode stay token-identical.
     """
+    if quant and mixed:
+        (x_ref, w_hbm, a_ref, b_ref, mask_ref, wsc_ref, wout_hbm,
+         y_ref, idx_ref) = refs
+    elif quant:
+        (x_ref, w_hbm, a_ref, b_ref, mask_ref, wsc_ref,
+         y_ref, idx_ref) = refs
+        wout_hbm = None
+    else:
+        x_ref, w_hbm, a_ref, b_ref, mask_ref, y_ref, idx_ref = refs
+        wsc_ref = wout_hbm = None
     g = pl.program_id(0)
 
     @pl.when(g == 0)
     def _init():
         y_ref[...] = jnp.zeros_like(y_ref)
 
-    def body(buf, sem):
+    def body(buf, sem, obuf=None, osem=None):
         x = x_ref[...]                                    # (B, D)
         # -- predictor scoring (fp32, matching core.predictor) --
         h = jax.lax.dot_general(
@@ -162,13 +180,32 @@ def _fused_kernel(x_ref, w_hbm, a_ref, b_ref, mask_ref, y_ref, idx_ref, *,
         jax.lax.fori_loop(0, kc, select, cscore, unroll=True)
 
         # -- double-buffered gather + gated FFN --
-        def cluster_dma(slot, k):
+        def code_dma(slot, k):
             c = idx_ref[g, k]
             row = (g * nc_g + c) * cs
             return pltpu.make_async_copy(
                 w_hbm.at[pl.ds(row, cs)], buf.at[slot], sem.at[slot])
 
-        cluster_dma(0, 0).start()                         # warm-up fetch
+        def sidecar_dma(slot, k):
+            # fp16 outlier sidecar rides its own DMA pair so the
+            # int8 code fetch stays a single contiguous burst
+            c = idx_ref[g, k]
+            row = (g * nc_g + c) * cs
+            return pltpu.make_async_copy(
+                wout_hbm.at[pl.ds(row, cs)], obuf.at[slot],
+                osem.at[slot])
+
+        def dma_start(slot, k):
+            code_dma(slot, k).start()
+            if mixed:
+                sidecar_dma(slot, k).start()
+
+        def dma_wait(slot, k):
+            code_dma(slot, k).wait()
+            if mixed:
+                sidecar_dma(slot, k).wait()
+
+        dma_start(0, 0)                                   # warm-up fetch
         act = activation_fn(activation)
 
         def compute(k, _):
@@ -176,10 +213,20 @@ def _fused_kernel(x_ref, w_hbm, a_ref, b_ref, mask_ref, y_ref, idx_ref, *,
 
             @pl.when(k + 1 < kc)
             def _prefetch():                              # overlap: c+1 DMA
-                cluster_dma(jax.lax.rem(k + 1, 2), k + 1).start()
+                dma_start(jax.lax.rem(k + 1, 2), k + 1)
 
-            cluster_dma(slot, k).wait()
+            dma_wait(slot, k)
             wk = buf[slot]                                # (cs, R, D)
+            if quant:
+                # dequantize in VMEM, before the FFN dots: stored int8
+                # codes * this cluster's per-row scales (+ outliers)
+                c = idx_ref[g, k]
+                sc = jax.lax.dynamic_slice(
+                    wsc_ref[...], (c * cs, 0), (cs, wk.shape[1]))
+                wk = wk.astype(jnp.float32) * sc[:, :, None]
+                if mixed:
+                    wk = wk + obuf[slot].astype(jnp.float32)
+                wk = wk.astype(x_ref.dtype)
             gg = jax.lax.dot_general(
                 x, wk[:, 0], (((1,), (1,)), ((), ())),
                 preferred_element_type=jnp.float32)       # (B, cs)
@@ -205,23 +252,38 @@ def _fused_kernel(x_ref, w_hbm, a_ref, b_ref, mask_ref, y_ref, idx_ref, *,
 
         jax.lax.fori_loop(0, kc, compute, 0)
 
-    pl.run_scoped(
-        body,
-        buf=pltpu.VMEM((2, cs) + w_hbm.shape[1:], w_hbm.dtype),
-        sem=pltpu.SemaphoreType.DMA((2,)))
+    if mixed:
+        pl.run_scoped(
+            body,
+            buf=pltpu.VMEM((2, cs) + w_hbm.shape[1:], w_hbm.dtype),
+            sem=pltpu.SemaphoreType.DMA((2,)),
+            obuf=pltpu.VMEM((2, cs) + wout_hbm.shape[1:], wout_hbm.dtype),
+            osem=pltpu.SemaphoreType.DMA((2,)))
+    else:
+        pl.run_scoped(
+            body,
+            buf=pltpu.VMEM((2, cs) + w_hbm.shape[1:], w_hbm.dtype),
+            sem=pltpu.SemaphoreType.DMA((2,)))
 
 
 @functools.partial(jax.jit, static_argnames=(
     "activation", "cluster_size", "groups", "kc", "cats", "interpret"))
 def fused_cold_ffn(x, w, A, Bp, mask, *, activation: str, cluster_size: int,
                    groups: int, kc: int, cats: bool = False,
-                   interpret: bool = True):
+                   interpret: bool = True, wsc=None, wout=None):
     """Fused cold path: score -> top-k -> gather -> FFN in one pallas_call.
 
     x (B, D); w (G*nc_g*cs, R, D) group-major cold bundles (HBM-resident
     — never staged through the block pipeline); A (D, r) / Bp
     (r, G*nc_g*cs) the cold predictor slice; mask (B, 1) float live-row
     mask (1.0 = row steers the batch union).
+
+    Quantized storage: pass the int8 codes as `w` plus `wsc`
+    (G*nc_g*cs, R) fp32 per-row scales (staged per group through the
+    block pipeline) and, for int4-mixed, `wout` (G*nc_g*cs, R, D) fp16
+    outlier sidecar (HBM-resident, DMA'd alongside the codes). The
+    cluster DMA then moves int8 and the kernel dequantizes in VMEM
+    before the FFN dots.
 
     Returns (y (B, D) fp32, idx (groups, kc) int32) — bitwise the same
     selection as the jnp path's jax.lax.top_k chain.
@@ -232,19 +294,30 @@ def fused_cold_ffn(x, w, A, Bp, mask, *, activation: str, cluster_size: int,
     nc_g = Ntot // (groups * cluster_size)
     assert 1 <= kc <= nc_g
     r = A.shape[1]
+    quant = wsc is not None
+    mixed = wout is not None
+    in_specs = [
+        pl.BlockSpec((B, D), lambda g: (0, 0)),
+        pl.BlockSpec(memory_space=pltpu.ANY),        # weights stay HBM
+        pl.BlockSpec((D, r), lambda g: (0, 0)),
+        pl.BlockSpec((r, nc_g * cluster_size),
+                     lambda g: (0, g)),              # group's pred cols
+        pl.BlockSpec((B, 1), lambda g: (0, 0)),
+    ]
+    operands = [x, w, A, Bp, mask]
+    if quant:
+        in_specs.append(pl.BlockSpec((nc_g * cluster_size, R),
+                                     lambda g: (g, 0)))  # group's scales
+        operands.append(wsc)
+        if mixed:
+            in_specs.append(pl.BlockSpec(memory_space=pltpu.ANY))
+            operands.append(wout)
     y, idx = pl.pallas_call(
         functools.partial(_fused_kernel, activation=activation,
                           gated=R == 3, cats=cats, kc=kc, nc_g=nc_g,
-                          cs=cluster_size),
+                          cs=cluster_size, quant=quant, mixed=mixed),
         grid=(groups,),
-        in_specs=[
-            pl.BlockSpec((B, D), lambda g: (0, 0)),
-            pl.BlockSpec(memory_space=pltpu.ANY),        # weights stay HBM
-            pl.BlockSpec((D, r), lambda g: (0, 0)),
-            pl.BlockSpec((r, nc_g * cluster_size),
-                         lambda g: (0, g)),              # group's pred cols
-            pl.BlockSpec((B, 1), lambda g: (0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=(pl.BlockSpec((B, D), lambda g: (0, 0)),
                    pl.BlockSpec(memory_space=pltpu.SMEM)),
         out_shape=(jax.ShapeDtypeStruct((B, D), jnp.float32),
@@ -252,5 +325,5 @@ def fused_cold_ffn(x, w, A, Bp, mask, *, activation: str, cluster_size: int,
         interpret=interpret,
         compiler_params=CompilerParams(
             dimension_semantics=("arbitrary",)),
-    )(x, w, A, Bp, mask)
+    )(*operands)
     return y, idx

@@ -40,7 +40,8 @@ def cluster_gather_ffn_grouped(x, wc, cidx, *, activation: str,
 
 
 def fused_cold_ffn(x, wc, A, Bp, *, activation: str, mode: str = "relu",
-                   kc: int, active_mask=None, interpret: bool = None):
+                   kc: int, active_mask=None, interpret: bool = None,
+                   wq=None, wsc=None, wout=None):
     """Fused cold path (kernels/cluster_gather_ffn.fused_cold_ffn):
     predictor score -> batch-union top-k -> double-buffered cluster
     gather -> gated FFN, one pallas_call.
@@ -49,9 +50,15 @@ def fused_cold_ffn(x, wc, A, Bp, *, activation: str, mode: str = "relu",
     and Bp (r, G*nc_g*cs) the predictor's cold slice; kc clusters kept
     per group. `mode == "cats"` applies the per-token score gating the
     jnp backend applies (§7.2.5); `active_mask` (B,) bool keeps dead
-    KV-arena lanes out of the batch union. Returns
-    (y (B, D) fp32, cidx (G, kc) int32) — the same selection the jnp
-    top_k chain makes, so the two backends decode token-identically.
+    KV-arena lanes out of the batch union.
+
+    When the plan stores quantized bundles (§7.6) pass wq (int8 codes,
+    same shape as wc), wsc ((G, nc_g, cs, R) fp32 scales) and, for
+    int4-mixed, wout (fp16 outlier sidecar): the kernel then DMAs the
+    int8 codes instead of the fp weights and dequantizes in VMEM before
+    the FFN dots. Returns (y (B, D) fp32, cidx (G, kc) int32) — the
+    same selection the jnp top_k chain makes, so the two backends
+    decode token-identically.
     """
     if interpret is None:
         interpret = _default_interpret()
@@ -61,10 +68,13 @@ def fused_cold_ffn(x, wc, A, Bp, *, activation: str, mode: str = "relu",
         mask = jnp.ones((B, 1), jnp.float32)
     else:
         mask = active_mask.astype(jnp.float32).reshape(B, 1)
+    w_hbm = (wq if wq is not None else wc).reshape(G * nc_g * cs, R, D)
     return _fused_cold_ffn_call(
-        x, wc.reshape(G * nc_g * cs, R, D), A, Bp, mask,
+        x, w_hbm, A, Bp, mask,
         activation=activation, cluster_size=cs, groups=G, kc=kc,
-        cats=mode == "cats", interpret=interpret)
+        cats=mode == "cats", interpret=interpret,
+        wsc=None if wq is None else wsc.reshape(G * nc_g * cs, R),
+        wout=None if wout is None else wout.reshape(G * nc_g * cs, R, D))
 
 
 __all__ = ["cluster_gather_ffn", "cluster_gather_ffn_grouped",

@@ -53,7 +53,8 @@ FAMILY_ARCHS = default_archs()
 def build_engine(arch: str, reduced: bool = True, offload: float = 0.5,
                  spec=POWERINFER2, storage=UFS40, profile: bool = False,
                  seed: int = 0, tp: int = 1, dp: int = 1,
-                 backend: str = "jnp", **engine_kwargs):
+                 backend: str = "jnp", storage_dtype: str = "fp16",
+                 **engine_kwargs):
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
@@ -68,7 +69,8 @@ def build_engine(arch: str, reduced: bool = True, offload: float = 0.5,
                                       cfg.vocab_size) for i in range(4)]
         counts, n_tok = profile_activations(params, cfg, batches)
         freqs = (counts / n_tok).astype(np.float32)
-    plan = fam.build_plan(cfg, freqs, backend=backend)
+    plan = fam.build_plan(cfg, freqs, backend=backend,
+                          storage_dtype=storage_dtype)
     params = fam.prepare_params(params, plan)
     if backend != "jnp":
         # the decoder also gets the override so per-bucket plans the
@@ -90,7 +92,8 @@ def build_engine(arch: str, reduced: bool = True, offload: float = 0.5,
 
 def build_fleet(arch: str, n: int, reduced: bool = True,
                 offload: float = 0.5, spec=POWERINFER2, storage=UFS40,
-                seed: int = 0, backend: str = "jnp", **gateway_kwargs):
+                seed: int = 0, backend: str = "jnp",
+                storage_dtype: str = "fp16", **gateway_kwargs):
     """N complete single-device engines behind a FleetGateway — the
     --fleet front door (DESIGN.md §11). Engines share jit caches via
     local_fleet, so fleet size never multiplies trace time."""
@@ -101,7 +104,8 @@ def build_fleet(arch: str, n: int, reduced: bool = True,
     fam = serving_family(cfg)
     model = fam.make_model(cfg)
     params = model.init(jax.random.key(seed))
-    plan = fam.build_plan(cfg, backend=backend)
+    plan = fam.build_plan(cfg, backend=backend,
+                          storage_dtype=storage_dtype)
     params = fam.prepare_params(params, plan)
     engine_kwargs = {} if backend == "jnp" else {"backend": backend}
     backends = local_fleet(cfg, params, plan, n, spec=spec,
@@ -142,6 +146,14 @@ def main():
                          "fused score->top-k->gather->FFN kernel "
                          "(interpret mode off-TPU; DESIGN.md §10); "
                          "decode is token-identical either way")
+    ap.add_argument("--storage-dtype",
+                    choices=("fp16", "int8", "int4-mixed"),
+                    default="fp16",
+                    help="cold-bundle storage dtype (§7.6): cold FFN "
+                         "bundles are quantized at prepare time, both "
+                         "cold paths dequantize at the gather boundary, "
+                         "and the storage plane prices I/O + residency "
+                         "at the declared bundle bytes (§4.4)")
     args = ap.parse_args()
 
     arch = args.arch or FAMILY_ARCHS[args.family]
@@ -165,7 +177,8 @@ def main():
         import time
         gw, cfg = build_fleet(arch, args.fleet, args.reduced,
                               args.offload, storage=storage,
-                              backend=args.backend)
+                              backend=args.backend,
+                              storage_dtype=args.storage_dtype)
         rng = np.random.default_rng(0)
         prompt = rng.integers(0, cfg.vocab_size,
                               (args.bon, args.prompt_len))
@@ -193,7 +206,8 @@ def main():
         return
     engine, cfg = build_engine(arch, args.reduced, args.offload,
                                storage=storage, profile=True, tp=tp,
-                               dp=args.dp, backend=args.backend)
+                               dp=args.dp, backend=args.backend,
+                               storage_dtype=args.storage_dtype)
     rng = np.random.default_rng(0)
     prompt = rng.integers(0, cfg.vocab_size,
                           (args.bon, args.prompt_len)).astype(np.int32)

@@ -9,7 +9,14 @@ quantization: values are quantized/dequantized; storage is int8).
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
+
+# Smallest priced read block of the modeled storage tier (UFS 4.0 data
+# unit, io_model.UFS40's first curve point). Quantized bundle sizes are
+# padded to this granularity; the storage plane passes its own block
+# size instead of relying on this default.
+BUNDLE_ALIGN = 4096
 
 
 def quantize_groupwise_int4(w, group: int = 32):
@@ -18,6 +25,10 @@ def quantize_groupwise_int4(w, group: int = 32):
     w (..., D) with D % group == 0 -> {'q': int8 in [-8,7], 'scales'}.
     """
     shape = w.shape
+    if shape[-1] % group:
+        raise ValueError(
+            f"groupwise int4 needs the channel dim to be a multiple of "
+            f"group={group}; got D={shape[-1]}")
     wg = w.reshape(*shape[:-1], shape[-1] // group, group).astype(jnp.float32)
     scale = jnp.max(jnp.abs(wg), axis=-1, keepdims=True) / 7.0
     scale = jnp.maximum(scale, 1e-8)
@@ -35,10 +46,11 @@ def dequantize_groupwise_int4(qw):
 
 def quantize_per_channel_int4(w):
     """QNN-style: one scale per output channel (last-but... row)."""
-    scale = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=-1,
-                    keepdims=True) / 7.0
+    w32 = w.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(w32), axis=-1, keepdims=True) / 7.0
     scale = jnp.maximum(scale, 1e-8)
-    q = jnp.clip(jnp.round(w / scale), -8, 7).astype(jnp.int8)
+    # round the fp32 copy: bf16/fp16 inputs must yield the same codes
+    q = jnp.clip(jnp.round(w32 / scale), -8, 7).astype(jnp.int8)
     return {"q": q, "scales": scale.squeeze(-1)}
 
 
@@ -46,15 +58,25 @@ def dequantize_per_channel_int4(qw):
     return qw["q"].astype(jnp.float32) * qw["scales"][..., None]
 
 
+def exact_topk_mask(mag, k: int):
+    """Boolean mask selecting exactly the k largest entries of `mag`
+    (ties broken by lowest flat index, `lax.top_k`'s order). A `>=
+    threshold` mask keeps *more* than k under tied magnitudes, which
+    silently inflates the stored-FP16 byte fraction past the priced
+    `outlier_frac`."""
+    flat = mag.reshape(-1)
+    _, idx = jax.lax.top_k(flat, k)
+    mask = jnp.zeros(flat.shape, bool).at[idx].set(True)
+    return mask.reshape(mag.shape)
+
+
 def quantize_mixed(w, outlier_frac: float = 0.01):
     """PowerInfer-2's scheme (AWQ-inspired, §7.6): the top-|w| outliers
     are *preserved* in high precision (FP16), the rest is per-channel
     INT4 (the only granularity mobile NPUs support)."""
     w32 = w.astype(jnp.float32)
-    flat = jnp.abs(w32).reshape(-1)
-    k = max(1, int(flat.shape[0] * outlier_frac))
-    thresh = jnp.sort(flat)[-k]
-    outlier_mask = jnp.abs(w32) >= thresh
+    k = max(1, int(w32.size * outlier_frac))
+    outlier_mask = exact_topk_mask(jnp.abs(w32), k)
     base = jnp.where(outlier_mask, 0.0, w32)
     q4 = quantize_per_channel_int4(base)
     o_f16 = jnp.where(outlier_mask, w32, 0.0).astype(jnp.float16)
@@ -81,13 +103,49 @@ def quant_error(w, scheme: str = "mixed", **kw) -> float:
     return float(jnp.linalg.norm(deq - w32) / (jnp.linalg.norm(w32) + 1e-9))
 
 
-def bundle_nbytes_int4(d_model: int, gated: bool = True) -> int:
+def bundle_nbytes_int4(d_model: int, gated: bool = True,
+                       align: int = BUNDLE_ALIGN,
+                       outlier_frac: float = 0.0) -> int:
     """Paper §4.4: a 4-bit Gate-Up-Down bundle is ~7.5KB for d=4096
-    (2KB int4 weights + 0.5KB scales per matrix), aligned to 8KB."""
+    (2KB int4 weights + 0.5KB group scales per matrix), padded to the
+    storage read granularity `align` — 4KB UFS data units, so the
+    d=4096 bundle lands on 8KB, matching the paper's bundle-size table.
+    `outlier_frac` adds the mixed scheme's FP16 outlier sidecar bytes
+    (§7.6) before padding; `align=0` returns the raw (unpadded) size.
+    """
     R = 3 if gated else 2
     per_matrix = d_model // 2 + d_model // 32 * 2   # int4 + fp16 group scales
-    raw = R * per_matrix
-    return ((raw + 4095) // 4096) * 4096            # 4KB alignment
+    raw = R * per_matrix + int(round(outlier_frac * R * d_model)) * 2
+    if not align:
+        return raw
+    return ((raw + align - 1) // align) * align
+
+
+def bundle_nbytes(d_model: int, storage_dtype: str, rows: int = 3,
+                  itemsize: int = 2, align: int = BUNDLE_ALIGN,
+                  outlier_frac: float = 0.01) -> int:
+    """Bytes of one neuron bundle (`rows` x d_model weights) as stored
+    at `storage_dtype` — the single accounting the storage plane prices
+    with (ROADMAP item 3: NeuronCache/ColdStore price the *declared*
+    dtype, not fp bytes).
+
+      fp16       rows * d_model * itemsize (legacy fp accounting,
+                 unpadded — keeps fp benchmarks byte-identical)
+      int8       per-channel int8 + one fp16 scale per row, padded
+      int4-mixed per-channel int4 + group scales + FP16 outlier
+                 sidecar (§7.6), padded — `bundle_nbytes_int4`
+    """
+    if storage_dtype in (None, "fp16"):
+        return rows * d_model * itemsize
+    if storage_dtype == "int8":
+        raw = rows * (d_model + 2)
+        return ((raw + align - 1) // align) * align if align else raw
+    if storage_dtype == "int4-mixed":
+        return bundle_nbytes_int4(d_model, gated=rows == 3, align=align,
+                                  outlier_frac=outlier_frac)
+    raise ValueError(
+        f"unknown storage dtype {storage_dtype!r}; expected one of "
+        f"'fp16', 'int8', 'int4-mixed'")
 
 
 # ------------------------------------------------------- int8 KV cache ----
@@ -101,10 +159,10 @@ def bundle_nbytes_int4(d_model: int, gated: bool = True) -> int:
 def quantize_kv(kv):
     """kv (..., T, KV, dh) -> {'q': int8, 'scale': f32 (..., T, KV, 1)}."""
     import jax.numpy as _jnp
-    scale = _jnp.max(_jnp.abs(kv.astype(_jnp.float32)), axis=-1,
-                     keepdims=True) / 127.0
+    kv32 = kv.astype(_jnp.float32)
+    scale = _jnp.max(_jnp.abs(kv32), axis=-1, keepdims=True) / 127.0
     scale = _jnp.maximum(scale, 1e-8)
-    q = _jnp.clip(_jnp.round(kv / scale), -127, 127).astype(_jnp.int8)
+    q = _jnp.clip(_jnp.round(kv32 / scale), -127, 127).astype(_jnp.int8)
     return {"q": q, "scale": scale}
 
 

@@ -1,0 +1,174 @@
+"""Storage-dtype bundle quantization for the serving plane (§7.6 + §4.4).
+
+`HybridPlan.storage_dtype` declares how *cold* neuron bundles live on
+the slow tier: 'fp16' (legacy fp accounting), 'int8' (per-channel int8
++ one scale per row) or 'int4-mixed' (the paper's hybrid scheme:
+per-channel INT4 with the top-|w| outliers preserved in FP16).
+`ServingFamily.prepare_params` routes through `quantize_plan_params`
+so every consumer of the params sees one consistent story:
+
+* `w` keeps full-precision values for the hot/pinned prefix (the paper
+  keeps dense-activation weights high-precision on the NPU) and holds
+  the *dequantized roundtrip* for cold rows — prefill, profiling and
+  the hot compute of larger buckets all read what the storage actually
+  holds;
+* `wq` (int8 codes), `wsc` (fp32 per-row scales) and, for int4-mixed,
+  `wout` (fp16 outlier sidecar) are the stored representation the cold
+  paths gather from, dequantizing at the gather boundary — in the jnp
+  chain and in the pallas fused kernel (int8 DMA into VMEM, dequant
+  before the gated FFN) — so jnp and pallas decode stay
+  token-identical.
+
+The containers are full-size (all N rows) so `[n_hot:]` slicing stays
+aligned with `w` for every batch bucket; rows below the quantization
+boundary (the smallest bucket's hot prefix) are never read from them.
+MoE plans quantize the routed experts' cold rows in place (simulated
+quantization — the moe cold path is expert dispatch, not a cluster
+gather), leaving shared experts fp.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+STORAGE_DTYPES = ("fp16", "int8", "int4-mixed")
+OUTLIER_FRAC = 0.01       # §7.6: ~1% of weights preserved in FP16
+
+# Declared token-level divergence bounds (the quality gate the
+# conformance battery and the serving-quant bench both check): minimum
+# teacher-forced argmax agreement between quantized and fp decode on
+# the reduced random-init battery archs. Random-init weights are the
+# worst case for per-channel int4 — trained checkpoints quantize far
+# better (§7.6 reports negligible loss) — so these are floors, not
+# expected quality.
+TOKEN_AGREEMENT_BOUND = {"int8": 0.90, "int4-mixed": 0.60}
+
+
+def check_storage_dtype(storage_dtype: str) -> str:
+    if storage_dtype not in STORAGE_DTYPES:
+        raise ValueError(
+            f"unknown storage dtype {storage_dtype!r}; expected one of "
+            f"{STORAGE_DTYPES}")
+    return storage_dtype
+
+
+def plan_storage_dtype(plan) -> str:
+    """The single storage dtype an ExecutionPlan declares (every batch
+    bucket must agree — the stored bytes don't change per batch)."""
+    sds = {getattr(p, "storage_dtype", "fp16")
+           for p in plan.plans.values()}
+    if len(sds) != 1:
+        raise ValueError(
+            f"batch buckets disagree on storage_dtype: {sorted(sds)}")
+    return check_storage_dtype(sds.pop())
+
+
+def _topk_mask_batched(mag, k: int):
+    """(M, S) magnitudes -> bool (M, S) with exactly k True per row
+    (ties broken by lowest index — same contract as
+    `quantize.exact_topk_mask`, batched)."""
+    _, idx = jax.lax.top_k(mag, k)
+    mask = jnp.zeros(mag.shape, bool)
+    return mask.at[jnp.arange(mag.shape[0])[:, None], idx].set(True)
+
+
+def quantize_bundles(w, storage_dtype: str,
+                     outlier_frac: float = OUTLIER_FRAC,
+                     batch_dims: int = 0):
+    """Quantize bundle weights w (..., D) per channel (scale over the
+    last dim) -> {'wq' int8, 'wsc' f32 (...,), ['wout' f16 (..., D)]}.
+
+    int4-mixed keeps exactly k = round(outlier_frac * size) top-|w|
+    outliers per weight matrix in the fp16 sidecar; `batch_dims` leading
+    dims each get their own outlier budget (e.g. 1 for a stacked
+    (L, N, R, D) tensor: per-layer budgets).
+
+    Dequantize is `wq * wsc[..., None] (+ wout)` — outlier positions
+    carry a zero int4 code, so the sidecar add is exact.
+    """
+    check_storage_dtype(storage_dtype)
+    if storage_dtype == "fp16":
+        raise ValueError("fp16 is the identity: nothing to quantize")
+    w32 = jnp.asarray(w, jnp.float32)
+    if storage_dtype == "int8":
+        scale = jnp.max(jnp.abs(w32), axis=-1, keepdims=True) / 127.0
+        scale = jnp.maximum(scale, 1e-8)
+        q = jnp.clip(jnp.round(w32 / scale), -127, 127).astype(jnp.int8)
+        return {"wq": q, "wsc": scale.squeeze(-1)}
+    lead = 1
+    for d in w32.shape[:batch_dims]:
+        lead *= d
+    flat = jnp.abs(w32).reshape(lead, -1)
+    k = max(1, int(round(flat.shape[1] * outlier_frac)))
+    mask = _topk_mask_batched(flat, k).reshape(w32.shape)
+    base = jnp.where(mask, 0.0, w32)
+    scale = jnp.max(jnp.abs(base), axis=-1, keepdims=True) / 7.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(base / scale), -8, 7).astype(jnp.int8)
+    wout = jnp.where(mask, w32, 0.0).astype(jnp.float16)
+    return {"wq": q, "wsc": scale.squeeze(-1), "wout": wout}
+
+
+def dequantize_bundles(qd):
+    """fp32 values of a `quantize_bundles` result — the exact formula
+    both cold paths fuse at their gather boundary."""
+    deq = qd["wq"].astype(jnp.float32) * qd["wsc"][..., None]
+    if "wout" in qd:
+        deq = deq + qd["wout"].astype(jnp.float32)
+    return deq
+
+
+def quant_boundary(plan) -> int:
+    """First quantized neuron row: the smallest bucket's hot prefix.
+    Every bucket's cold region [n_hot, N) lies inside [boundary, N), so
+    one stored representation serves all buckets."""
+    return min(p.n_hot for p in plan.plans.values())
+
+
+def _quantize_ffn(params, plan, storage_dtype):
+    """Dense/vlm: attach full-size wq/wsc(/wout) containers and write
+    the dequantized roundtrip back into w's cold rows."""
+    layers = params["layers"]
+    ffn = layers["ffn"]
+    w = ffn["w"]                                       # (L, N, R, D)
+    n_q = quant_boundary(plan)
+    qd = quantize_bundles(w, storage_dtype, batch_dims=1)
+    deq = dequantize_bundles(qd).astype(w.dtype)
+    w = jnp.concatenate([w[:, :n_q], deq[:, n_q:]], axis=1)
+    new_ffn = dict(ffn, w=w, **qd)
+    return dict(params, layers=dict(layers, ffn=new_ffn))
+
+
+def _quantize_moe(params, plan, storage_dtype):
+    """MoE: simulated in-place quantization of the routed experts' cold
+    rows (whole-expert plans: every routed row; two-level plans: rows
+    past the per-expert hot prefix). Shared experts stay fp."""
+    layers = params["layers"]
+    moe = layers["moe"]
+    ex = moe["experts"]                                # (L, E, f, R, D)
+    L, E, f = ex.shape[:3]
+    n_q_e = min(getattr(p, "n_expert_hot", 0)
+                for p in plan.plans.values())
+    cold = ex[:, :, n_q_e:]
+    qd = quantize_bundles(
+        cold.reshape(L * E, *cold.shape[2:]), storage_dtype,
+        batch_dims=1)                                  # per-expert budget
+    deq = dequantize_bundles(qd).reshape(cold.shape).astype(ex.dtype)
+    ex = jnp.concatenate([ex[:, :, :n_q_e], deq], axis=2)
+    return dict(params, layers=dict(layers, moe=dict(moe, experts=ex)))
+
+
+def quantize_plan_params(params, plan):
+    """Quantize cold FFN bundles to the plan's declared storage dtype
+    (identity for fp16). Called on *permuted* params — the hot-first
+    order decides which rows are cold."""
+    sd = plan_storage_dtype(plan)
+    if sd == "fp16":
+        return params
+    layers = params.get("layers", {})
+    if "ffn" in layers:
+        return _quantize_ffn(params, plan, sd)
+    if "moe" in layers:
+        return _quantize_moe(params, plan, sd)
+    raise ValueError("params carry neither a dense 'ffn' nor a 'moe' "
+                     "layer stack; cannot quantize cold bundles")

@@ -57,6 +57,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec
 
 from repro.compat import set_mesh
 from repro.configs.base import ModelConfig
@@ -314,6 +315,15 @@ class ServeEngine:
         self.storage.close()
 
     # --------------------------------------------------- mesh placement ----
+    # Quantized-bundle containers (quant/storage.py) ride next to the
+    # (L, N, R, D) ffn tensor but aren't in the static model spec; they
+    # shard like `w` does — neuron dim over 'model'.
+    _QUANT_FFN_SPECS = {
+        "wq": PartitionSpec(None, "model", None, None),
+        "wsc": PartitionSpec(None, "model", None),
+        "wout": PartitionSpec(None, "model", None, None),
+    }
+
     def _shard_params(self, params):
         """Place params on the mesh with the model's param sharding —
         the bundled (L, N, R, D) FFN tensor and the predictor columns
@@ -321,6 +331,12 @@ class ServeEngine:
         from jax.sharding import NamedSharding
         from repro.sharding import _filter_spec
         mesh, specs = self.mesh, self.model.param_spec()
+        ffn = params.get("layers", {}).get("ffn", {})
+        extra = {k: s for k, s in self._QUANT_FFN_SPECS.items() if k in ffn}
+        if extra and "ffn" in specs.get("layers", {}):
+            specs = dict(specs, layers=dict(
+                specs["layers"],
+                ffn=dict(specs["layers"]["ffn"], **extra)))
 
         def put(a, s):
             fs = _filter_spec(s, mesh, shape=a.shape)

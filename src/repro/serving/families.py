@@ -15,17 +15,21 @@ four family-specific pieces of the stack:
   kept-dispatch expert counts, or the two-level (L, E, 1+ncc) form
   when cfg.moe_intra_expert prices hot/cold clusters *inside* each
   expert — DESIGN.md §9);
-* `build_plan(cfg, freqs=None, hw=None, backend="jnp")` — the
-  ExecutionPlan the bucketed decoder and storage plane consume (dense:
-  the offline hot-first planner; moe: experts-as-clusters,
-  `build_moe_plan`). `backend` picks the cold-path kernel the
-  per-bucket plans carry ('jnp' | 'pallas', DESIGN.md §10); moe
-  raises on 'pallas' (its cold path is expert dispatch);
+* `build_plan(cfg, freqs=None, hw=None, backend="jnp",
+  storage_dtype="fp16")` — the ExecutionPlan the bucketed decoder and
+  storage plane consume (dense: the offline hot-first planner; moe:
+  experts-as-clusters, `build_moe_plan`). `backend` picks the
+  cold-path kernel the per-bucket plans carry ('jnp' | 'pallas',
+  DESIGN.md §10); moe raises on 'pallas' (its cold path is expert
+  dispatch). `storage_dtype` declares the cold bundles' on-storage
+  dtype ('fp16' | 'int8' | 'int4-mixed', §7.6) — it rides on every
+  bucket's HybridPlan and the storage plane prices it;
 * `prepare_params(params, plan)` — the offline weight transform
   (dense: hot-first neuron permutation; moe: identity for
   whole-expert plans — the architecture already makes clusters
   explicit — and the per-expert hot-first permutation for two-level
-  plans).
+  plans), followed by cold-bundle quantization to the plan's declared
+  storage dtype (quant/storage.py; identity for fp16).
 
 The storage plane keeps its own half of the registry
 (`storage_plane.make_storage_view`) so it stays importable without the
@@ -52,7 +56,8 @@ class ServingFamily:
     make_model: Callable           # (cfg) -> models.dense.Model
     make_decode_step: Callable     # (cfg) -> traced serving decode fn
     build_plan: Callable           # (cfg, freqs=None, hw=None,
-                                   #  backend="jnp") -> ExecutionPlan
+                                   #  backend="jnp", storage_dtype=
+                                   #  "fp16") -> ExecutionPlan
     prepare_params: Callable       # (params, plan) -> params
     default_arch: str = ""         # the family's representative config
 
@@ -88,14 +93,18 @@ def serving_family(cfg) -> ServingFamily:
 
 # ------------------------------------------------- built-in families ----
 
-def _dense_build_plan(cfg, freqs=None, hw=None, backend="jnp"):
+def _dense_build_plan(cfg, freqs=None, hw=None, backend="jnp",
+                      storage_dtype="fp16"):
     from repro.core.planner import build_plan
-    return build_plan(cfg, freqs, hw=hw, backend=backend)
+    return build_plan(cfg, freqs, hw=hw, backend=backend,
+                      storage_dtype=storage_dtype)
 
 
 def _dense_prepare(params, plan):
     from repro.core.planner import permute_ffn_params
-    return permute_ffn_params(params, plan.neuron_order)
+    from repro.quant.storage import quantize_plan_params
+    params = permute_ffn_params(params, plan.neuron_order)
+    return quantize_plan_params(params, plan)
 
 
 def _dense_family(name: str, arch: str) -> ServingFamily:
@@ -111,7 +120,8 @@ def _dense_family(name: str, arch: str) -> ServingFamily:
     )
 
 
-def _moe_build_plan(cfg, freqs=None, hw=None, backend="jnp"):
+def _moe_build_plan(cfg, freqs=None, hw=None, backend="jnp",
+                    storage_dtype="fp16"):
     # freqs: within-expert activation frequencies (L, E*f) for the
     # two-level plan (cfg.moe_intra_expert); ignored for whole-expert
     if backend not in (None, "jnp"):
@@ -119,18 +129,21 @@ def _moe_build_plan(cfg, freqs=None, hw=None, backend="jnp"):
             f"moe has no {backend!r} cold-path backend: its cold path "
             f"is expert dispatch (models/moe.py), not a cluster gather")
     from repro.core.planner import build_moe_plan
-    return build_moe_plan(cfg, freqs, hw=hw)
+    return build_moe_plan(cfg, freqs, hw=hw, storage_dtype=storage_dtype)
 
 
 def _moe_prepare(params, plan):
     # two-level plans carry a per-expert hot-first permutation; the
     # whole-expert plan's order is the identity (experts already ARE
-    # the clusters), so prepare stays a no-op there
+    # the clusters), so permutation stays a no-op there. Cold-bundle
+    # quantization (simulated, in place on the routed experts) follows
+    # for non-fp16 plans.
     if any(getattr(p, "n_expert_hot", 0)
            for p in plan.plans.values()):
         from repro.core.planner import permute_moe_params
-        return permute_moe_params(params, plan.neuron_order)
-    return params
+        params = permute_moe_params(params, plan.neuron_order)
+    from repro.quant.storage import quantize_plan_params
+    return quantize_plan_params(params, plan)
 
 
 def _moe_family() -> ServingFamily:

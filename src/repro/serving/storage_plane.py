@@ -40,6 +40,8 @@ from repro.core.io_model import StorageModel, UFS40
 from repro.core.pipeline import ClusterTask, PrefetchExecutor, \
     simulate_pipeline
 from repro.core.planner import HardwareProfile
+from repro.quant.quantize import bundle_nbytes
+from repro.quant.storage import plan_storage_dtype
 
 
 # ----------------------------------------------------- family views ----
@@ -374,11 +376,20 @@ class StoragePlane:
         self.neuron_scale = self.view.deploy_neurons(self.timing) / N
         self.layer_scale = self.timing.num_layers / cfg.num_layers
         bundles = self.view.bundles(params)
+        # Storage-dtype pricing (§7.6 + §4.4): the plan declares how
+        # cold bundles live on the slow tier; every byte count below —
+        # cold-store reads, cache residency, prefill streaming — prices
+        # the declared dtype at deployment-size constants. fp16 keeps
+        # the legacy unpadded rows*d_model*itemsize accounting exactly.
+        self.storage_dtype = plan_storage_dtype(plan)
+        qb = bundle_nbytes(self.timing.d_model, self.storage_dtype,
+                           rows=self.timing.rows,
+                           itemsize=self.timing.itemsize)
         self.coldstore = ColdStore(bundles, storage=storage,
                                    two_phase=spec.two_phase,
                                    block_size=24576 if spec.use_bundling
                                    else 4096,
-                                   bundle_bytes_override=self.timing.bundle_bytes,
+                                   bundle_bytes_override=qb,
                                    count_scale=self.neuron_scale)
         self.bundle_bytes = self.coldstore.bundle_bytes()
 
@@ -390,17 +401,25 @@ class StoragePlane:
         # bundling-redundancy derating (spec.cache_efficiency).
         resident = int(N * (1.0 - offload_ratio)) // self.n_replicas
         plan1 = plan.plan_for_batch(1)
+        # Quantized cold bundles stretch the same host-byte budget over
+        # fp_bytes/q_bytes x more cold neurons (~3-4x at int4-mixed);
+        # the pinned hot prefix stays fp on the NPU, so only the cold
+        # LRU scales — capped at the neurons that actually exist.
+        ratio = self.timing.bundle_bytes / self.bundle_bytes
         if spec.pinned_hot:
             hot_cap = (resident // 2) // self.cs * self.cs
             # two-level MoE plans pin every expert's hot prefix
             # (plan.n_pinned), not just the per-step computed hot
             self.n_hot = min(plan1.resident_hot, max(hot_cap, self.cs))
-            cold_capacity = max(resident - self.n_hot, self.cs) \
-                * cfg.num_layers
+            cold_per_layer = min(
+                int(max(resident - self.n_hot, self.cs) * ratio),
+                max(N - self.n_hot, self.cs))
+            cold_capacity = cold_per_layer * cfg.num_layers
         else:
             self.n_hot = 0
-            cold_capacity = max(int(resident * spec.cache_efficiency),
-                                self.cs) * cfg.num_layers
+            cold_capacity = min(
+                int(max(int(resident * spec.cache_efficiency),
+                        self.cs) * ratio), N) * cfg.num_layers
         # the hot prefix is pinned (fixed region); the LRU capacity below
         # is entirely the cold region. One segmented cache *per device
         # shard*, each a 1/n miniature of the single-device cache:
@@ -526,7 +545,7 @@ class StoragePlane:
         flat = self.view.deploy_neurons(t)
         n_off = int(flat * self.offload_ratio) // self.n_shards
         io = self.coldstore.storage.read_time(
-            n_off * t.bundle_bytes * t.num_layers, 524288, random=False)
+            n_off * self.bundle_bytes * t.num_layers, 524288, random=False)
         ffn = self.view.deploy_prefill_neurons(t) * 2 * t.rows * t.d_model \
             / self.n_shards
         attn = self._attn_flops_token(prompt_len / 2.0) * self._attn_frac()

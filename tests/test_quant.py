@@ -6,7 +6,7 @@ import pytest
 
 from repro.quant.quantize import (
     bundle_nbytes_int4, dequantize_groupwise_int4, dequantize_mixed,
-    quant_error, quantize_groupwise_int4,
+    dequantize_per_channel_int4, quant_error, quantize_groupwise_int4,
     quantize_mixed, quantize_per_channel_int4)
 
 
@@ -91,3 +91,86 @@ def test_int8_kv_scale_shapes():
     qkv = quantize_kv(k)
     assert qkv["q"].shape == k.shape and qkv["q"].dtype.name == "int8"
     assert qkv["scale"].shape == (3, 8, 2, 1)
+
+
+# ------------------------------------------- regression: edge cases ----
+
+def test_groupwise_rejects_nondividing_group():
+    """D % group != 0 must raise a clear ValueError, not an opaque
+    reshape error."""
+    w = jnp.ones((4, 100))
+    with pytest.raises(ValueError, match="multiple of group=32"):
+        quantize_groupwise_int4(w, 32)
+
+
+def test_mixed_outlier_count_exact_under_ties():
+    """Tied magnitudes must not inflate the outlier set past the
+    priced budget: exactly k = size * frac entries are preserved."""
+    w = jnp.full((16, 64), 0.5)               # every |w| tied
+    qw = quantize_mixed(w, outlier_frac=0.01)
+    k = max(1, int(w.size * 0.01))
+    assert int(np.asarray(qw["outlier_mask"]).sum()) == k
+
+
+def test_bf16_and_fp32_inputs_quantize_identically():
+    """Schemes round an fp32 copy, so a bf16 view of the same weights
+    yields the same codes (storage is what's being modeled, not the
+    compute dtype the caller happens to hold)."""
+    w = jax.random.normal(jax.random.key(5), (8, 64)) * 0.1
+    wb = w.astype(jnp.bfloat16)
+    q32 = quantize_per_channel_int4(wb.astype(jnp.float32))
+    qb = quantize_per_channel_int4(wb)
+    np.testing.assert_array_equal(np.asarray(q32["q"]), np.asarray(qb["q"]))
+    g32 = quantize_groupwise_int4(wb.astype(jnp.float32), 32)
+    gb = quantize_groupwise_int4(wb, 32)
+    np.testing.assert_array_equal(np.asarray(g32["q"]), np.asarray(gb["q"]))
+
+
+def test_all_zero_channel_roundtrips_to_zero():
+    """A dead channel (all-zero row) must not produce NaNs/infs — the
+    scale floor keeps the roundtrip exactly zero."""
+    w = jnp.zeros((4, 64)).at[1].set(
+        jax.random.normal(jax.random.key(6), (64,)))
+    for deq in (dequantize_per_channel_int4(quantize_per_channel_int4(w)),
+                dequantize_groupwise_int4(quantize_groupwise_int4(w, 32)),
+                dequantize_mixed(quantize_mixed(w))):
+        a = np.asarray(deq)
+        assert np.isfinite(a).all()
+        assert (a[0] == 0).all() and (a[2] == 0).all() and (a[3] == 0).all()
+
+
+def test_bundle_nbytes_int4_alignment_parameter():
+    """`align` is the storage read granularity: 0 returns the raw
+    size, and the padded size is the next multiple of align."""
+    raw = bundle_nbytes_int4(4096, gated=True, align=0)
+    assert 0 < raw <= 8192
+    assert bundle_nbytes_int4(4096, gated=True, align=4096) == 8192
+    assert bundle_nbytes_int4(4096, gated=True, align=1) == raw
+    # the outlier sidecar adds bytes before padding
+    assert bundle_nbytes_int4(4096, align=0, outlier_frac=0.01) > raw
+
+
+def test_bundle_nbytes_int4_monotonic_in_d_model():
+    sizes = [bundle_nbytes_int4(d, align=0) for d in
+             (256, 512, 1024, 2048, 4096, 8192)]
+    assert sizes == sorted(sizes) and len(set(sizes)) == len(sizes)
+
+
+def test_bundle_nbytes_dispatcher():
+    """One accounting for the storage plane: fp16 is the legacy
+    unpadded fp bytes; quantized dtypes pad to the read granularity;
+    int4-mixed at d=4096 is the paper's 3x-smaller 8KB bundle."""
+    from repro.quant.quantize import bundle_nbytes
+    assert bundle_nbytes(4096, "fp16") == 3 * 4096 * 2
+    assert bundle_nbytes(4096, "fp16", rows=2) == 2 * 4096 * 2
+    assert bundle_nbytes(4096, "int4-mixed") == 8192
+    assert bundle_nbytes(4096, "fp16") == 3 * bundle_nbytes(4096, "int4-mixed")
+    i8 = bundle_nbytes(4096, "int8")
+    assert i8 % 4096 == 0 and 3 * (4096 + 2) <= i8 < 3 * 4096 * 2
+    with pytest.raises(ValueError, match="storage dtype"):
+        bundle_nbytes(4096, "int2")
+
+
+# Property tests live in tests/test_quant_properties.py behind a
+# module-level `pytest.importorskip("hypothesis")` so this module's
+# deterministic tests always run.

@@ -1,0 +1,83 @@
+"""Property tests for the quantization schemes (paper §7.6) and the
+bundle byte accounting (§4.4).
+
+Hypothesis is an optional dev dependency: the module-level
+importorskip keeps the whole file out of environments without it —
+the deterministic regression tests stay in tests/test_quant.py.
+"""
+import pytest
+
+pytest.importorskip("hypothesis")
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.quant.quantize import (  # noqa: E402
+    bundle_nbytes, dequantize_groupwise_int4, dequantize_kv,
+    dequantize_per_channel_int4, quant_error, quantize_groupwise_int4,
+    quantize_kv, quantize_per_channel_int4)
+
+
+def _weights(draw, rows, cols, scale):
+    data = draw(st.lists(
+        st.floats(-1.0, 1.0, allow_nan=False, width=32),
+        min_size=rows * cols, max_size=rows * cols))
+    return jnp.asarray(np.array(data, np.float32).reshape(rows, cols)) * scale
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.data(), st.sampled_from([32, 64]),
+       st.floats(0.01, 10.0, allow_nan=False))
+def test_groupwise_roundtrip_error_bounded(data, group, scale):
+    """|deq - w| <= scale/2 + eps elementwise, any magnitude regime."""
+    w = _weights(data.draw, 8, 2 * group, scale)
+    deq = dequantize_groupwise_int4(quantize_groupwise_int4(w, group))
+    wg = np.asarray(w).reshape(8, (2 * group) // group, group)
+    s = np.abs(wg).max(-1) / 7.0
+    err = np.abs(np.asarray(deq) - np.asarray(w)).reshape(wg.shape)
+    assert (err <= s[..., None] * 0.5 + 1e-6).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.data(), st.floats(0.01, 10.0, allow_nan=False))
+def test_per_channel_roundtrip_error_bounded(data, scale):
+    w = _weights(data.draw, 8, 64, scale)
+    deq = dequantize_per_channel_int4(quantize_per_channel_int4(w))
+    s = np.abs(np.asarray(w)).max(-1) / 7.0
+    err = np.abs(np.asarray(deq) - np.asarray(w))
+    assert (err <= s[:, None] * 0.5 + 1e-6).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.data(), st.sampled_from([0.01, 0.05]))
+def test_mixed_roundtrip_never_worse_than_per_channel(data, frac):
+    """The hybrid scheme's whole point (Table 7): removing outliers
+    before scaling can only shrink per-channel scales."""
+    w = _weights(data.draw, 8, 64, 1.0)
+    e_mixed = quant_error(w, "mixed", outlier_frac=frac)
+    e_chan = quant_error(w, "per_channel")
+    assert e_mixed <= e_chan + 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.data(), st.floats(0.01, 10.0, allow_nan=False))
+def test_kv_roundtrip_error_bounded(data, scale):
+    kv = _weights(data.draw, 6, 32, scale).reshape(3, 2, 1, 32)
+    deq = dequantize_kv(quantize_kv(kv))
+    s = np.abs(np.asarray(kv)).max(-1) / 127.0
+    err = np.abs(np.asarray(deq) - np.asarray(kv))
+    assert (err <= s[..., None] * 0.5 + 1e-6).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 64), st.integers(0, 2))
+def test_bundle_nbytes_monotone_and_aligned(d32, dt_idx):
+    """Bundle bytes are monotone in d_model and respect alignment for
+    every storage dtype."""
+    dt = ("fp16", "int8", "int4-mixed")[dt_idx]
+    d = d32 * 32
+    a, b = bundle_nbytes(d, dt), bundle_nbytes(d + 32, dt)
+    assert a <= b
+    if dt != "fp16":
+        assert a % 4096 == 0
