@@ -9,20 +9,33 @@ repo's other gates, the allowlist only moves forward: a stale entry —
 one that no longer matches any finding — fails the gate until pruned
 with --update.
 
-Rules (see DESIGN.md §12): collective-axis / collective-budget /
-collective-fp32, dma-pairing / semaphore-scope / vmem-budget,
-wall-clock / py-random / tracer-branch / jit-static-args,
-protocol-method / family-fields, registry-drift / bench-gate-drift.
+Two tiers (--tier {ast,semantic,all}, default ast):
 
-  python scripts/repro_analyze.py                   # gate (CI)
-  python scripts/repro_analyze.py src/repro/kernels # subset
+* ast — install-free source scan. Rules (see DESIGN.md §12):
+  collective-axis / collective-budget / collective-fp32, dma-pairing /
+  semaphore-scope / vmem-budget, wall-clock / py-random /
+  tracer-branch / jit-static-args, protocol-method / family-fields,
+  registry-drift / bench-gate-drift / trace-registry-drift.
+* semantic — needs jax installed: traces every registered entry point
+  (analysis/trace_registry.py) to a jaxpr and verifies collective
+  counts/dtypes, f64, callbacks and const capture
+  (analysis/jaxpr_rules.py), then shadow-executes the fused cold-FFN
+  kernel sweep through the DMA race sanitizer
+  (analysis/dma_sanitizer.py). See DESIGN.md §14.
+
+  python scripts/repro_analyze.py                   # ast gate (CI)
+  python scripts/repro_analyze.py --tier semantic   # jaxpr + DMA gate
+  python scripts/repro_analyze.py src/repro/kernels # ast subset
   python scripts/repro_analyze.py --update          # re-ratchet
   python scripts/repro_analyze.py --self-test       # prove rules fire
 
---self-test analyzes the seeded-violation fixtures under
-src/repro/analysis/selftest/: every rule must fire where seeded, the
-clean fixtures must stay clean, and inline suppression must hold — a
-checker whose AST match rots fails here, not silently in the gate.
+--self-test honors --tier: the ast tier analyzes the seeded-violation
+fixtures under src/repro/analysis/selftest/; the semantic tier traces
+the seeded fixture entries and mutant kernels in
+src/repro/analysis/semantic_selftest.py (dropped DMA wait, premature
+slot reuse, double-psum shard_map body, ...). Every rule must fire
+where seeded and the clean fixtures must stay clean — a rule whose
+match rots fails here, not silently in the gate.
 
 Exit codes: 0 clean, 1 findings / stale entries / self-test failure,
 2 internal error (unparseable allowlist, bad arguments).
@@ -46,14 +59,33 @@ DEFAULT_ALLOWLIST = os.path.join(REPO, "tests", "analysis_allowlist.json")
 _TAG = "[repro_analyze]"
 
 
-def run_self_test() -> int:
-    from repro.analysis.selftest import run_self_test as run
-    ok, lines = run()
+def _prepare_semantic_env():
+    """The semantic tier's shard_map grid needs >= 2 host devices;
+    force 8 before anything imports jax (a no-op once jax is live,
+    hence setdefault *here*, not in the library)."""
+    os.environ.setdefault(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+
+def run_self_test(tier: str) -> int:
+    ok, lines, n_rules = True, [], 0
+    if tier in ("ast", "all"):
+        from repro.analysis.selftest import run_self_test as run_ast
+        ast_ok, ast_lines = run_ast()
+        ok, n_rules = ok and ast_ok, n_rules + len(all_rules())
+        lines += ast_lines
+    if tier in ("semantic", "all"):
+        _prepare_semantic_env()
+        from repro.analysis.semantic import run_self_test as run_sem
+        from repro.analysis.semantic import semantic_rules
+        sem_ok, sem_lines = run_sem()
+        ok, n_rules = ok and sem_ok, n_rules + len(semantic_rules())
+        lines += sem_lines
     for line in lines:
         print(f"{_TAG} SELF-TEST {line}")
     print(f"{_TAG} SELF-TEST "
           f"{'OK: every rule fires' if ok else 'FAILED'} "
-          f"({len(all_rules())} rules)")
+          f"({n_rules} rules, tier {tier})")
     return 0 if ok else 1
 
 
@@ -70,6 +102,14 @@ def main() -> int:
                          "set (prunes stale entries, ratchets new ones)")
     ap.add_argument("--allow-stale", action="store_true",
                     help="stale allowlist entries warn instead of fail")
+    ap.add_argument("--tier", choices=("ast", "semantic", "all"),
+                    default="ast",
+                    help="ast: install-free source scan (default); "
+                         "semantic: jaxpr invariant verification + DMA "
+                         "race sanitizer (needs jax); all: both")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write the finding set as a JSON report "
+                         "(CI artifact)")
     ap.add_argument("--self-test", action="store_true",
                     help="run the seeded-violation fixtures instead of "
                          "scanning the tree")
@@ -81,11 +121,20 @@ def main() -> int:
     args = ap.parse_args()
 
     if args.self_test:
-        return run_self_test()
+        return run_self_test(args.tier)
 
-    config = AnalysisConfig(psum_budget=args.psum_budget,
-                            vmem_cap_bytes=args.vmem_cap_bytes)
-    findings = analyze_paths(REPO, args.paths or None, config)
+    findings = []
+    if args.tier in ("ast", "all"):
+        config = AnalysisConfig(psum_budget=args.psum_budget,
+                                vmem_cap_bytes=args.vmem_cap_bytes)
+        findings += analyze_paths(REPO, args.paths or None, config)
+    if args.tier in ("semantic", "all"):
+        if args.paths:
+            print(f"{_TAG} note: the semantic tier always runs the "
+                  f"full trace registry (path selection is ast-only)")
+        _prepare_semantic_env()
+        from repro.analysis.semantic import semantic_findings
+        findings += semantic_findings()
     try:
         allow = load_json(args.allowlist, default={})
     except ValueError as e:
@@ -93,6 +142,18 @@ def main() -> int:
               f"{e}", file=sys.stderr)
         return 2
     kept, allowed, stale = apply_allowlist(findings, allow)
+
+    if args.json:
+        dump_json(args.json, {
+            "tier": args.tier,
+            "findings": [{"rule": f.rule, "path": f.path,
+                          "line": f.line, "message": f.message}
+                         for f in findings],
+            "kept": [f.key for f in kept],
+            "allowlisted": [f.key for f in allowed],
+            "stale": sorted(stale),
+        })
+        print(f"{_TAG} report -> {args.json}")
 
     if args.update:
         fresh = {}

@@ -18,6 +18,15 @@ copy just silently covers less), so they are checked statically:
 * bench-gate-drift — every `"bench": <kind>` emitted under
                      benchmarks/ is a key of EXTRACTORS in
                      scripts/check_bench_trend.py.
+
+A third shadow copy arrived with the semantic tier: the trace registry
+(analysis/trace_registry.py) must cover every kernel entry point
+kernels/ops.py exports, or a new kernel ships without jaxpr-level
+verification:
+
+* trace-registry-drift — every name in kernels/ops.py `__all__`
+                     appears as a string literal in the trace
+                     registry (the KERNEL_ENTRY_POINTS anchor).
 """
 from __future__ import annotations
 
@@ -97,12 +106,14 @@ def _registered_families(tree):
 @register_checker
 class DriftChecker(RepoChecker):
     name = "drift"
-    rules = ("registry-drift", "bench-gate-drift")
+    rules = ("registry-drift", "bench-gate-drift",
+             "trace-registry-drift")
 
     def check_repo(self, files: dict, config: AnalysisConfig) -> list:
         findings = []
         findings.extend(self._check_registry(files, config))
         findings.extend(self._check_bench_gate(files, config))
+        findings.extend(self._check_trace_registry(files, config))
         return findings
 
     # ------------------------------------------- family registry ----
@@ -122,6 +133,31 @@ class DriftChecker(RepoChecker):
             f"silently skips it")
             for name, line in _registered_families(fam_src.tree)
             if name not in covered]
+
+    # -------------------------------------------- trace registry ----
+    def _check_trace_registry(self, files: dict,
+                              config: AnalysisConfig) -> list:
+        ops_src = files.get(config.kernels_ops_path)
+        reg_src = files.get(config.trace_registry_path)
+        if ops_src is None or reg_src is None:
+            return []
+        exported, line = [], 1
+        for n in ast.walk(ops_src.tree):
+            if isinstance(n, ast.Assign) \
+                    and any(isinstance(t, ast.Name) and t.id == "__all__"
+                            for t in n.targets) \
+                    and isinstance(n.value, (ast.List, ast.Tuple)):
+                line = n.lineno
+                exported = [s for s in map(_const_str, n.value.elts) if s]
+        registered = {n.value for n in ast.walk(reg_src.tree)
+                      if isinstance(n, ast.Constant)
+                      and isinstance(n.value, str)}
+        return [Finding(
+            "trace-registry-drift", config.kernels_ops_path, line,
+            f"kernel entry point {name!r} is exported but not "
+            f"registered in {config.trace_registry_path}: it ships "
+            f"without jaxpr-level semantic coverage")
+            for name in exported if name not in registered]
 
     # ------------------------------------------------ bench gate ----
     def _check_bench_gate(self, files: dict,

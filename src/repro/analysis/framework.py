@@ -101,6 +101,8 @@ class AnalysisConfig:
     conformance_path: str = "tests/test_family_conformance.py"
     bench_gate_path: str = "scripts/check_bench_trend.py"
     bench_emitter_prefix: str = "benchmarks/"
+    kernels_ops_path: str = "src/repro/kernels/ops.py"
+    trace_registry_path: str = "src/repro/analysis/trace_registry.py"
 
 
 class Checker:

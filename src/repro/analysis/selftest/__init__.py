@@ -36,10 +36,11 @@ EXPECTED = {
     "family-fields": "families_bad.py",
     "registry-drift": "families_bad.py",
     "bench-gate-drift": "bench_emit_bad.py",
+    "trace-registry-drift": "ops_bad.py",
 }
 
 CLEAN = ("good_all.py", "suppressed.py", "conformance.py",
-         "bench_gate.py")
+         "bench_gate.py", "trace_reg.py")
 
 # unparseable source must surface as a finding, not an exception
 _BROKEN = "def broken(:\n"
@@ -55,6 +56,8 @@ def fixture_config() -> AnalysisConfig:
         conformance_path="selftest/conformance.py",
         bench_gate_path="selftest/bench_gate.py",
         bench_emitter_prefix="selftest/bench_emit",
+        kernels_ops_path="selftest/ops_bad.py",
+        trace_registry_path="selftest/trace_reg.py",
     )
 
 

@@ -1,0 +1,12 @@
+"""Seeded trace-registry-drift: exports a kernel entry point the trace
+registry (trace_reg.py fixture) never names."""
+
+__all__ = ["dense_ffn", "unregistered_kernel"]
+
+
+def dense_ffn():
+    pass
+
+
+def unregistered_kernel():          # exported, no semantic coverage
+    pass

@@ -1,0 +1,4 @@
+"""Clean fixture: the trace-registry side of the trace-registry-drift
+pair — names dense_ffn but not ops_bad.py's unregistered_kernel."""
+
+KERNEL_ENTRY_POINTS = ("dense_ffn",)

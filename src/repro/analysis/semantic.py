@@ -1,0 +1,44 @@
+"""Semantic analysis tier front door (--tier semantic).
+
+Two sub-analyses, both operating on *staged computation* rather than
+source text (DESIGN.md §14):
+
+* jaxpr invariant verification — trace every registered entry point
+  (trace_registry) to a ClosedJaxpr and assert its declared collective
+  budget, fp32 reduce dtypes, no f64 promotion, no host callbacks in
+  clock-driven code, no large captured constants (jaxpr_rules);
+* the pallas DMA race sanitizer — shadow-execute the fused cold-FFN
+  kernel sweep and flag async-copy state-machine violations
+  (dma_sanitizer).
+
+Findings flow through the same allowlist/ratchet machinery as the AST
+tier; keys look like `semantic/<entry>:<rule>` and
+`semantic/dma/<case>:<rule>`.
+
+Import cost: this module (and everything it pulls in) imports jax and
+traces real models — the CLI only imports it when a semantic tier is
+requested, keeping `--tier ast` install-free. Callers that want the
+full mesh grid must set XLA_FLAGS=--xla_force_host_platform_device_count=8
+before the first jax import (scripts/repro_analyze.py does).
+"""
+from __future__ import annotations
+
+
+def semantic_rules() -> tuple:
+    from repro.analysis import dma_sanitizer, jaxpr_rules
+    return tuple(jaxpr_rules.JAXPR_RULES) + tuple(dma_sanitizer.DMA_RULES)
+
+
+def semantic_findings() -> list:
+    """Run both semantic analyses over the live registry; sorted
+    Finding list (same contract as framework.analyze_files)."""
+    from repro.analysis import dma_sanitizer, jaxpr_rules, trace_registry
+    findings = list(jaxpr_rules.run_entries(trace_registry.entries()))
+    findings.extend(dma_sanitizer.sweep_fused_cold_ffn())
+    return sorted(findings, key=lambda f: (f.path, f.rule, f.line))
+
+
+def run_self_test():
+    """(ok, lines): every semantic rule fires on its seeded fixture."""
+    from repro.analysis.semantic_selftest import run_semantic_self_test
+    return run_semantic_self_test()

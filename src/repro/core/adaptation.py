@@ -18,7 +18,13 @@ from repro.core.clusters import HybridPlan
 from repro.core.planner import ExecutionPlan
 
 
-def bucket_for(batch: int, buckets=(1, 2, 4, 8, 16, 32)) -> int:
+# the serving bucket ladder: one pre-jitted executable per bucket.
+# Shared by bucket_for, BucketedDecoder and the semantic analysis
+# trace registry's representative-bucket coverage.
+DEFAULT_BUCKETS = (1, 2, 4, 8, 16, 32)
+
+
+def bucket_for(batch: int, buckets=DEFAULT_BUCKETS) -> int:
     for b in buckets:
         if batch <= b:
             return b
@@ -51,7 +57,7 @@ class BucketedDecoder:
     """
     plan_source: ExecutionPlan
     make_step: Callable[[HybridPlan], Callable]
-    buckets: tuple = (1, 2, 4, 8, 16, 32)
+    buckets: tuple = DEFAULT_BUCKETS
     mesh: object = None
     backend: str = None
     _cache: Dict[tuple, tuple] = field(default_factory=dict)

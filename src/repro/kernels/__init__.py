@@ -1,3 +1,12 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+
+
+def default_interpret() -> bool:
+    """The one TPU-detection default every kernel wrapper resolves
+    `interpret=None` against: interpret mode everywhere but a real TPU
+    (this container is CPU-only). Lazy jax import keeps the package
+    importable before jax configuration is final."""
+    import jax
+    return jax.default_backend() != "tpu"

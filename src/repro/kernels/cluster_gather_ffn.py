@@ -40,6 +40,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.compat import pallas_tpu_compiler_params
+from repro.kernels import default_interpret
 from repro.models.modules import activation_fn
 
 # Renamed TPUCompilerParams -> CompilerParams across jax releases; the
@@ -77,11 +78,14 @@ def _kernel(idx_ref, x_ref, w_ref, o_ref, *, activation: str, gated: bool):
 @functools.partial(jax.jit, static_argnames=("activation", "cluster_size",
                                              "interpret"))
 def cluster_gather_ffn(x, w, cluster_idx, *, activation: str,
-                       cluster_size: int, interpret: bool = True):
+                       cluster_size: int,
+                       interpret: bool | None = None):
     """x (B, D); w (N, R, D) in HBM; cluster_idx (K,) int32 cluster ids.
 
     Returns (B, D) = sum over selected clusters of the bundled FFN.
     """
+    if interpret is None:
+        interpret = default_interpret()
     B, D = x.shape
     N, R, _ = w.shape
     K = cluster_idx.shape[0]
@@ -270,7 +274,7 @@ def _fused_kernel(*refs, activation: str, gated: bool, cats: bool,
     "activation", "cluster_size", "groups", "kc", "cats", "interpret"))
 def fused_cold_ffn(x, w, A, Bp, mask, *, activation: str, cluster_size: int,
                    groups: int, kc: int, cats: bool = False,
-                   interpret: bool = True, wsc=None, wout=None):
+                   interpret: bool | None = None, wsc=None, wout=None):
     """Fused cold path: score -> top-k -> gather -> FFN in one pallas_call.
 
     x (B, D); w (G*nc_g*cs, R, D) group-major cold bundles (HBM-resident
@@ -288,6 +292,8 @@ def fused_cold_ffn(x, w, A, Bp, mask, *, activation: str, cluster_size: int,
     Returns (y (B, D) fp32, idx (groups, kc) int32) — bitwise the same
     selection as the jnp path's jax.lax.top_k chain.
     """
+    if interpret is None:
+        interpret = default_interpret()
     B, D = x.shape
     Ntot, R, _ = w.shape
     assert Ntot % (groups * cluster_size) == 0

@@ -13,14 +13,17 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels import default_interpret
 from repro.kernels.cluster_gather_ffn import CompilerParams, _kernel
 
 
 @functools.partial(jax.jit, static_argnames=("activation", "block_n",
                                              "interpret"))
 def dense_ffn(x, w, *, activation: str, block_n: int = 512,
-              interpret: bool = True):
+              interpret: bool | None = None):
     """x (B, D); w (N, R, D). Returns (B, D) full dense bundled FFN."""
+    if interpret is None:
+        interpret = default_interpret()
     B, D = x.shape
     N, R, _ = w.shape
     block_n = min(block_n, N)

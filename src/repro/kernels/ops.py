@@ -1,14 +1,15 @@
 """Jitted public wrappers for the Pallas kernels.
 
-`interpret` defaults to "not on a TPU" (this container is CPU-only);
-on a real TPU the kernels compile as written: MXU-aligned blocks,
-VMEM-resident accumulators, scalar-prefetch / manual double-buffered
-DMA.
+Every wrapper's `interpret` is `None` = "resolve against
+kernels.default_interpret()": interpret mode everywhere but a real TPU
+(this container is CPU-only); on a real TPU the kernels compile as
+written: MXU-aligned blocks, VMEM-resident accumulators,
+scalar-prefetch / manual double-buffered DMA. Pass an explicit bool
+only to force one mode (tests, the semantic trace registry).
 """
 from __future__ import annotations
 
 
-import jax
 import jax.numpy as jnp
 
 from repro.kernels.cluster_gather_ffn import cluster_gather_ffn, \
@@ -16,12 +17,8 @@ from repro.kernels.cluster_gather_ffn import cluster_gather_ffn, \
 from repro.kernels.dense_ffn import dense_ffn
 
 
-def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
-
-
 def cluster_gather_ffn_grouped(x, wc, cidx, *, activation: str,
-                               interpret: bool = True):
+                               interpret: bool | None = None):
     """Grouped (sharded-neuron-dim) form used by core.sparse_ffn.
 
     x (B, D); wc (G, nc_g, cs, R, D) cold clusters per group;
@@ -40,7 +37,8 @@ def cluster_gather_ffn_grouped(x, wc, cidx, *, activation: str,
 
 
 def fused_cold_ffn(x, wc, A, Bp, *, activation: str, mode: str = "relu",
-                   kc: int, active_mask=None, interpret: bool = None,
+                   kc: int, active_mask=None,
+                   interpret: bool | None = None,
                    wq=None, wsc=None, wout=None):
     """Fused cold path (kernels/cluster_gather_ffn.fused_cold_ffn):
     predictor score -> batch-union top-k -> double-buffered cluster
@@ -60,8 +58,6 @@ def fused_cold_ffn(x, wc, A, Bp, *, activation: str, mode: str = "relu",
     same selection the jnp top_k chain makes, so the two backends
     decode token-identically.
     """
-    if interpret is None:
-        interpret = _default_interpret()
     G, nc_g, cs, R, D = wc.shape
     B = x.shape[0]
     if active_mask is None:

@@ -60,6 +60,11 @@ class ServingFamily:
                                    #  "fp16") -> ExecutionPlan
     prepare_params: Callable       # (params, plan) -> params
     default_arch: str = ""         # the family's representative config
+    # cold-path backends build_plan accepts ('jnp' always; 'pallas'
+    # only where the cold path is a cluster gather — moe's is expert
+    # dispatch). The semantic trace registry enumerates decode
+    # coverage from this instead of probing build_plan for the raise.
+    backends: tuple = ("jnp",)
 
 
 _REGISTRY: dict = {}
@@ -117,6 +122,7 @@ def _dense_family(name: str, arch: str) -> ServingFamily:
         build_plan=_dense_build_plan,
         prepare_params=_dense_prepare,
         default_arch=arch,
+        backends=("jnp", "pallas"),
     )
 
 

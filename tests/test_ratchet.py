@@ -1,0 +1,110 @@
+"""Unit tests for scripts/_ratchet.py — the baseline JSON I/O and
+new/stale split shared by the repo's three ratchet gates — plus the
+allowlist --update flow end to end through the repro-analyze CLI."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+CLI = os.path.join(REPO, "scripts", "repro_analyze.py")
+
+sys.path.insert(0, os.path.join(REPO, "scripts"))
+from _ratchet import diff_ratchet, dump_json, load_json  # noqa: E402
+
+
+def run_cli(*args):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    return subprocess.run([sys.executable, CLI, *args], cwd=REPO,
+                          env=env, capture_output=True, text=True)
+
+
+# ------------------------------------------------------- load_json ----
+
+def test_load_json_missing_returns_default(tmp_path):
+    assert load_json(str(tmp_path / "absent.json"), default={}) == {}
+    assert load_json(str(tmp_path / "absent.json"), default=None) is None
+
+
+def test_load_json_missing_without_default_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        load_json(str(tmp_path / "absent.json"))
+
+
+def test_load_json_reads_what_dump_wrote(tmp_path):
+    p = str(tmp_path / "b.json")
+    dump_json(p, {"k": [1, 2], "a": "x"})
+    assert load_json(p) == {"k": [1, 2], "a": "x"}
+
+
+# ------------------------------------------------------- dump_json ----
+
+def test_dump_json_canonical_format(tmp_path):
+    p = str(tmp_path / "b.json")
+    dump_json(p, {"z": 1, "a": 2})
+    text = open(p).read()
+    assert text.endswith("\n")                     # trailing newline
+    assert text == json.dumps({"z": 1, "a": 2}, indent=1,
+                              sort_keys=True) + "\n"
+    assert text.index('"a"') < text.index('"z"')   # sorted keys
+
+
+def test_dump_json_rewrite_is_byte_stable(tmp_path):
+    p = str(tmp_path / "b.json")
+    dump_json(p, {"b": 1, "a": {"y": 2, "x": 3}})
+    first = open(p, "rb").read()
+    dump_json(p, load_json(p))                     # round-trip rewrite
+    assert open(p, "rb").read() == first
+
+
+# ---------------------------------------------------- diff_ratchet ----
+
+def test_diff_ratchet_new_and_stale():
+    new, stale = diff_ratchet({"a", "b", "c"}, {"b", "d"})
+    assert new == ["a", "c"]
+    assert stale == ["d"]
+
+
+def test_diff_ratchet_empty_baseline():
+    new, stale = diff_ratchet(["x"], [])
+    assert (new, stale) == (["x"], [])
+    assert diff_ratchet([], []) == ([], [])
+
+
+def test_diff_ratchet_identical_sets_are_quiet():
+    assert diff_ratchet({"a", "b"}, ["a", "b"]) == ([], [])
+
+
+# -------------------------------------- allowlist flow via the CLI ----
+
+def test_empty_allowlist_gate_is_clean(tmp_path):
+    """A missing allowlist means an empty baseline — the committed
+    tree must gate clean against it (the repo carries no debt)."""
+    r = run_cli("--allowlist", str(tmp_path / "allow.json"))
+    assert r.returncode == 0, r.stdout + r.stderr
+
+
+def test_stale_entry_fails_then_update_prunes(tmp_path):
+    allow = tmp_path / "allow.json"
+    dump_json(str(allow), {"src/repro/gone.py:wall-clock": "obsolete"})
+    r = run_cli("--allowlist", str(allow))
+    assert r.returncode == 1
+    assert "stale" in r.stdout
+
+    r = run_cli("--allowlist", str(allow), "--update")
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert load_json(str(allow)) == {}             # pruned to empty
+
+    assert run_cli("--allowlist", str(allow)).returncode == 0
+
+
+def test_update_is_idempotent(tmp_path):
+    allow = tmp_path / "allow.json"
+    run_cli("--allowlist", str(allow), "--update")
+    first = open(allow, "rb").read()
+    run_cli("--allowlist", str(allow), "--update")
+    assert open(allow, "rb").read() == first
